@@ -1,0 +1,163 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Reads ``artifacts/dryrun/<arch>__<shape>__<mesh>.json`` produced by
+``repro.launch.dryrun`` and derives, per (arch x shape x mesh):
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s        [s]
+  memory term     = HLO_bytes_per_device / HBM_bw             [s]
+  collective term = collective_link_bytes_per_device / ICI_bw [s]
+
+(the post-SPMD HLO is the per-device program, so cost_analysis numbers
+are already per-chip -- dividing totals by chip count is equivalent).
+
+Also reports MODEL_FLOPS / HLO_FLOPS ("useful compute" fraction; catches
+remat/redundancy waste) and the dominant bottleneck.  Hardware constants:
+TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def model_flops(rec: dict) -> float:
+    """6*N_active*D for train (fwd+bwd), 2*N_active*D for inference."""
+    n = rec["active_param_count"]
+    d = rec["tokens"]
+    mult = 6.0 if rec.get("kind") == "train" else 2.0
+    return mult * n * d
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if "skipped" in rec:
+        return None
+    # prefer the trip-count-aware HLO accounting (launch.hlo_cost); XLA's
+    # cost_analysis counts while bodies once and under-reports scanned
+    # programs by the trip count.
+    hc = rec.get("hlo_cost")
+    if hc:
+        flops_dev = hc["flops"]
+        bytes_dev = hc["bytes"]
+        coll_dev = hc["collectives"]["total_link_bytes"]
+    else:
+        ca = rec.get("cost_analysis", {})
+        flops_dev = ca.get("flops", 0.0)
+        bytes_dev = ca.get("bytes accessed", 0.0)
+        coll_dev = rec.get("collectives", {}).get("total_link_bytes", 0)
+    ndev = rec.get("num_devices", 1)
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+    mf = model_flops(rec)
+    hlo_total = flops_dev * ndev
+    useful = mf / hlo_total if hlo_total else 0.0
+    # roofline fraction: useful-compute time over the bound term
+    t_useful = (mf / ndev) / PEAK_FLOPS
+    frac = t_useful / t_bound if t_bound else 0.0
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec.get("kind"),
+        "compute_s": t_compute, "memory_s": t_memory,
+        "collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "useful_fraction": useful, "roofline_fraction": frac,
+        "collectives": {k: v for k, v in
+                        (hc["collectives"] if hc
+                         else rec["collectives"]).items()
+                        if isinstance(v, dict)},
+    }
+    # fused-attention (Pallas kernel) variant: same HLO, the
+    # 'fused_attention' scope's score-tile traffic stays in VMEM.
+    fa = rec.get("hlo_cost_fused_attn")
+    if fa:
+        t_mem_f = fa["bytes"] / HBM_BW
+        terms_f = {"compute": t_compute, "memory": t_mem_f,
+                   "collective": t_coll}
+        bound_f = max(terms_f.values())
+        out["memory_fused_s"] = t_mem_f
+        out["dominant_fused"] = max(terms_f, key=terms_f.get)
+        out["roofline_fraction_fused"] = \
+            t_useful / bound_f if bound_f else 0.0
+    return out
+
+
+def load_all(art_dir: str = ART, mesh: str | None = "16x16",
+             tag: str | None = None) -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        base = os.path.basename(p)
+        parts = base[:-5].split("__")
+        if tag is None and len(parts) > 3:
+            continue           # perf-iteration artifacts have a 4th tag
+        if tag is not None and (len(parts) < 4 or parts[3] != tag):
+            continue
+        with open(p) as f:
+            rec = json.load(f)
+        a = analyze_record(rec)
+        if a is None:
+            continue
+        if mesh is None or a["mesh"] == mesh:
+            out.append(a)
+    return out
+
+
+def fmt_time(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:7.2f}s "
+    if s >= 1e-3:
+        return f"{s * 1e3:7.2f}ms"
+    return f"{s * 1e6:7.2f}us"
+
+
+def table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} {'compute':9s} "
+           f"{'memory':9s} {'collect':9s} {'bound':10s} "
+           f"{'useful':7s} {'roofline':8s} {'mem(fa)':9s} {'roof(fa)':8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        fa = ""
+        if "memory_fused_s" in r:
+            fa = (f" {fmt_time(r['memory_fused_s'])} "
+                  f"{r['roofline_fraction_fused']:7.1%}")
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{fmt_time(r['compute_s'])} {fmt_time(r['memory_s'])} "
+            f"{fmt_time(r['collective_s'])} {r['dominant']:10s} "
+            f"{r['useful_fraction']:6.1%} {r['roofline_fraction']:7.1%}"
+            + fa)
+    return "\n".join(lines)
+
+
+def main():
+    rows = load_all(mesh=None)
+    if not rows:
+        print("no dry-run artifacts found -- run repro.launch.dryrun first")
+        return
+    print(table(rows))
+    print()
+    for mesh in ("16x16", "2x16x16"):
+        sub = [r for r in rows if r["mesh"] == mesh]
+        if not sub:
+            continue
+        by_dom = {}
+        for r in sub:
+            by_dom.setdefault(r["dominant"], []).append(r)
+        print(f"[{mesh}] {len(sub)} cells; bottleneck breakdown: "
+              + ", ".join(f"{k}={len(v)}" for k, v in by_dom.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+  bench_photonic     paper Fig. 2c/d  machine computation error
+  bench_throughput   paper §Results   26.7 G conv/s vs digital PRNG path
+  bench_bloodcell    paper Fig. 4     ID/OOD classification + rejection
+  bench_disentangle  paper Fig. 5     MNIST/Ambiguous/Fashion clusters
+  bench_kernels      beyond-paper     fused-sampling kernel micro-bench
+  roofline           deliverable (g)  three-term roofline per dry-run cell
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI-friendly)")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, help="dump results to file")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_bloodcell, bench_disentangle,
+                            bench_kernels, bench_photonic,
+                            bench_throughput, roofline)
+
+    benches = {
+        "photonic": lambda: bench_photonic.main(args.quick),
+        "throughput": lambda: bench_throughput.main(args.quick),
+        "kernels": lambda: bench_kernels.main(args.quick),
+        "bloodcell": lambda: bench_bloodcell.main(args.quick),
+        "disentangle": lambda: bench_disentangle.main(args.quick),
+    }
+    results = {}
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        print(f"\n=== {name} " + "=" * (60 - len(name)))
+        t0 = time.time()
+        results[name] = fn()
+        print(f"[{name}: {time.time() - t0:.1f}s]")
+
+    if not args.only or args.only == "roofline":
+        print("\n=== roofline " + "=" * 52)
+        roofline.main()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+        print(f"\nresults -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

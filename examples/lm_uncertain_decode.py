@@ -1,0 +1,79 @@
+"""Uncertainty-aware LM decoding (beyond-paper: the LM analog of Fig. 4).
+
+Applies the paper's technique — a single Bayesian (variational) layer +
+N=10 MC samples + H/SE/MI readout — to an assigned LM architecture's
+output head.  Every generated token carries an epistemic flag (high MI:
+the model's weights disagree -> knowledge gap) or aleatoric flag (high
+SE, low MI: genuinely ambiguous continuation).
+
+  PYTHONPATH=src python examples/lm_uncertain_decode.py --arch qwen2_1_5b
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config, reduced
+from repro.data.synthetic import TokenStreamState, token_batch
+from repro.launch import steps as S
+from repro.models import registry as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_1_5b", choices=ARCH_IDS)
+    ap.add_argument("--gen-len", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    print(f"arch {args.arch} (reduced: {cfg.num_layers}L "
+          f"d={cfg.d_model}), Bayesian head: {cfg.bayesian_head}, "
+          f"N={cfg.mc_samples} MC samples/token")
+
+    key = jax.random.key(0)
+    params = M.init_params(key, cfg)
+    stream = TokenStreamState(seed=3, host=0, num_hosts=1)
+    toks, _ = token_batch(stream, args.batch, 16, cfg.vocab_size)
+    tokens = jnp.asarray(toks)
+    max_len = 16 + args.gen_len
+
+    modality = None
+    if cfg.family == "encdec":
+        from repro.models.encdec import ENC_LEN
+        modality = jnp.zeros((args.batch, ENC_LEN, cfg.d_model))
+    if cfg.family == "vlm":
+        modality = jnp.zeros((args.batch, cfg.num_prefix_embeds,
+                              cfg.d_model))
+
+    _, cache = M.prefill(params, cfg, tokens, max_len, modality)
+    decode = jax.jit(S.build_decode_step(cfg), donate_argnums=(2,))
+
+    print(f"\n tok | token id |    H    |   SE    |   MI    | flag")
+    print("-" * 58)
+    tok = tokens[:, -1]
+    mis = []
+    for i in range(args.gen_len):
+        out, cache = decode(params, tok, cache, jnp.asarray(i, jnp.int32))
+        tok = out["next_token"]
+        mi = float(out["MI"][0])
+        se = float(out["SE"][0])
+        h = float(out["H"][0])
+        mis.append(mi)
+        flag = ""
+        if mi > 0.02:
+            flag = "EPISTEMIC (knowledge gap)"
+        elif se > 2.0:
+            flag = "aleatoric (ambiguous)"
+        print(f" {i:3d} | {int(tok[0]):8d} | {h:7.4f} | {se:7.4f} | "
+              f"{mi:7.4f} | {flag}")
+
+    print(f"\nmean MI over generation: {np.mean(mis):.4f} "
+          f"(untrained model -> expect wide uncertainty; after SVI "
+          f"training MI concentrates on genuinely novel contexts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Quickstart: train the paper's Bayesian CNN end-to-end and use it.
+
+This is the end-to-end driver deliverable: ~300 SVI steps of the paper's
+hybrid BNN (DenseNet skips + MobileNet DWS convs, ONE probabilistic
+block) on synthetic blood-cell images, then uncertainty-aware prediction
+on the photonic-machine digital twin with OOD rejection.
+
+  PYTHONPATH=src python examples/quickstart.py [--steps 300]
+"""
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "benchmarks") if "benchmarks" not in sys.path else None
+
+from repro.core import svi
+from repro.core.uncertainty import (auroc, best_rejection_threshold,
+                                    predictive_moments, rejection_accuracy)
+from repro.data import synthetic as D
+from repro.models import bnn_cnn as B
+from repro.optim import adamw
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--width", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=64)
+    args = ap.parse_args()
+
+    print("=== 1. data: synthetic blood-cell microscope images")
+    rng = np.random.default_rng(0)
+    xtr, ytr = D.blood_cells(rng, 3000)
+    print(f"    train: {xtr.shape}, 7 classes (erythroblast held OUT)")
+
+    print(f"=== 2. SVI training ({args.steps} steps, surrogate mode)")
+    cfg = B.BNNConfig(num_classes=7, in_channels=3, width=args.width)
+    key = jax.random.key(0)
+    params = B.init_params(key, cfg)
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=20,
+                                total_steps=args.steps, weight_decay=1e-4)
+    state = adamw.init_state(params, opt_cfg)
+    svi_cfg = svi.SVIConfig(num_train_examples=xtr.shape[0],
+                            kl_warmup_steps=args.steps // 3)
+    nll = B.nll_fn(cfg)
+
+    @jax.jit
+    def step(params, state, batch, key, i):
+        (loss, aux), g = jax.value_and_grad(
+            lambda p: svi.elbo_loss(nll, p, batch, key, i, svi_cfg),
+            has_aux=True)(params)
+        params, state, _ = adamw.apply_updates(params, g, state, opt_cfg)
+        return params, state, loss, aux
+
+    t0 = time.time()
+    for i in range(args.steps):
+        key, k1, k2 = jax.random.split(key, 3)
+        idx = jax.random.randint(k1, (args.batch,), 0, xtr.shape[0])
+        b = {"images": jnp.asarray(xtr[idx]),
+             "labels": jnp.asarray(ytr[idx])}
+        params, state, loss, aux = step(params, state, b, k2,
+                                        jnp.asarray(i))
+        if i % max(args.steps // 6, 1) == 0:
+            print(f"    step {i:4d}  elbo-loss {float(loss):7.4f}  "
+                  f"acc {float(aux['accuracy']):.3f}")
+    print(f"    trained in {time.time() - t0:.1f}s")
+
+    print("=== 3. predict on the photonic machine twin (N=10 MC samples)")
+    xte, yte = D.blood_cells(rng, 600)
+    xood, _ = D.blood_cells_ood(rng, 300)
+    p_id = B.mc_predict(params, cfg, jnp.asarray(xte),
+                        jax.random.key(1), "machine")
+    p_ood = B.mc_predict(params, cfg, jnp.asarray(xood),
+                         jax.random.key(2), "machine")
+    m_id = predictive_moments(p_id)
+    m_ood = predictive_moments(p_ood)
+
+    print("=== 4. uncertainty reasoning")
+    t, _ = best_rejection_threshold(m_id["MI"], m_id["p_mean"],
+                                    jnp.asarray(yte))
+    r = rejection_accuracy(m_id["p_mean"], m_id["MI"], jnp.asarray(yte), t)
+    a = float(auroc(m_ood["MI"], m_id["MI"]))
+    print(f"    ID accuracy:           {float(r['accuracy_all']):.4f}")
+    print(f"    ID acc w/ rejection:   {float(r['accuracy_accepted']):.4f}"
+          f"  (MI threshold {t:.4f}, "
+          f"rejects {float(r['rejection_rate']):.1%})")
+    print(f"    erythroblast OOD AUROC: {a:.4f}")
+    print("    (paper: 90.26% -> 94.62%, AUROC 91.16% on real BloodMNIST)")
+
+
+if __name__ == "__main__":
+    main()

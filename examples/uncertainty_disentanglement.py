@@ -1,0 +1,84 @@
+"""Uncertainty disentanglement (paper Fig. 5, the DDU benchmark).
+
+Train on clean glyphs ONLY (the paper's strict protocol: no uncertainty
+samples in training), then show the three (SE, MI) clusters: ID /
+ambiguous (aleatoric) / fashion-OOD (epistemic), with an ASCII scatter.
+
+  PYTHONPATH=src python examples/uncertainty_disentanglement.py
+"""
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_bloodcell import train_bnn
+from repro.core.uncertainty import auroc, predictive_moments
+from repro.data import synthetic as D
+from repro.models import bnn_cnn as B
+
+
+def ascii_scatter(points, width=64, height=20):
+    """points: list of (se, mi, char)."""
+    ses = np.array([p[0] for p in points])
+    mis = np.array([p[1] for p in points])
+    se_max = max(ses.max(), 1e-6)
+    mi_max = max(mis.max(), 1e-6)
+    grid = [[" "] * width for _ in range(height)]
+    for se, mi, ch in points:
+        x = min(int(se / se_max * (width - 1)), width - 1)
+        y = min(int(mi / mi_max * (height - 1)), height - 1)
+        grid[height - 1 - y][x] = ch
+    print(f"  MI ^ (max {mi_max:.3f})")
+    for row in grid:
+        print("     |" + "".join(row))
+    print("     +" + "-" * width + f"> SE (max {se_max:.3f})")
+    print("     i=ID  a=ambiguous(aleatoric)  o=fashion-OOD(epistemic)")
+
+
+def main():
+    rng = np.random.default_rng(1)
+    cfg = B.BNNConfig(num_classes=10, in_channels=1, width=16)
+    print("training on clean glyphs only (paper protocol)...")
+    xtr, ytr = D.glyphs(rng, 3000)
+    params = train_bnn(cfg, xtr, ytr, steps=300, seed=1)
+
+    key = jax.random.key(7)
+    n = 300
+
+    def predict(x):
+        return predictive_moments(
+            B.mc_predict(params, cfg, jnp.asarray(x), key, "machine"))
+
+    m_id = predict(D.glyphs(rng, n)[0])
+    m_amb = predict(D.ambiguous_glyphs(rng, n)[0])
+    m_ood = predict(D.fashion_ood(rng, n)[0])
+
+    print("\nmean (SE, MI) per regime:")
+    for name, m in (("ID", m_id), ("ambiguous", m_amb),
+                    ("fashion OOD", m_ood)):
+        print(f"  {name:12s} SE {float(m['SE'].mean()):.4f}  "
+              f"MI {float(m['MI'].mean()):.4f}")
+
+    a_alea = float(auroc(m_amb["SE"], m_id["SE"]))
+    a_epi = float(auroc(m_ood["MI"], m_id["MI"]))
+    print(f"\naleatoric detector AUROC (SE, ambiguous vs ID): "
+          f"{a_alea:.4f}  (paper 0.8803)")
+    print(f"epistemic detector AUROC (MI, OOD vs ID):       "
+          f"{a_epi:.4f}  (paper 0.8442)\n")
+
+    pts = []
+    sub = slice(0, 80)
+    for ch, m in (("i", m_id), ("a", m_amb), ("o", m_ood)):
+        for se, mi in zip(np.asarray(m["SE"])[sub],
+                          np.asarray(m["MI"])[sub]):
+            pts.append((float(se), float(mi), ch))
+    ascii_scatter(pts)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""The paper's own architecture (Fig. 3): hybrid Bayesian CNN.
+
+Not an LM ArchConfig — this is the BNNConfig consumed by
+``models/bnn_cnn.py`` (DenseNet concat skips + MobileNetV1 DWS convs,
+six conv layers + linear head, ONE probabilistic depthwise block mapped
+onto the photonic Bayesian machine).  Selectable through
+``repro.configs.registry.get_bnn_config()`` and used by the examples /
+benchmarks; the LM registry (``--arch``) covers the 10 assigned
+architectures.
+
+Two presets matching the paper's experiments:
+  * ``BLOODCELL``  — 7 classes, RGB 28x28 (Fig. 4, BloodMNIST-like)
+  * ``MNIST_LIKE`` — 10 classes, grayscale 28x28 (Fig. 5, DDU benchmark)
+"""
+
+from repro.models.bnn_cnn import BNNConfig
+
+BLOODCELL = BNNConfig(
+    num_classes=7, in_channels=3, width=16, image_size=28,
+    mc_samples=10,              # paper: N = 10 MC samples per prediction
+    prob_block=3,               # the probabilistic DWS block (Fig. 3)
+    init_sigma=0.08,
+)
+
+MNIST_LIKE = BNNConfig(
+    num_classes=10, in_channels=1, width=16, image_size=28,
+    mc_samples=10, prob_block=3, init_sigma=0.08,
+)
+
+CONFIG = BLOODCELL

@@ -1,0 +1,13 @@
+"""Core paper contribution: photonic Bayesian machine + SVI + uncertainty."""
+
+from repro.core import bayesian, entropy, photonic, svi, uncertainty  # noqa: F401
+from repro.core.bayesian import GaussianVariational, mc_forward  # noqa: F401
+from repro.core.entropy import (  # noqa: F401
+    ASEEntropy, EntropySource, EntropyStream, PRNGEntropy)
+from repro.core.photonic import (  # noqa: F401
+    ChannelProgram, MachineConfig, calibrate, computation_error, convolve,
+    program_for_target, quantize_ste)
+from repro.core.svi import SVIConfig, elbo_loss, kl_divergence  # noqa: F401
+from repro.core.uncertainty import (  # noqa: F401
+    auroc, predictive_moments, rejection_accuracy, roc_curve,
+    uncertainty_from_logits)

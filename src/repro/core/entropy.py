@@ -1,0 +1,214 @@
+"""Entropy sources for the photonic Bayesian machine.
+
+The paper's physical entropy source is amplified spontaneous emission (ASE)
+from an erbium-doped fiber: broadband chaotic light whose spectrum is sliced
+into frequency channels. The detected power of one channel of optical
+bandwidth ``B_opt`` measured with electrical bandwidth ``B_elec`` follows a
+Gamma distribution with
+
+    M = B_opt / B_elec          (degrees of freedom / "modes")
+    mean  = P                    (set by the channel's optical power)
+    std   = P / sqrt(M)          (set by the channel's *bandwidth*)
+
+which is exactly the paper's programming rule: optical power -> weight mean,
+channel bandwidth -> weight standard deviation (Fig. 1c, Fig. S2). For
+M >~ 10 the Gamma converges to a Gaussian, which is why the paper can model
+the physical weights with Gaussian variational posteriors (SVI).
+
+Negative weights cannot be carried by optical power directly; the machine
+realizes them differentially (balanced detection of a signal and a reference
+arm). We model that as an affine map ``w = g * (I - I_ref)`` applied to the
+non-negative photocurrent ``I``.
+
+This module gives three interchangeable sources behind one API:
+
+  * ``PRNGEntropy``      -- counter-based Gaussian, the digital baseline the
+                            paper says is the bottleneck (and our oracle).
+  * ``ASEEntropy``       -- Gamma(M) photocurrent statistics, the physical
+                            digital twin.  Per-channel M is derived from the
+                            programmed bandwidth, clipped to the hardware's
+                            25-150 GHz range.
+  * ``EntropyStream``    -- a pre-drawn host buffer replayed into kernels,
+                            mirroring how the physical machine's randomness
+                            is *external* to the digital datapath.  Pallas
+                            kernels take this as a plain input tensor.
+
+All sampling is shaped (num_samples, *weight_shape) and returns *standard*
+variates (zero mean, unit std) so that layers can apply the reparameterized
+``w = mu + sigma * eps`` regardless of the source.  For ``ASEEntropy`` the
+standardized Gamma keeps its skewness ``2/sqrt(M)`` -- tests assert both the
+standardization and the residual skew so the physics is not silently lost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --- hardware constants from the paper --------------------------------------
+CENTER_FREQ_THZ = 194.0          # channel grid center
+CHANNEL_SPACING_GHZ = 403.0      # spacing between the 9 channels
+NUM_CHANNELS = 9                 # one probabilistic weight per channel
+BW_MIN_GHZ = 25.0                # minimum programmable channel bandwidth
+BW_MAX_GHZ = 150.0               # maximum programmable channel bandwidth
+ELEC_BW_GHZ = 40.0               # detection bandwidth (80 GSPS Nyquist)
+GROUP_DELAY_PS_PER_THZ = -93.1   # chirped-grating dispersion
+DAC_BITS = 8
+ADC_BITS = 8
+SAMPLES_PER_SYMBOL = 3           # 80 GSPS DAC, 3 samples per vector entry
+CONV_LATENCY_PS = 37.5           # one 9-tap probabilistic convolution
+
+
+# Detection integrates SAMPLES_PER_SYMBOL ADC samples per symbol plus the
+# analog front-end's time-bandwidth product; both multiply the effective
+# Gamma mode count M (variance averaging).  2x from polarization.
+INTEGRATION_FACTOR = 2.0 * SAMPLES_PER_SYMBOL * 2.0
+
+
+def modes_from_bandwidth(bw_ghz: jax.Array) -> jax.Array:
+    """Gamma degrees of freedom M for a channel of optical bandwidth bw."""
+    bw = jnp.clip(bw_ghz, BW_MIN_GHZ, BW_MAX_GHZ)
+    return bw / ELEC_BW_GHZ * INTEGRATION_FACTOR
+
+
+def relstd_range() -> tuple[float, float]:
+    """Realizable sigma/|mu| band of one channel: [1/sqrt(M_max), 1/sqrt(M_min)].
+
+    The 25-150 GHz programmable bandwidth spans a sqrt(6) ~ 2.45x ratio in
+    std -- the paper's 'change in standard deviation by about 68 percent'
+    around the band center.
+    """
+    m_lo = BW_MIN_GHZ / ELEC_BW_GHZ * INTEGRATION_FACTOR
+    m_hi = BW_MAX_GHZ / ELEC_BW_GHZ * INTEGRATION_FACTOR
+    return 1.0 / m_hi ** 0.5, 1.0 / m_lo ** 0.5
+
+
+def bandwidth_for_relstd(rel_std: jax.Array) -> jax.Array:
+    """Invert std/mean = 1/sqrt(M): which bandwidth realizes a relative std.
+
+    Used by the calibration loop; the requested rel_std is clipped to the
+    hardware band (see ``relstd_range``).
+    """
+    m = 1.0 / jnp.maximum(rel_std, 1e-6) ** 2
+    bw = m * ELEC_BW_GHZ / INTEGRATION_FACTOR
+    return jnp.clip(bw, BW_MIN_GHZ, BW_MAX_GHZ)
+
+
+class EntropySource:
+    """Standard-variate sampler interface: eps has mean 0, std 1."""
+
+    def sample(self, key: jax.Array, shape: tuple[int, ...],
+               dtype=jnp.float32) -> jax.Array:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PRNGEntropy(EntropySource):
+    """Digital counter-based Gaussian baseline (threefry)."""
+
+    def sample(self, key, shape, dtype=jnp.float32):
+        return jax.random.normal(key, shape, dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ASEEntropy(EntropySource):
+    """Gamma(M) photocurrent statistics of a spectrally sliced ASE source.
+
+    ``modes`` is the per-draw M; a scalar applies one bandwidth to every
+    weight, an array broadcastable to ``shape`` programs per-channel
+    bandwidths.  The returned variate is standardized:
+        eps = (I/P - 1) * sqrt(M),  I ~ Gamma(k=M, theta=P/M)
+    so mean(eps)=0, std(eps)=1, skew(eps)=2/sqrt(M) > 0 (chaotic light is
+    super-Poissonian; the Gaussian SVI surrogate is exact only as M -> inf).
+    """
+
+    modes: float = 2.0 * 100.0 / ELEC_BW_GHZ  # default: 100 GHz channel
+
+    def sample(self, key, shape, dtype=jnp.float32):
+        m = jnp.asarray(self.modes, jnp.float32)
+        gam = jax.random.gamma(key, jnp.broadcast_to(m, shape)) / m
+        return ((gam - 1.0) * jnp.sqrt(m)).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class EntropyStream:
+    """Pre-drawn entropy replayed into compute kernels.
+
+    The physical machine's randomness arrives on the optical carrier --
+    the digital side never generates it.  We mirror that: a host-side ring
+    buffer of standard variates is sliced per step and fed to the Pallas
+    kernels as a tensor operand.  ``cursor`` advances functionally so the
+    stream state can live in the train-step carry (and in checkpoints).
+    """
+
+    buffer: jax.Array          # (capacity,) standard variates
+    cursor: jax.Array          # () int32
+
+    @staticmethod
+    def create(key: jax.Array, capacity: int,
+               source: Optional[EntropySource] = None) -> "EntropyStream":
+        src = source or ASEEntropy()
+        buf = src.sample(key, (capacity,))
+        return EntropyStream(buffer=buf, cursor=jnp.zeros((), jnp.int32))
+
+    def draw(self, shape: tuple[int, ...]) -> tuple[jax.Array, "EntropyStream"]:
+        n = int(np.prod(shape))
+        cap = self.buffer.shape[0]
+        if n > cap:
+            raise ValueError(f"draw of {n} exceeds stream capacity {cap}")
+        # wrap-around ring read (gather keeps it jit-safe for traced cursor)
+        idx = (self.cursor + jnp.arange(n, dtype=jnp.int32)) % cap
+        flat = self.buffer[idx]
+        nxt = EntropyStream(self.buffer, (self.cursor + n) % cap)
+        return flat.reshape(shape), nxt
+
+
+def tree_flatten_stream(s: EntropyStream):
+    return (s.buffer, s.cursor), None
+
+
+def tree_unflatten_stream(_, children):
+    return EntropyStream(*children)
+
+
+jax.tree_util.register_pytree_node(
+    EntropyStream, tree_flatten_stream, tree_unflatten_stream)
+
+
+# -- NIST-style sanity statistics (paper cites SP 800-22 for the source) -----
+
+def entropy_health(bits: np.ndarray) -> dict[str, float]:
+    """Light-weight health tests on a bitstream (monobit, runs, chi2 bytes).
+
+    Not the full SP 800-22 battery -- the subset that catches a dead or
+    correlated source, which is what a production machine monitors online.
+    """
+    bits = np.asarray(bits).astype(np.uint8) & 1
+    n = bits.size
+    ones = float(bits.sum())
+    monobit_z = abs(ones - n / 2) / np.sqrt(n / 4)
+    # runs test
+    pi = ones / n
+    runs = 1 + int(np.sum(bits[1:] != bits[:-1]))
+    runs_expected = 2 * n * pi * (1 - pi) + 1
+    runs_var = 2 * n * pi * (1 - pi) * (2 * pi * (1 - pi)) if n else 1.0
+    runs_z = abs(runs - runs_expected) / max(np.sqrt(max(runs_var, 1e-12)), 1e-12)
+    # byte chi^2
+    nbytes = n // 8
+    byts = np.packbits(bits[: nbytes * 8])
+    hist = np.bincount(byts, minlength=256)
+    expected = nbytes / 256.0
+    chi2 = float(np.sum((hist - expected) ** 2 / max(expected, 1e-12)))
+    return {"monobit_z": float(monobit_z), "runs_z": float(runs_z),
+            "byte_chi2": chi2, "n_bits": float(n)}
+
+
+def gaussian_to_bits(eps: np.ndarray) -> np.ndarray:
+    """Median-threshold bit extraction used for the health tests."""
+    med = np.median(eps)
+    return (np.asarray(eps) > med).astype(np.uint8)

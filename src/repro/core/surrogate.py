@@ -1,0 +1,77 @@
+"""Differentiable surrogate of the photonic Bayesian machine (paper §BNN).
+
+Training never touches the analog hardware: the paper trains against a
+Gaussian surrogate whose forward pass mimics the machine's limited accuracy
+via straight-through estimators, then swaps the surrogate for the machine
+at prediction time.  This module is that surrogate, plus the hardware-
+realizability constraints the machine imposes on the variational family:
+
+  * sigma is representable only inside the relative-std band set by the
+    25-150 GHz programmable channel bandwidth (``entropy.relstd_range``);
+    the surrogate clamps sigma into the realizable band *with an STE* so
+    SVI gradients keep shaping rho while the forward pass is honest.
+  * weights pass the 8-bit DAC grid (STE quantization);
+  * activations pass the 8-bit DAC (inputs) and ADC (outputs) grids.
+
+``SurrogateSpec.apply_weight`` is used by the Bayesian layers during
+training; at prediction `models.bnn_cnn` routes the probabilistic block
+through ``core.photonic.convolve`` (the digital twin) or the fused Pallas
+kernel instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import entropy as E
+from repro.core.bayesian import GaussianVariational
+from repro.core.photonic import MachineConfig, quantize_ste
+
+
+def ste_clip(x: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """clip with identity gradient (keeps SVI gradients alive at the rails)."""
+    return x + jax.lax.stop_gradient(jnp.clip(x, lo, hi) - x)
+
+
+@dataclasses.dataclass(frozen=True)
+class SurrogateSpec:
+    machine: MachineConfig = MachineConfig()
+    quantize_weights: bool = True
+    clamp_sigma: bool = True
+    quantize_activations: bool = True
+
+    def realizable_sigma(self, mu: jax.Array, sigma: jax.Array) -> jax.Array:
+        """Project sigma into the machine's per-channel band.
+
+        sigma in [r_lo * |mu|, r_hi * |mu|] with (r_lo, r_hi) from the
+        bandwidth range; |mu| floor keeps near-zero weights programmable.
+        """
+        r_lo, r_hi = E.relstd_range()
+        a = jnp.maximum(jnp.abs(mu), 2.0 / (2 ** self.machine.dac_bits))
+        return ste_clip(sigma, r_lo * a, r_hi * a)
+
+    def apply_weight(self, q: GaussianVariational, eps: jax.Array) -> jax.Array:
+        """Surrogate forward draw: reparam + hardware constraints w/ STE."""
+        sigma = q.sigma
+        if self.clamp_sigma:
+            sigma = self.realizable_sigma(q.mu, sigma)
+        w = q.mu + sigma * eps
+        if self.quantize_weights:
+            w = quantize_ste(w, self.machine.dac_bits,
+                             self.machine.weight_range)
+        return w
+
+    def apply_input(self, x: jax.Array) -> jax.Array:
+        if not self.quantize_activations:
+            return x
+        return quantize_ste(x, self.machine.dac_bits,
+                            self.machine.input_range)
+
+    def apply_output(self, y: jax.Array) -> jax.Array:
+        if not self.quantize_activations:
+            return y
+        return quantize_ste(y, self.machine.adc_bits,
+                            self.machine.output_range)

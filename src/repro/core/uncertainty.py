@@ -1,0 +1,137 @@
+"""Uncertainty metrics and decision rules (paper Eq. 1, Eq. 2, Figs. 4-5).
+
+Given N Monte-Carlo predictive distributions p_n(c) (softmax outputs of N
+sampled forward passes):
+
+  total      H  = entropy( mean_n p_n )                      (Eq. 1)
+  aleatoric  SE = mean_n entropy( p_n )                      (Eq. 2)
+  epistemic  MI = H - SE                                     (mutual info)
+
+Decision rules:
+  * OOD rejection: reject if MI > threshold  (epistemic flag, Fig. 4c/d)
+  * ambiguity flag: SE high, MI low          (aleatoric, Fig. 5e)
+
+Also: threshold-sweep ROC / AUROC and rejection-accuracy curves used for
+the paper's headline numbers, implemented in pure numpy-compatible jnp so
+benchmarks can jit them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+_EPSLOG = 1e-12
+
+
+def _entropy(p: jax.Array, axis: int = -1) -> jax.Array:
+    return -jnp.sum(p * jnp.log(p + _EPSLOG), axis=axis)
+
+
+def predictive_moments(probs: jax.Array) -> dict[str, jax.Array]:
+    """probs: (N, ..., C) MC samples of class probabilities.
+
+    Returns dict of (...,)-shaped H, SE, MI and (..., C) mean predictive.
+    """
+    p_mean = probs.mean(axis=0)
+    h = _entropy(p_mean)
+    se = _entropy(probs).mean(axis=0)
+    mi = jnp.maximum(h - se, 0.0)
+    return {"p_mean": p_mean, "H": h, "SE": se, "MI": mi}
+
+
+def uncertainty_from_logits(logits: jax.Array) -> dict[str, jax.Array]:
+    """logits: (N, ..., C) MC samples -> same dict as predictive_moments.
+
+    Numerically stable path used by the fused uncertainty-head kernel's
+    reference: softmax in float32 with logsumexp normalization.
+    """
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    probs = jnp.exp(logp)
+    p_mean = probs.mean(axis=0)
+    h = _entropy(p_mean)
+    se = (-jnp.sum(probs * logp, axis=-1)).mean(axis=0)
+    mi = jnp.maximum(h - se, 0.0)
+    return {"p_mean": p_mean, "H": h, "SE": se, "MI": mi}
+
+
+# --------------------------------------------------------------------------
+# decision rules + evaluation curves
+# --------------------------------------------------------------------------
+
+def roc_curve(scores_pos: jax.Array, scores_neg: jax.Array,
+              num_thresholds: int = 512) -> dict[str, jax.Array]:
+    """ROC of 'score > t => positive' over a threshold sweep.
+
+    scores_pos: scores of true positives (e.g. MI of OOD images),
+    scores_neg: scores of true negatives (MI of ID images).
+    """
+    lo = jnp.minimum(scores_pos.min(), scores_neg.min())
+    hi = jnp.maximum(scores_pos.max(), scores_neg.max())
+    ts = jnp.linspace(hi, lo, num_thresholds)
+    tpr = (scores_pos[None, :] > ts[:, None]).mean(axis=1)
+    fpr = (scores_neg[None, :] > ts[:, None]).mean(axis=1)
+    return {"thresholds": ts, "tpr": tpr, "fpr": fpr}
+
+
+def auroc(scores_pos: jax.Array, scores_neg: jax.Array) -> jax.Array:
+    """Exact AUROC via the Mann-Whitney U statistic (ties count 1/2)."""
+    pos = scores_pos[:, None]
+    neg = scores_neg[None, :]
+    wins = (pos > neg).mean() + 0.5 * (pos == neg).mean()
+    return wins
+
+
+def rejection_accuracy(p_mean: jax.Array, mi: jax.Array, labels: jax.Array,
+                       threshold: float) -> dict[str, jax.Array]:
+    """Accuracy on accepted (MI <= threshold) samples + rejection rate.
+
+    Reproduces Fig. 4d / Fig. 5f: rejecting uncertain cases raises ID
+    accuracy (paper: 90.26% -> 94.62% blood cells, 96.01% -> 99.7% MNIST).
+    """
+    pred = p_mean.argmax(axis=-1)
+    accept = mi <= threshold
+    correct = (pred == labels) & accept
+    acc_all = (pred == labels).mean()
+    n_acc = jnp.maximum(accept.sum(), 1)
+    return {"accuracy_all": acc_all,
+            "accuracy_accepted": correct.sum() / n_acc,
+            "rejection_rate": 1.0 - accept.mean()}
+
+
+def best_rejection_threshold(mi_id: jax.Array, p_mean_id: jax.Array,
+                             labels_id: jax.Array,
+                             num_thresholds: int = 256) -> tuple[float, float]:
+    """Sweep MI thresholds, return (best_threshold, best_accepted_accuracy)."""
+    ts = jnp.linspace(float(mi_id.min()), float(mi_id.max()), num_thresholds)
+
+    def acc_at(t):
+        r = rejection_accuracy(p_mean_id, mi_id, labels_id, t)
+        # mild pressure against rejecting everything
+        return r["accuracy_accepted"] - 0.01 * r["rejection_rate"]
+
+    accs = jax.vmap(acc_at)(ts)
+    i = int(jnp.argmax(accs))
+    r = rejection_accuracy(p_mean_id, mi_id, labels_id, ts[i])
+    return float(ts[i]), float(r["accuracy_accepted"])
+
+
+def disentangle_clusters(mi: jax.Array, se: jax.Array,
+                         dataset_id: jax.Array) -> dict[str, jax.Array]:
+    """Per-dataset (ID=0, ambiguous=1, OOD=2) centroids in (SE, MI) space.
+
+    The paper's Fig. 5e shows three clusters; we report centroids and the
+    silhouette-style separation used by tests to assert the clusters exist.
+    """
+    cents = []
+    for d in range(3):
+        m = dataset_id == d
+        w = m / jnp.maximum(m.sum(), 1)
+        cents.append(jnp.stack([jnp.sum(se * w), jnp.sum(mi * w)]))
+    c = jnp.stack(cents)  # (3, 2)
+    d01 = jnp.linalg.norm(c[0] - c[1])
+    d02 = jnp.linalg.norm(c[0] - c[2])
+    d12 = jnp.linalg.norm(c[1] - c[2])
+    return {"centroids": c, "min_pairwise": jnp.minimum(d01, jnp.minimum(d02, d12))}

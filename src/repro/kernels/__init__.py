@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the probabilistic compute hot spots.
+
+bayes_matmul     -- fused sampled-weight GEMM (weight-space noise)
+lrt_matmul       -- local-reparameterization GEMM (output-space noise)
+photonic_conv    -- the machine's 9-tap frequency-time interleaved conv
+uncertainty_head -- fused S-sample Bayesian head + online H/SE/MI reduce
+flash_attention  -- fused online-softmax attention (score tiles in VMEM)
+
+Each has a pure-jnp oracle in ref.py (flash: models.layers) and a jit'd
+public wrapper in ops.py.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    bayes_conv2d_im2col, bayes_matmul, flash_attention, lrt_matmul,
+    photonic_conv, uncertainty_head)

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: fused sampled-weight GEMM.
+
+The photonic machine's defining property is that the stochastic weights are
+*fused with the MAC*: randomness never transits the digital datapath.  The
+TPU translation: mu / sigma tiles are loaded HBM->VMEM once and perturbed
+in-register, so the HBM weight traffic per MC sample is the same as a
+deterministic GEMM of the *mean* weights (plus the entropy operand, which
+on hardware is generated in-kernel via pltpu.prng_random_bits; in this
+repo it is an explicit operand so the kernel validates in interpret mode
+and stays faithful to the paper's external entropy source).
+
+Two variants:
+
+  * ``bayes_matmul_kernel``  -- weight-space noise, eps: (K, N).  Used for
+    the CNN's probabilistic conv (9-channel weights are tiny).
+  * ``lrt_matmul_kernel``    -- local-reparameterization, xi: (M, N).
+    Noise in output space: exact same marginals, S-sample entropy cost
+    scales with activations, not weights.  This is the LM-head workhorse.
+
+Tiling: classic (M/bm, N/bn, K/bk) grid, K innermost/sequential, f32
+accumulation in the output ref.  Block shapes default to MXU-aligned
+(128, 128) tiles with bk=512 to amortize loop overhead while three f32
+operand tiles + accumulator stay well under VMEM (~1.3 MB at defaults).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bayes_mm_kernel(x_ref, mu_ref, sg_ref, eps_ref, o_ref, *, nk: int):
+    """One (bm, bn) output tile; accumulate over the K grid dimension."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = (mu_ref[...] + sg_ref[...] * eps_ref[...]).astype(jnp.float32)
+    o_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                          preferred_element_type=jnp.float32)
+
+
+def bayes_matmul_kernel(x: jax.Array, mu: jax.Array, sigma: jax.Array,
+                        eps: jax.Array, *, bm: int = 128, bn: int = 128,
+                        bk: int = 512, interpret: bool = False) -> jax.Array:
+    """y = x @ (mu + sigma*eps); x (M,K), mu/sigma/eps (K,N) -> (M,N) f32."""
+    m, k = x.shape
+    k2, n = mu.shape
+    assert k == k2 and mu.shape == sigma.shape == eps.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_bayes_mm_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, mu, sigma, eps)
+
+
+def _lrt_mm_kernel(x_ref, mu_ref, sg_ref, xi_ref, o_ref, *, nk: int):
+    """LRT tile: accumulate mean part and variance part over K, then
+    combine with the output-space noise on the last K step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    mu = mu_ref[...].astype(jnp.float32)
+    sg = sg_ref[...].astype(jnp.float32)
+    mean_part = jnp.dot(x, mu, preferred_element_type=jnp.float32)
+    var_part = jnp.dot(x * x, sg * sg, preferred_element_type=jnp.float32)
+    # pack (mean, var) accumulation: o carries mean + i*var? No complex --
+    # accumulate var scaled into the imaginary trick is fragile; instead
+    # o_ref is (2, bm, bn): channel 0 mean, channel 1 variance.
+    o_ref[0] += mean_part
+    o_ref[1] += var_part
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        mean = o_ref[0]
+        var = jnp.maximum(o_ref[1], 0.0)
+        o_ref[0] = mean + jnp.sqrt(var) * xi_ref[0].astype(jnp.float32)
+
+
+def lrt_matmul_kernel(x: jax.Array, mu: jax.Array, sigma: jax.Array,
+                      xi: jax.Array, *, bm: int = 128, bn: int = 128,
+                      bk: int = 512, interpret: bool = False) -> jax.Array:
+    """Local-reparameterization GEMM.
+
+    x (M,K); mu/sigma (K,N); xi (M,N) output-space standard variates.
+    Returns (M,N) f32:  x@mu + sqrt((x*x)@(sigma^2)) * xi.
+    """
+    m, k = x.shape
+    _, n = mu.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    grid = (m // bm, n // bn, k // bk)
+    xi3 = xi[None]  # leading unit axis so the block carries a channel dim
+    out = pl.pallas_call(
+        functools.partial(_lrt_mm_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bm, bn), lambda i, j, kk: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((2, bm, bn), lambda i, j, kk: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((2, m, n), jnp.float32),
+        interpret=interpret,
+    )(x, mu, sigma, xi3)
+    return out[0]

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: fused flash attention (forward).
+
+Backs the ``jax.named_scope('fused_attention')`` region of
+``models.layers.flash_attention``: on TPU the score tile
+(q_block x kv_block) lives in VMEM and never touches HBM — HBM traffic is
+Q + K + V reads and O writes only, which is exactly what the roofline
+accounting (launch.hlo_cost skip_byte_scopes) models for that scope.
+
+Layout: q (B, H, Sq, D); k/v (B, Hkv, Sk, D); GQA via h // rep in the
+k/v BlockSpec index map.  Grid (B*H, nq, nk) with nk innermost and
+SEQUENTIAL: the (m, l, acc) online-softmax state persists in the output
+refs across the nk steps (same accumulation pattern as bayes_matmul).
+
+MXU alignment: D and the kv block are multiples of 128 at production
+sizes; q block 128-512 rows.  f32 accumulation throughout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  nk: int, kc: int, qc: int, sq: int, sk: int,
+                  causal: bool, q_offset: int, scale: float):
+    kj = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                       # (qc, D)
+    k = k_ref[0].astype(jnp.float32)                       # (kc, D)
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    qpos = q_offset + qi * qc + jax.lax.broadcasted_iota(
+        jnp.int32, (qc, kc), 0)
+    kpos = kj * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    mask = kpos < sk
+    if causal:
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[0]                                      # (qc,)
+    l_prev = l_ref[0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    o_new = o_ref[0] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    o_ref[0] = o_new
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[0] = o_ref[0] / jnp.maximum(l_ref[0], 1e-20)[:, None]
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, q_offset: int = 0,
+                           bq: int = 128, bk: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D) -> (B, H, Sq, D) f32.
+
+    Sq/Sk need not be multiples of bq/bk (padded; masked by Sk).
+    """
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    rep = H // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = qp.shape[2] // bq
+    nk = kp.shape[2] // bk
+    grid = (B * H, nq, nk)
+    scale = 1.0 / float(D) ** 0.5
+
+    out, _, _ = pl.pallas_call(
+        functools.partial(_flash_kernel, nk=nk, kc=bk, qc=bq, sq=Sq,
+                          sk=Sk, causal=causal, q_offset=q_offset,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D),
+                         lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D),
+                         lambda bh, qi, kj, rep=rep, Hh=H:
+                         ((bh // Hh) * (Hh // rep) + (bh % Hh) // rep,
+                          kj, 0)),
+            pl.BlockSpec((1, bk, D),
+                         lambda bh, qi, kj, rep=rep, Hh=H:
+                         ((bh // Hh) * (Hh // rep) + (bh % Hh) // rep,
+                          kj, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bq), lambda bh, qi, kj: (bh, qi)),
+            pl.BlockSpec((1, bq), lambda bh, qi, kj: (bh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, nq * bq, D), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, nq * bq), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, nq * bq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp.reshape(B * H, nq * bq, D),
+      kp.reshape(B * Hkv, nk * bk, D),
+      vp.reshape(B * Hkv, nk * bk, D))
+    return out.reshape(B, H, nq * bq, D)[:, :, :Sq]

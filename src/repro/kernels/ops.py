@@ -1,0 +1,159 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Selection logic: on TPU backends the Pallas path runs compiled; elsewhere
+(this CPU container) `interpret=True` executes the kernel body in Python
+for correctness, and callers who need speed on CPU (tests over big sweeps,
+examples) can force the pure-jnp oracle with ``impl='ref'``.
+
+All wrappers handle padding to kernel tile multiples and strip it off, so
+arbitrary problem shapes are accepted.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bayes_matmul import bayes_matmul_kernel, lrt_matmul_kernel
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.photonic_conv import photonic_conv_kernel
+from repro.kernels.uncertainty_head import uncertainty_head_kernel
+
+Impl = Literal["auto", "pallas", "ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: Impl) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)"""
+    if impl == "ref":
+        return False, False
+    if impl == "pallas":
+        return True, not _on_tpu()
+    return (True, False) if _on_tpu() else (False, False)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "bm", "bn", "bk"))
+def bayes_matmul(x, mu, sigma, eps, impl: Impl = "auto",
+                 bm: int = 128, bn: int = 128, bk: int = 512):
+    """Sampled-weight GEMM y = x @ (mu + sigma*eps); any (M, K, N)."""
+    use_pallas, interp = _resolve(impl)
+    if not use_pallas:
+        return ref.bayes_matmul(x, mu, sigma, eps)
+    m, k = x.shape
+    _, n = mu.shape
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    mup = _pad_to(_pad_to(mu, 0, bk), 1, bn)
+    sgp = _pad_to(_pad_to(sigma, 0, bk), 1, bn)
+    epp = _pad_to(_pad_to(eps, 0, bk), 1, bn)
+    y = bayes_matmul_kernel(xp, mup, sgp, epp, bm=bm, bn=bn, bk=bk,
+                            interpret=interp)
+    return y[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "bm", "bn", "bk"))
+def lrt_matmul(x, mu, sigma, xi, impl: Impl = "auto",
+               bm: int = 128, bn: int = 128, bk: int = 512):
+    """Local-reparameterization GEMM; xi is output-space (M, N) noise."""
+    use_pallas, interp = _resolve(impl)
+    if not use_pallas:
+        return ref.lrt_matmul(x, mu, sigma, xi)
+    m, k = x.shape
+    _, n = mu.shape
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    mup = _pad_to(_pad_to(mu, 0, bk), 1, bn)
+    sgp = _pad_to(_pad_to(sigma, 0, bk), 1, bn)
+    xip = _pad_to(_pad_to(xi, 0, bm), 1, bn)
+    y = lrt_matmul_kernel(xp, mup, sgp, xip, bm=bm, bn=bn, bk=bk,
+                          interpret=interp)
+    return y[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "bb", "dac_bits",
+                                             "adc_bits"))
+def photonic_conv(x, mu, sigma, eps, impl: Impl = "auto", bb: int = 8,
+                  dac_bits: int = 8, adc_bits: int = 8):
+    """Machine primitive: (B, T) x 9-channel probabilistic kernel."""
+    use_pallas, interp = _resolve(impl)
+    if not use_pallas:
+        return ref.photonic_conv(x, mu, sigma, eps, dac_bits=dac_bits,
+                                 adc_bits=adc_bits)
+    b = x.shape[0]
+    xp = _pad_to(x, 0, bb)
+    epp = _pad_to(eps, 0, bb)
+    y = photonic_conv_kernel(xp, mu, sigma, epp, bb=bb, dac_bits=dac_bits,
+                             adc_bits=adc_bits, interpret=interp)
+    return y[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "bm", "bv"))
+def uncertainty_head(x, mu, sigma, xi, impl: Impl = "auto",
+                     bm: int = 128, bv: int = 512):
+    """Fused Bayesian head + (H, SE, MI, pred, p_max) per row."""
+    use_pallas, interp = _resolve(impl)
+    if not use_pallas:
+        return ref.uncertainty_head(x, mu, sigma, xi)
+    m = x.shape[0]
+    xp = _pad_to(x, 0, bm)
+    xip = _pad_to(xi, 1, bm)
+    out = uncertainty_head_kernel(xp, mu, sigma, xip, bm=bm, bv=bv,
+                                  interpret=interp)
+    return {k: v[:m] for k, v in out.items()}
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "causal", "q_offset",
+                                              "bq", "bk"))
+def flash_attention(q, k, v, impl: Impl = "auto", causal: bool = True,
+                    q_offset: int = 0, bq: int = 128, bk: int = 256):
+    """Fused flash attention; q (B,S,H,D), k/v (B,S,Hkv,D) -> (B,S,H,D).
+
+    On TPU this is the production path of the models' attention scope
+    ('fused_attention'); elsewhere the jnp online-softmax reference.
+    """
+    use_pallas, interp = _resolve(impl)
+    if not use_pallas:
+        from repro.models.layers import flash_attention as ref_attn
+        return ref_attn(q, k, v, causal=causal, q_offset=q_offset,
+                        q_chunk=bq, kv_chunk=bk)
+    out = flash_attention_kernel(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, q_offset=q_offset,
+        bq=bq, bk=bk, interpret=interp)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def bayes_conv2d_im2col(x, mu, sigma, eps, impl: Impl = "auto"):
+    """3x3 probabilistic conv as a sampled GEMM (im2col).
+
+    The TPU-native form of the machine's convolution: the 9 spectral
+    channels become the 9 im2col columns feeding the MXU.
+    x: (B, C_in, H, W); mu/sigma/eps: (C_out, C_in, 3, 3) -> (B, C_out, H, W).
+    """
+    b, cin, h, w = x.shape
+    cout = mu.shape[0]
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    # patches: (B, H, W, C_in*9)
+    patches = jax.lax.conv_general_dilated_patches(
+        xp, (3, 3), (1, 1), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NHWC"))
+    pk = patches.reshape(b * h * w, cin * 9)
+    mu2 = mu.reshape(cout, cin * 9).T
+    sg2 = sigma.reshape(cout, cin * 9).T
+    ep2 = eps.reshape(cout, cin * 9).T
+    y = bayes_matmul(pk, mu2, sg2, ep2, impl=impl)
+    return y.reshape(b, h, w, cout).transpose(0, 3, 1, 2)

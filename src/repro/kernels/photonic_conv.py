@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: the machine's primitive — 9-tap probabilistic conv.
+
+Direct TPU mapping of the frequency-time interleaved analog dot product
+(paper Fig. 2a): the chirped grating's one-symbol-per-channel delay becomes
+a static shifted-window accumulation inside a VMEM tile; the per-symbol
+fresh weight draws become the eps operand (B, To, C) — the digital twin of
+the chaotic carrier.  DAC/ADC 8-bit quantization is fused, matching the
+machine's interface, so one kernel call is one batch of analog shots.
+
+Grid: batch tiles only — the full time axis of a tile lives in VMEM
+(To <= a few thousand symbols per shot, exactly the machine's operating
+regime; bb*T*4B + bb*To*C*4B ~ 2.5 MB at bb=8, T=4096).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import entropy as E
+
+
+def _quant(x, bits, x_max):
+    levels = 2 ** (bits - 1) - 1
+    scale = x_max / levels
+    return jnp.clip(jnp.round(x / scale), -levels, levels) * scale
+
+
+def _photonic_conv_kernel(x_ref, mu_ref, sg_ref, eps_ref, o_ref, *,
+                          num_channels: int, dac_bits: int, adc_bits: int,
+                          in_range: float, out_range: float):
+    C = num_channels
+    To = o_ref.shape[-1]
+    xq = _quant(x_ref[...].astype(jnp.float32), dac_bits, in_range)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    # chirped-grating delay: channel k arrives k symbols late -> tap x[t+k]
+    # multiplies weight channel C-1-k (see core.photonic.convolve).
+    for k in range(C):
+        w = (mu_ref[0, C - 1 - k] +
+             sg_ref[0, C - 1 - k] * eps_ref[..., C - 1 - k].astype(jnp.float32))
+        acc += xq[:, k:k + To] * w
+    o_ref[...] = _quant(acc, adc_bits, out_range)
+
+
+def photonic_conv_kernel(x: jax.Array, mu: jax.Array, sigma: jax.Array,
+                         eps: jax.Array, *, dac_bits: int = E.DAC_BITS,
+                         adc_bits: int = E.ADC_BITS, in_range: float = 1.0,
+                         out_range: float = 4.0, bb: int = 8,
+                         interpret: bool = False) -> jax.Array:
+    """x: (B, T); mu/sigma: (C,); eps: (B, To, C) -> y: (B, To)."""
+    B, T = x.shape
+    C = mu.shape[-1]
+    To = T - C + 1
+    assert eps.shape == (B, To, C)
+    bb = min(bb, B)
+    assert B % bb == 0
+    grid = (B // bb,)
+    return pl.pallas_call(
+        functools.partial(_photonic_conv_kernel, num_channels=C,
+                          dac_bits=dac_bits, adc_bits=adc_bits,
+                          in_range=in_range, out_range=out_range),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, T), lambda i: (i, 0)),
+            pl.BlockSpec((1, C), lambda i: (0, 0)),
+            pl.BlockSpec((1, C), lambda i: (0, 0)),
+            pl.BlockSpec((bb, To, C), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, To), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, To), jnp.float32),
+        interpret=interpret,
+    )(x, mu[None], sigma[None], eps)

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret
+mode on CPU, shape/dtype sweeps in tests/test_kernels.py).  They are also
+the fallback path on backends without Pallas support.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array, bits: int, x_max: float) -> jax.Array:
+    """Forward-only uniform quantizer (kernels run inference; no STE)."""
+    levels = 2 ** (bits - 1) - 1
+    scale = x_max / levels
+    return jnp.clip(jnp.round(x / scale), -levels, levels) * scale
+
+
+def bayes_matmul(x: jax.Array, mu: jax.Array, sigma: jax.Array,
+                 eps: jax.Array) -> jax.Array:
+    """Weight-space sampled GEMM:  y = x @ (mu + sigma * eps).
+
+    x: (M, K), mu/sigma/eps: (K, N)  ->  (M, N), f32 accumulation.
+    """
+    w = (mu + sigma * eps).astype(jnp.float32)
+    return x.astype(jnp.float32) @ w
+
+
+def lrt_matmul(x: jax.Array, mu: jax.Array, sigma: jax.Array,
+               xi: jax.Array) -> jax.Array:
+    """Local-reparameterization GEMM (Kingma et al. 2015):
+
+        y = x @ mu + sqrt((x*x) @ (sigma*sigma)) * xi
+
+    Exact same marginals as weight-space sampling but entropy lives in the
+    *output* space (xi: (..., M, N)) -- the TPU analog of the photonic
+    machine's output-side randomness, and far less entropy traffic than
+    (K, N) weight noise per MC sample.
+    """
+    x32 = x.astype(jnp.float32)
+    m = x32 @ mu.astype(jnp.float32)
+    v = (x32 * x32) @ (sigma.astype(jnp.float32) ** 2)
+    return m + jnp.sqrt(jnp.maximum(v, 0.0)) * xi.astype(jnp.float32)
+
+
+def photonic_conv(x: jax.Array, mu: jax.Array, sigma: jax.Array,
+                  eps: jax.Array, dac_bits: int = 8, adc_bits: int = 8,
+                  in_range: float = 1.0, out_range: float = 4.0) -> jax.Array:
+    """The machine's primitive: 9-tap probabilistic convolution.
+
+    x: (B, T); mu/sigma: (C,); eps: (B, To, C) with To = T - C + 1.
+    y[b, t] = sum_k x_q[b, t+k] * w[b, t, C-1-k],  w = mu + sigma*eps,
+    then ADC quantization.  Matches core.photonic.convolve with the
+    Gaussian surrogate and impairments disabled.
+    """
+    C = mu.shape[-1]
+    To = x.shape[-1] - C + 1
+    xq = quantize(x, dac_bits, in_range)
+    idx = jnp.arange(To)[:, None] + jnp.arange(C)[None, :]
+    taps = xq[..., idx]                       # (B, To, C)
+    w = mu + sigma * eps                      # (B, To, C)
+    y = jnp.sum(taps * w[..., ::-1], axis=-1)
+    return quantize(y, adc_bits, out_range)
+
+
+def uncertainty_head(x: jax.Array, mu: jax.Array, sigma: jax.Array,
+                     xi: jax.Array) -> dict[str, jax.Array]:
+    """Fused Bayesian head + uncertainty readout (paper Eqs. 1-2).
+
+    x: (M, K) final hidden states; mu/sigma: (K, V) variational head;
+    xi: (S, M, V) output-space entropy (LRT).  Returns per-row:
+      H (total), SE (aleatoric), MI (epistemic), pred (argmax of mean
+      predictive), p_max (confidence).
+    """
+    logits = lrt_matmul(x, mu, sigma, xi)     # (S, M, V) f32
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    probs = jnp.exp(logp)
+    p_mean = probs.mean(axis=0)               # (M, V)
+    h = -jnp.sum(p_mean * jnp.log(p_mean + 1e-12), axis=-1)
+    se = (-jnp.sum(probs * logp, axis=-1)).mean(axis=0)
+    mi = jnp.maximum(h - se, 0.0)
+    return {"H": h, "SE": se, "MI": mi,
+            "pred": p_mean.argmax(axis=-1).astype(jnp.int32),
+            "p_max": p_mean.max(axis=-1)}

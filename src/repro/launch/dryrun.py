@@ -1,0 +1,324 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be imported/run before any other jax usage: the first two lines pin
+512 placeholder host devices so ``jax.make_mesh`` can build the production
+meshes (single pod 16x16 = 256 chips, multi-pod 2x16x16 = 512).
+
+For every runnable cell this script:
+  1. builds ShapeDtypeStruct inputs (``steps.input_specs``) -- no allocation,
+  2. jits the train/prefill/decode step with the arch's in/out shardings,
+  3. ``.lower().compile()`` -- any sharding mismatch / unsupported
+     collective / compile-OOM is a hard failure,
+  4. records memory_analysis + cost_analysis + the collective schedule
+     parsed from the post-SPMD HLO into ``artifacts/dryrun/<cell>.json``
+     (the roofline analysis in benchmarks/roofline.py reads these).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_1_5b \
+      --shape train_4k --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import re           # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp                    # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import SHAPE_CELLS, cell_applicable   # noqa: E402
+from repro.launch import hlo_cost                              # noqa: E402
+from repro.configs.registry import ARCH_IDS, get_config       # noqa: E402
+from repro.core.svi import SVIConfig       # noqa: E402
+from repro.launch import mesh as meshlib   # noqa: E402
+from repro.launch import steps as S        # noqa: E402
+from repro.optim import adamw              # noqa: E402
+from repro.sharding.partition import set_mesh_context  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "artifacts", "dryrun")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8,
+                "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8}
+
+
+def _type_bytes(type_str: str) -> int:
+    """bytes of an HLO result type like 'bf16[8,128,6144]' (tuples summed)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-op collective operand bytes from post-SPMD (per-device) HLO.
+
+    Link-traffic model per chip (ring algorithms, (n-1)/n ~= 1):
+      all-reduce       2 x operand     (reduce-scatter + all-gather phases)
+      all-gather       result - operand  (received shards)
+      reduce-scatter   operand - result  (sent shards)
+      all-to-all       operand
+      collective-permute operand
+    """
+    # name -> result bytes for operand lookup
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s",
+                     line)
+        if m:
+            sizes[m.group(1)] = _type_bytes(m.group(2))
+
+    out = {c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    ops = []
+    for line in hlo_text.splitlines():
+        m = re.match(
+            r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start)?\(([^)]*)\)", line)
+        if not m:
+            continue
+        name, rtype, kind, args = m.groups()
+        rbytes = _type_bytes(rtype)
+        obytes = 0
+        for a in args.split(","):
+            a = a.strip().lstrip("%")
+            obytes += sizes.get(a, 0)
+        if kind == "all-reduce":
+            link = 2 * obytes
+        elif kind == "all-gather":
+            link = max(rbytes - obytes, 0)
+        elif kind == "reduce-scatter":
+            link = max(obytes - rbytes, 0)
+        else:
+            link = obytes
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += link
+        ops.append({"kind": kind, "operand_bytes": obytes,
+                    "result_bytes": rbytes, "link_bytes": link})
+    out["total_link_bytes"] = sum(v["bytes"] for k, v in out.items()
+                                  if isinstance(v, dict))
+    out["ops"] = ops[:200]
+    return out
+
+
+def _mem_analysis(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_size_in_bytes": ma.argument_size_in_bytes,
+            "output_size_in_bytes": ma.output_size_in_bytes,
+            "temp_size_in_bytes": ma.temp_size_in_bytes,
+            "generated_code_size_in_bytes": ma.generated_code_size_in_bytes,
+            "peak_bytes": (ma.argument_size_in_bytes
+                           + ma.temp_size_in_bytes),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        return {"error": str(e)[:200]}
+
+
+def _cost_analysis(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:
+        return {"error": str(e)[:200]}
+
+
+def pick_micro_batches(cfg, cell, dp: int) -> int:
+    """Bound the per-replica microbatch to ~4 sequences (activation +
+    MoE dispatch buffer control; DESIGN.md §5)."""
+    per_replica = max(cell.global_batch // dp, 1)
+    micro = max(per_replica // 4, 1)
+    while cell.global_batch % (micro * dp) and micro > 1:
+        micro -= 1
+    return micro
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               micro_batches: int | None = None,
+               extra_tags: dict | None = None):
+    """Lower+compile one cell; returns (record, lowered, compiled)."""
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[shape]
+    ok, why = cell_applicable(cfg, cell)
+    if not ok:
+        return {"arch": arch, "shape": shape, "skipped": why}, None, None
+
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    set_mesh_context(mesh)
+    dp = meshlib.dp_size(mesh)
+    specs = S.input_specs(cfg, cell)
+
+    t0 = time.time()
+    try:
+        with mesh:
+            if cell.kind == "train":
+                opt_cfg = adamw.AdamWConfig(moment_dtype=cfg.moment_dtype)
+                micro = micro_batches or pick_micro_batches(cfg, cell, dp)
+                svi = SVIConfig(num_train_examples=cell.global_batch * 1000)
+                step_fn = S.build_train_step(cfg, opt_cfg, svi,
+                                             micro_batches=micro)
+                state_specs = S.train_state_specs(cfg, opt_cfg)
+                st_pspec = S.state_pspecs(cfg, mesh, state_specs)
+                b_pspec = S.batch_pspecs(mesh, specs["batch"])
+                in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                      st_pspec,
+                                      is_leaf=lambda x: isinstance(x, P)),
+                         jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                      b_pspec,
+                                      is_leaf=lambda x: isinstance(x, P)))
+                lowered = jax.jit(step_fn, in_shardings=in_sh).lower(
+                    state_specs, specs["batch"])
+                meta = {"kind": "train", "micro_batches": micro}
+            elif cell.kind == "prefill":
+                step_fn = S.build_prefill_step(cfg, cell.seq_len)
+                params_specs = S.train_state_specs(
+                    cfg, adamw.AdamWConfig())["params"]
+                p_pspec = S.state_pspecs(
+                    cfg, mesh, {"params": params_specs,
+                                "opt": {}})["params"]
+                b_pspec = S.batch_pspecs(mesh, specs["batch"])
+                in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                      p_pspec,
+                                      is_leaf=lambda x: isinstance(x, P)),
+                         jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                      b_pspec,
+                                      is_leaf=lambda x: isinstance(x, P)))
+                lowered = jax.jit(step_fn, in_shardings=in_sh).lower(
+                    params_specs, specs["batch"])
+                meta = {"kind": "prefill"}
+            else:  # decode
+                step_fn = S.build_decode_step(cfg)
+                params_specs = S.train_state_specs(
+                    cfg, adamw.AdamWConfig())["params"]
+                p_pspec = S.state_pspecs(
+                    cfg, mesh, {"params": params_specs,
+                                "opt": {}})["params"]
+                c_pspec = S.cache_pspecs(mesh, specs["cache"])
+                tok_sh = NamedSharding(mesh, meshlib.spec_if(
+                    mesh, specs["token"].shape, "batch"))
+                in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                      p_pspec,
+                                      is_leaf=lambda x: isinstance(x, P)),
+                         tok_sh,
+                         jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                      c_pspec,
+                                      is_leaf=lambda x: isinstance(x, P)),
+                         NamedSharding(mesh, P()))
+                lowered = jax.jit(step_fn, in_shardings=in_sh).lower(
+                    params_specs, specs["token"], specs["cache"],
+                    specs["step"])
+                meta = {"kind": "decode"}
+
+            compiled = lowered.compile()
+    finally:
+        set_mesh_context(None)
+
+    hlo = compiled.as_text()
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "num_devices": mesh.devices.size,
+        "compile_s": round(time.time() - t0, 1),
+        "memory_analysis": _mem_analysis(compiled),
+        "cost_analysis": _cost_analysis(compiled),
+        # trip-count-aware accounting (launch.hlo_cost): XLA cost_analysis
+        # counts while bodies once, so scanned programs under-report.
+        "hlo_cost": hlo_cost.analyze(hlo),
+        # same HLO with the 'fused_attention' scope's HBM bytes excluded:
+        # models the Pallas kernel (kernels/flash_attention.py) keeping
+        # score tiles in VMEM -- the TPU production path.
+        "hlo_cost_fused_attn": hlo_cost.analyze(
+            hlo, skip_byte_scopes=("fused_attention",)),
+        "collectives": parse_collectives(hlo),
+        "param_count": cfg.param_count,
+        "active_param_count": cfg.active_param_count,
+        "tokens": cell.global_batch * (cell.seq_len
+                                       if cell.kind != "decode" else 1),
+        **meta,
+    }
+    if extra_tags:
+        rec.update(extra_tags)
+    return rec, lowered, compiled
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             tag: str = "") -> dict:
+    rec, _, compiled = lower_cell(arch, shape, multi_pod)
+    mesh_tag = "multi" if multi_pod else "single"
+    name = f"{arch}__{shape}__{mesh_tag}{('__' + tag) if tag else ''}.json"
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+    if "skipped" in rec:
+        print(f"SKIP  {arch:22s} {shape:12s} {mesh_tag:6s} {rec['skipped']}")
+    else:
+        ca = rec["cost_analysis"]
+        print(f"OK    {arch:22s} {shape:12s} {mesh_tag:6s} "
+              f"compile {rec['compile_s']:6.1f}s  "
+              f"flops/dev {ca.get('flops', 0):.3e}  "
+              f"coll {rec['collectives']['total_link_bytes']:.3e}B")
+    del compiled
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPE_CELLS) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, mp, args.out)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp, str(e)[:200]))
+                    print(f"FAIL  {arch:22s} {shape:12s} "
+                          f"{'multi' if mp else 'single'}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-run cells green")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,374 @@
+"""Trip-count-aware cost accounting over post-SPMD optimized HLO.
+
+XLA's ``compiled.cost_analysis()`` counts the body of a ``while`` loop
+ONCE, so any scanned program (scan-over-layers, flash-attention chunk
+scans, SSD chunk scans, microbatch accumulation) under-reports FLOPs,
+bytes and collective traffic by the trip count.  The optimized HLO,
+however, annotates every counted loop with
+``backend_config={"known_trip_count":{"n":"64"}}``.
+
+This module re-derives the three roofline inputs by walking the HLO call
+graph with multipliers:
+
+  * FLOPs       -- ``dot`` ops: 2 * prod(result) * prod(contracted dims)
+                   (+ convolution approx); dots inside fusions are
+                   counted too (output fusions can wrap dots).
+  * HBM bytes   -- per *materialization point*: operand + result bytes of
+                   fusions and of non-fusable data-movement ops (dot,
+                   copy, gather, dynamic-slice, ...).  Fusion-internal
+                   traffic is excluded -- a fusion is one kernel pass,
+                   which is exactly the roofline notion of HBM traffic.
+  * collectives -- link-byte model per op kind (ring algorithms):
+                   all-reduce 2x, all-gather/reduce-scatter the
+                   shard-delta, all-to-all / permute 1x.
+
+The HLO here is the per-device program (post-SPMD partitioning), so all
+numbers are per-chip.  Validated against XLA cost_analysis on unrolled
+(trip-count-free) configs in tests/test_hlo_cost.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8,
+                "f64": 8, "s16": 2, "u16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+# ops that materialize operands/results through HBM even when not fused
+_MOVER_OPS = {
+    "dot", "convolution", "copy", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "slice", "concatenate", "pad", "reduce",
+    "reduce-window", "sort", "transpose", "convert", "select-and-scatter",
+    "rng", "rng-bit-generator", "cholesky", "triangular-solve",
+} | set(_COLLECTIVES)
+
+
+def _dims(dim_str: str) -> list[int]:
+    return [int(d) for d in dim_str.split(",") if d]
+
+
+def _type_info(type_str: str) -> tuple[int, list[list[int]]]:
+    """(total bytes, list of array shapes) of an HLO type string."""
+    total = 0
+    shapes = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        ds = _dims(dims)
+        n = 1
+        for d in ds:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append(ds)
+    return total, shapes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    operands: list[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\([^)]*\)|[\w\[\],]+(?:\{[\d,]*\})?))\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"calls=%([\w.\-]+)")
+_BODY = re.compile(r"body=%([\w.\-]+)")
+_COND = re.compile(r"condition=%([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS = re.compile(r"feature_group_count=(\d+)")
+
+
+def parse_module(hlo_text: str) -> tuple[dict[str, Computation], str,
+                                         dict[str, str]]:
+    """-> (computations by name, entry name, instr name -> result type)."""
+    comps: dict[str, Computation] = {}
+    types: dict[str, str] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in hlo_text.splitlines():
+        h = _COMP_HDR.match(line)
+        if h:
+            cur = Computation(h.group(1), [])
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rtype, op, args, rest = m.groups()
+        operands = _OPERAND.findall(args)
+        ins = Instr(name, rtype, op, operands, line)
+        cur.instrs.append(ins)
+        types[name] = rtype
+    if entry is None:
+        # fall back: the last computation is usually the entry
+        entry = list(comps)[-1] if comps else ""
+    return comps, entry, types
+
+
+def _dot_flops(ins: Instr, types: dict[str, str]) -> float:
+    _, rshapes = _type_info(ins.result_type)
+    rsize = 1
+    for d in (rshapes[0] if rshapes else []):
+        rsize *= d
+    cm = _CONTRACT.search(ins.line)
+    contract = 1
+    if cm and ins.operands:
+        lhs_type = types.get(ins.operands[0], "")
+        _, lshapes = _type_info(lhs_type)
+        if lshapes:
+            lshape = lshapes[0]
+            for ci in _dims(cm.group(1)):
+                if ci < len(lshape):
+                    contract *= lshape[ci]
+    return 2.0 * rsize * contract
+
+
+def _conv_flops(ins: Instr, types: dict[str, str]) -> float:
+    _, rshapes = _type_info(ins.result_type)
+    rsize = 1
+    for d in (rshapes[0] if rshapes else []):
+        rsize *= d
+    if len(ins.operands) < 2:
+        return 0.0
+    _, kshapes = _type_info(types.get(ins.operands[1], ""))
+    ksize = 1
+    for d in (kshapes[0] if kshapes else []):
+        ksize *= d
+    g = _GROUPS.search(ins.line)
+    groups = int(g.group(1)) if g else 1
+    # kernel total / output-features ~ per-output MACs (grouped aware)
+    _, rsh = _type_info(ins.result_type)
+    out_feat = rsh[0][-1] if rsh and rsh[0] else 1
+    per_out = ksize / max(out_feat, 1)
+    return 2.0 * rsize * per_out * (1.0 / max(groups, 1)) * groups
+
+
+_META_NAME = re.compile(r'op_name="([^"]*)"')
+
+
+class HloCost:
+    """detail=True records per-instruction contributions for profiling
+    (the §Perf loop's 'profile': top collectives / byte movers with their
+    jaxpr op_name provenance).  skip_byte_scopes: op_name substrings whose
+    instructions contribute NO HBM bytes — used to model Pallas-fused
+    regions (e.g. 'fused_attention': the flash kernel keeps score tiles
+    in VMEM; kernels/flash_attention.py is the backing implementation)."""
+
+    def __init__(self, hlo_text: str, detail: bool = False,
+                 skip_byte_scopes: tuple[str, ...] = ()):
+        self.comps, self.entry, self.types = parse_module(hlo_text)
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll = {c: {"count": 0.0, "bytes": 0.0}
+                     for c in _COLLECTIVES}
+        self.detail = detail
+        self.skip_byte_scopes = skip_byte_scopes
+        self.records: list[tuple[float, str, str, str]] = []
+        self._walk(self.entry, 1.0, count_bytes=True)
+
+    def _scoped_out(self, ins: Instr) -> bool:
+        if not self.skip_byte_scopes:
+            return False
+        m = _META_NAME.search(ins.line)
+        name = m.group(1) if m else ""
+        return any(s in name for s in self.skip_byte_scopes)
+
+    def _record(self, kind: str, amount: float, ins: Instr):
+        if self.detail and amount > 0:
+            m = _META_NAME.search(ins.line)
+            name = (m.group(1) if m else ins.name)
+            self.records.append(
+                (amount, kind, ins.op,
+                 f"{ins.result_type.split('{')[0]} {name}"))
+
+    def top(self, kind: str, n: int = 15) -> list[tuple[float, str, str]]:
+        import collections
+        agg: dict = collections.Counter()
+        for amount, k, op, name in self.records:
+            if k == kind:
+                agg[(op, name)] += amount
+        return [(v, op, name)
+                for (op, name), v in agg.most_common(n)]
+
+    # -- traversal ----------------------------------------------------------
+
+    def _operand_bytes(self, ins: Instr) -> float:
+        total = 0.0
+        for o in ins.operands:
+            t = self.types.get(o)
+            if t:
+                total += _type_info(t)[0]
+        return total
+
+    _PARAM_IDX = re.compile(r"parameter\((\d+)\)")
+
+    def _fusion_operand_bytes(self, ins: Instr) -> float:
+        """Operand bytes of a fusion, slice-aware.
+
+        A scan body's fusions take the whole stacked (L, ...) carry as an
+        operand but only dynamic-slice one layer's slab out of it; HBM
+        traffic is the slice, not the stack.  For each fusion parameter
+        consumed ONLY by dynamic-slice ops inside the fused computation,
+        count the slice results instead of the full operand.
+        """
+        cm = _CALLS.search(ins.line)
+        comp = self.comps.get(cm.group(1)) if cm else None
+        if comp is None:
+            return self._operand_bytes(ins)
+        params: dict[int, str] = {}
+        for i2 in comp.instrs:
+            if i2.op == "parameter":
+                m = self._PARAM_IDX.search(i2.line)
+                if m:
+                    params[int(m.group(1))] = i2.name
+        total = 0.0
+        for idx, o in enumerate(ins.operands):
+            ob = _type_info(self.types.get(o, ""))[0]
+            pname = params.get(idx)
+            if pname is not None and ob > 0:
+                consumers = [i2 for i2 in comp.instrs
+                             if pname in i2.operands]
+                if consumers and all(c.op == "dynamic-slice"
+                                     for c in consumers):
+                    ob = sum(_type_info(c.result_type)[0]
+                             for c in consumers)
+            total += ob
+        return total
+
+    def _walk(self, comp_name: str, mult: float, count_bytes: bool):
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "while":
+                t = _TRIP.search(ins.line)
+                trips = float(t.group(1)) if t else 1.0
+                b = _BODY.search(ins.line)
+                c = _COND.search(ins.line)
+                if b:
+                    self._walk(b.group(1), mult * trips, count_bytes)
+                if c:
+                    self._walk(c.group(1), mult * trips, count_bytes)
+                continue
+            if op == "fusion":
+                if count_bytes and not self._scoped_out(ins):
+                    rb = _type_info(ins.result_type)[0]
+                    ob = self._fusion_operand_bytes(ins)
+                    # in-place update fusions (scan writing one layer slice
+                    # into the stacked (L, ...) carry) alias an operand with
+                    # the result buffer: traffic is the update region, not
+                    # the whole carry.  Detect via a same-typed operand.
+                    aliased = 0.0
+                    for o in ins.operands:
+                        t = self.types.get(o, "")
+                        if t and t.split("{")[0] == \
+                                ins.result_type.split("{")[0]:
+                            aliased = _type_info(t)[0]
+                            break
+                    if aliased and "dynamic-update-slice" in ins.name:
+                        self.bytes += mult * 2.0 * (ob - aliased)
+                        self._record("bytes", mult * 2.0 * (ob - aliased),
+                                     ins)
+                    else:
+                        self.bytes += mult * (ob + rb)
+                        self._record("bytes", mult * (ob + rb), ins)
+                cm = _CALLS.search(ins.line)
+                if cm:
+                    # count dots inside the fusion; bytes stay at the call
+                    self._walk(cm.group(1), mult, count_bytes=False)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for sub in re.findall(
+                        r"(?:to_apply|calls|branch_computations=\{)"
+                        r"=?%?([\w.\-]+)", ins.line):
+                    self._walk(sub, mult, count_bytes)
+                continue
+            if op == "dot":
+                self.flops += mult * _dot_flops(ins, self.types)
+            elif op == "convolution":
+                self.flops += mult * _conv_flops(ins, self.types)
+            if op in _COLLECTIVES or (op.endswith("-start")
+                                      and op[:-6] in _COLLECTIVES):
+                kind = op[:-6] if op.endswith("-start") else op
+                ob = self._operand_bytes(ins)
+                rb = _type_info(ins.result_type)[0]
+                if kind == "all-reduce":
+                    link = 2.0 * ob
+                elif kind == "all-gather":
+                    link = max(rb - ob, 0.0)
+                elif kind == "reduce-scatter":
+                    link = max(ob - rb, 0.0)
+                else:
+                    link = ob
+                self.coll[kind]["count"] += mult
+                self.coll[kind]["bytes"] += mult * link
+                self._record(kind, mult * link, ins)
+                if count_bytes:
+                    self.bytes += mult * (ob + rb)
+                continue
+            if count_bytes and op in _MOVER_OPS \
+                    and not self._scoped_out(ins):
+                rb = _type_info(ins.result_type)[0]
+                if op in ("slice", "dynamic-slice", "gather"):
+                    # reads only the sliced region, not the full operand
+                    b = mult * 2.0 * rb
+                elif op == "dynamic-update-slice":
+                    # in-place: read + write of the update region only
+                    ub = (_type_info(self.types.get(ins.operands[1], ""))[0]
+                          if len(ins.operands) > 1 else rb)
+                    b = mult * 2.0 * ub
+                elif op == "scatter":
+                    ub = (_type_info(self.types.get(ins.operands[2], ""))[0]
+                          if len(ins.operands) > 2 else rb)
+                    b = mult * 3.0 * ub
+                else:
+                    b = mult * (self._operand_bytes(ins) + rb)
+                self.bytes += b
+                self._record("bytes", b, ins)
+
+    # -- results ------------------------------------------------------------
+
+    def summary(self) -> dict:
+        total_link = sum(v["bytes"] for v in self.coll.values())
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collectives": {**{k: dict(v) for k, v in self.coll.items()},
+                            "total_link_bytes": total_link},
+        }
+
+
+def analyze(hlo_text: str,
+            skip_byte_scopes: tuple[str, ...] = ()) -> dict:
+    return HloCost(hlo_text, skip_byte_scopes=skip_byte_scopes).summary()

@@ -1,0 +1,78 @@
+"""Production mesh construction (single-pod and multi-pod).
+
+The target machine is a TPU v5e pod of 16 x 16 = 256 chips; the multi-pod
+dry-run stacks two pods on a leading ``pod`` axis (DCN data parallelism;
+ICI inside a pod).  Everything is a FUNCTION -- importing this module never
+touches jax device state, so smoke tests keep seeing 1 CPU device.
+
+Axis semantics (see sharding/partition.py):
+  pod   -- inter-pod data parallelism (gradient all-reduce over DCN)
+  data  -- intra-pod data parallelism + FSDP/ZeRO shard axis
+  model -- tensor parallelism (heads / ff / vocab / experts)
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link (~per-chip usable)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def shardable(dim: int, mesh: Mesh, axes) -> bool:
+    """True if ``dim`` divides evenly over the product of mesh ``axes``."""
+    if axes is None:
+        return True
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return dim % n == 0 and dim >= n
+
+
+def spec_if(mesh: Mesh, shape: tuple[int, ...], *dims) -> P:
+    """PartitionSpec with per-dim divisibility fallback to replication.
+
+    dims entries: None | axis-name | tuple of axis names | "batch"
+    ("batch" expands to the mesh's DP axes).
+    """
+    out = []
+    for size, d in zip(shape, dims):
+        if d == "batch":
+            d = batch_axes(mesh)
+            if len(d) == 1:
+                d = d[0]
+        if d is None or not shardable(size, mesh, d):
+            out.append(None)
+        else:
+            out.append(d)
+    return P(*out)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

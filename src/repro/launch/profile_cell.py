@@ -1,0 +1,61 @@
+"""Profile one dry-run cell: top collective / HBM-byte contributors.
+
+The §Perf loop's 'profiler': recompiles a cell and attributes the
+trip-count-aware cost to jaxpr op_names, so a hypothesis like 'the head
+FSDP contraction ARs the logits' is checkable directly.
+
+  PYTHONPATH=src python -m repro.launch.profile_cell \
+      --arch grok_1_314b --shape train_4k [--multi-pod] [--fused-attn]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+
+from repro.launch import dryrun  # noqa: E402
+from repro.launch.hlo_cost import HloCost  # noqa: E402
+
+
+def profile(arch: str, shape: str, multi_pod: bool = False,
+            skip_byte_scopes: tuple[str, ...] = (), top: int = 14) -> dict:
+    rec, lowered, compiled = dryrun.lower_cell(arch, shape, multi_pod)
+    if compiled is None:
+        print("cell skipped:", rec.get("skipped"))
+        return rec
+    cost = HloCost(compiled.as_text(), detail=True,
+                   skip_byte_scopes=skip_byte_scopes)
+    s = cost.summary()
+    print(f"\n{arch} x {shape} x "
+          f"{'2x16x16' if multi_pod else '16x16'}   "
+          f"flops/dev {s['flops']:.3e}  bytes/dev {s['bytes']:.3e}  "
+          f"coll/dev {s['collectives']['total_link_bytes']:.3e}")
+    for kind in ("all-reduce", "all-gather", "reduce-scatter",
+                 "all-to-all", "bytes"):
+        rows = cost.top(kind, top)
+        if not rows:
+            continue
+        print(f"\n top {kind}:")
+        for amount, op, name in rows:
+            print(f"  {amount:11.3e}  {op:10s} {name[:110]}")
+    return {"record": rec, "summary": s}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fused-attn", action="store_true",
+                    help="model Pallas-fused attention (skip its bytes)")
+    ap.add_argument("--top", type=int, default=14)
+    args = ap.parse_args()
+    scopes = ("fused_attention",) if args.fused_attn else ()
+    profile(args.arch, args.shape, args.multi_pod, scopes, args.top)
+
+
+if __name__ == "__main__":
+    main()

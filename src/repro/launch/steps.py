@@ -1,0 +1,225 @@
+"""Arch-agnostic step builders shared by dryrun / train / serve.
+
+``build_train_step`` returns a pure ``(state, batch) -> (state, metrics)``
+function implementing the paper's SVI objective (ELBO = NLL + beta*KL of
+the Bayesian head) with gradient accumulation, global-norm clipping and
+AdamW.  ``build_prefill_step`` / ``build_decode_step`` wrap the model
+zoo's serving API; the decode step emits the paper's uncertainty triplet
+(H, SE, MI) per generated token from ``cfg.mc_samples`` MC head draws.
+
+``input_specs`` produces ShapeDtypeStruct stand-ins for every input of a
+given (arch x shape-cell), and ``*_pspecs`` the matching PartitionSpecs --
+this is everything the multi-pod dry-run lowers against (no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.core.svi import SVIConfig, elbo_loss
+from repro.models import registry as M
+from repro.optim import adamw
+from repro.launch import mesh as meshlib
+from repro.sharding.partition import param_pspecs, sanitize_pspecs
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                     svi_cfg: Optional[SVIConfig] = None,
+                     micro_batches: int = 1):
+    """(state, batch) -> (state, metrics); state = {params, opt}.
+
+    micro_batches > 1 scans over leading-dim splits of the batch,
+    accumulating grads in f32 (bounds activation memory; the MoE dispatch
+    buffer scales with the microbatch, DESIGN.md §5).
+    """
+    svi = svi_cfg or SVIConfig()
+
+    def loss_fn(params, batch, key, step):
+        return elbo_loss(lambda p, b, k: M.nll_loss(p, cfg, b, k),
+                         params, batch, key, step, svi)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        step = opt["step"]
+        key = jax.random.fold_in(jax.random.PRNGKey(0), step)
+
+        if micro_batches == 1:
+            (loss, aux), grads = grad_fn(params, batch, key, step)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(micro_batches, b // micro_batches,
+                                 *x.shape[1:])
+
+            mbatches = jax.tree.map(split, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb_step(carry, mb):
+                g_acc, l_acc, i = carry
+                (l, aux), g = grad_fn(params, mb,
+                                      jax.random.fold_in(key, i), step)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l, i + 1), aux
+
+            (grads, loss, _), auxs = jax.lax.scan(
+                mb_step, (g0, jnp.zeros(()), jnp.zeros((), jnp.int32)),
+                mbatches)
+            inv = 1.0 / micro_batches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss * inv
+            aux = jax.tree.map(lambda a: a.mean(0), auxs)
+
+        new_params, new_opt, om = adamw.apply_updates(
+            params, grads, opt, opt_cfg)
+        metrics = {"loss": loss, **aux, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg: ArchConfig, max_len: int):
+    def prefill_step(params, batch):
+        modality = batch.get("frames", batch.get("prefix_embeds"))
+        hidden, cache = M.prefill(params, cfg, batch["tokens"], max_len,
+                                  modality)
+        return hidden, cache
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ArchConfig):
+    def decode_step(params, token, cache, step):
+        key = jax.random.fold_in(jax.random.PRNGKey(17), step)
+        return M.decode_step(params, cfg, token, cache, key)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs + shardings
+# ---------------------------------------------------------------------------
+
+def train_state_specs(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig):
+    params = M.init_params_shape(cfg)
+    opt = jax.eval_shape(lambda p: adamw.init_state(p, opt_cfg), params)
+    return {"params": params, "opt": opt}
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    if cell.kind == "train":
+        return {"batch": M.make_batch_specs(cfg, cell.global_batch,
+                                            cell.seq_len)}
+    if cell.kind == "prefill":
+        return {"batch": M.make_batch_specs(cfg, cell.global_batch,
+                                            cell.seq_len)}
+    # decode: one new token against a seq_len-deep cache
+    cache = jax.eval_shape(
+        lambda: M.make_cache(cfg, cell.global_batch, cell.seq_len))
+    return {
+        "token": jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32),
+        "cache": cache,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def batch_pspecs(mesh: Mesh, specs: dict) -> dict:
+    """Data batches shard their leading (global batch) dim over DP axes."""
+    out = {}
+    for name, s in specs.items():
+        dims = ["batch"] + [None] * (len(s.shape) - 1)
+        out[name] = meshlib.spec_if(mesh, s.shape, *dims)
+    return out
+
+
+_CACHE_AXES = {
+    # leaf-name -> axis roles per trailing dims (L, B, S, H, D) etc.
+    "k": ("layer", "batch", "seq", "heads", None),
+    "v": ("layer", "batch", "seq", "heads", None),
+    "attn_k": ("layer", "batch", "seq", "heads", None),
+    "attn_v": ("layer", "batch", "seq", "heads", None),
+    "ck": ("layer", "batch", "seq", "heads", None),
+    "cv": ("layer", "batch", "seq", "heads", None),
+    "conv": ("layer", "batch", None, "model_dim"),
+    "ssm": ("layer", "batch", "heads", None, None),
+    "len": (),
+}
+
+
+def cache_pspecs(mesh: Mesh, cache_specs: Any) -> Any:
+    """KV/SSM cache shardings with divisibility-aware fallbacks.
+
+    Preference order per leaf: batch over DP axes; heads/model_dim over
+    the model axis.  If the batch dim does not divide (long_500k, B=1),
+    the sequence dim takes the DP axes instead (sequence parallelism for
+    the long-context KV cache).
+    """
+
+    def leaf_spec(path, s):
+        name = path[-1] if path else ""
+        roles = _CACHE_AXES.get(name, (None,) * len(s.shape))
+        dims: list = []
+        batch_taken = False
+        for size, role in zip(s.shape, roles):
+            if role == "batch" and meshlib.shardable(
+                    size, mesh, meshlib.batch_axes(mesh)):
+                dims.append("batch")
+                batch_taken = True
+            elif role == "seq" and not batch_taken and meshlib.shardable(
+                    size, mesh, meshlib.batch_axes(mesh)):
+                dims.append("batch")
+                batch_taken = True
+            elif role in ("heads", "model_dim") and meshlib.shardable(
+                    size, mesh, "model"):
+                dims.append("model")
+            else:
+                dims.append(None)
+        return meshlib.spec_if(mesh, s.shape, *dims)
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_specs)[0]
+    specs = {}
+    for kp, leaf in flat:
+        path = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in kp)
+        specs[path] = leaf_spec(path, leaf)
+
+    def walk(path, node):
+        if isinstance(node, dict):
+            return {k: walk(path + (k,), v) for k, v in node.items()}
+        return specs[path]
+
+    return walk((), cache_specs)
+
+
+def state_pspecs(cfg: ArchConfig, mesh: Mesh, state_specs: dict) -> dict:
+    """Partition specs for {params, opt}: params by the name rules, opt
+    moments like their params (ZeRO: FSDP axis shards moments too)."""
+    fsdp = cfg.fsdp_params and "data" in mesh.axis_names
+    pod_fsdp = fsdp and "pod" in mesh.axis_names
+    pspec = param_pspecs(state_specs["params"], fsdp=fsdp,
+                         pod_fsdp=pod_fsdp)
+    pspec = sanitize_pspecs(pspec, state_specs["params"], mesh)
+    opt = state_specs["opt"]
+    out_opt: dict = {"mu": pspec, "nu": pspec, "step": P()}
+    if "error" in opt:
+        out_opt["error"] = pspec
+    return {"params": pspec, "opt": out_opt}

@@ -1,0 +1,164 @@
+"""The paper's hand-crafted hybrid BNN (Fig. 3).
+
+DenseNet-style concat skip connections + MobileNetV1 depthwise-separable
+(DWS) convolutions, six conv layers + a final linear head.  Exactly ONE
+probabilistic block (partial stochasticity, ref. 15): the depthwise 3x3
+conv of the marked DWS block — the natural photonic mapping, since each
+depthwise channel kernel has 9 weights == the machine's 9 spectral
+channels, and full grouping minimizes unique weights ('favoring highly
+grouped convolutions', paper §BNN).
+
+Three forward modes:
+  * 'surrogate' — training: Gaussian draw + STE quantization + sigma
+    clamped to the machine-realizable band (core.surrogate).
+  * 'machine'   — prediction on the digital twin: Gamma(M) ASE statistics
+    + DAC/ADC quantization, mirroring the paper swapping its surrogate
+    for the photonic hardware. On TPU this block routes through
+    kernels/bayes_matmul (im2col fusion).
+  * 'mean'      — deterministic baseline (MAP network) for ablations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import entropy as E
+from repro.core.bayesian import GaussianVariational
+from repro.core.photonic import quantize_ste
+from repro.core.surrogate import SurrogateSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class BNNConfig:
+    num_classes: int = 7
+    in_channels: int = 3
+    width: int = 16                 # base channel count
+    image_size: int = 28
+    mc_samples: int = 10            # paper: N=10
+    prob_block: int = 3             # which block carries the variational dw
+    init_sigma: float = 0.08
+
+
+def _conv(key, cin, cout, kh=3, kw=3, groups=1):
+    fan = cin // groups * kh * kw
+    return (jax.random.normal(key, (cout, cin // groups, kh, kw))
+            / jnp.sqrt(float(fan)))
+
+
+def conv2d(x, w, groups=1, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", feature_group_count=groups,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def init_params(key, cfg: BNNConfig):
+    """Six conv layers in four blocks: A(std conv), DWS, DWS(prob), DWS."""
+    ks = jax.random.split(key, 12)
+    w = cfg.width
+    c0 = cfg.in_channels
+    p = {}
+    # block 0: standard 3x3 conv (1 conv layer)
+    p["b0"] = {"w": _conv(ks[0], c0, w)}
+    c = w + c0                                     # concat skip
+    # blocks 1..3: DWS (2 conv layers each... depthwise + pointwise)
+    chans = [w * 2, w * 3, w * 4]
+    for i, co in enumerate(chans, start=1):
+        kd, kp_ = jax.random.split(ks[i + 1])
+        dw = _conv(kd, c, c, groups=c)             # (C, 1, 3, 3)
+        if i == cfg.prob_block:
+            p[f"b{i}"] = {
+                "dw": GaussianVariational(
+                    mu=dw, rho=jnp.full(dw.shape,
+                                        float(jnp.log(jnp.expm1(
+                                            jnp.array(cfg.init_sigma)))))),
+                "pw": _conv(kp_, c, co, 1, 1),
+            }
+        else:
+            p[f"b{i}"] = {"dw": dw, "pw": _conv(kp_, c, co, 1, 1)}
+        c = co + c                                 # concat skip
+    p["head"] = {"w": (jax.random.normal(ks[8], (c, cfg.num_classes))
+                       / jnp.sqrt(float(c))),
+                 "b": jnp.zeros((cfg.num_classes,))}
+    return p
+
+
+def _dw_weights(q: GaussianVariational, key, mode: str,
+                spec: SurrogateSpec):
+    """Sample the probabilistic depthwise weights according to mode."""
+    if mode == "mean":
+        return q.mu
+    if mode == "surrogate":
+        eps = jax.random.normal(key, q.mu.shape)
+        return spec.apply_weight(q, eps)
+    if mode == "machine":
+        # ASE Gamma(M) statistics at the programmed bandwidth + DAC grid
+        sigma = spec.realizable_sigma(q.mu, q.sigma)
+        rel = sigma / jnp.maximum(jnp.abs(q.mu), 1e-6)
+        m = E.modes_from_bandwidth(E.bandwidth_for_relstd(rel))
+        gam = jax.random.gamma(key, m) / m
+        eps = (gam - 1.0) * jnp.sqrt(m)
+        w = q.mu + sigma * eps
+        return quantize_ste(w, spec.machine.dac_bits,
+                            spec.machine.weight_range)
+    raise ValueError(mode)
+
+
+def apply(params, cfg: BNNConfig, x: jax.Array, key: jax.Array,
+          mode: str = "surrogate",
+          spec: SurrogateSpec = SurrogateSpec()) -> jax.Array:
+    """x: (B, C, H, W) in [0, 1] -> logits (B, num_classes)."""
+    act = jax.nn.gelu
+    h = act(conv2d(x, params["b0"]["w"]))
+    h = jnp.concatenate([h, x], axis=1)
+    h = jax.lax.reduce_window(                    # 2x2 avg pool
+        h, 0.0, jax.lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID") / 4.0
+    for i in (1, 2, 3):
+        bp = params[f"b{i}"]
+        cin = h.shape[1]
+        if isinstance(bp["dw"], GaussianVariational):
+            kd = jax.random.fold_in(key, i)
+            dw = _dw_weights(bp["dw"], kd, mode, spec)
+            hin = spec.apply_input(jnp.clip(h, -1.0, 1.0)) \
+                if mode != "mean" else h
+            hd = conv2d(hin, dw, groups=cin)
+            if mode != "mean":
+                hd = spec.apply_output(hd)        # ADC on the way back
+        else:
+            hd = conv2d(h, bp["dw"], groups=cin)
+        hp = act(conv2d(hd, bp["pw"], 1))         # pointwise 1x1
+        h = jnp.concatenate([hp, h], axis=1)
+        if i < 3:
+            h = jax.lax.reduce_window(
+                h, 0.0, jax.lax.add, (1, 1, 2, 2), (1, 1, 2, 2),
+                "VALID") / 4.0
+    h = h.mean(axis=(2, 3))                        # global average pool
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def mc_predict(params, cfg: BNNConfig, x: jax.Array, key: jax.Array,
+               mode: str = "machine",
+               spec: SurrogateSpec = SurrogateSpec()) -> jax.Array:
+    """N stochastic forward passes -> probs (N, B, classes) (paper N=10)."""
+    keys = jax.random.split(key, cfg.mc_samples)
+    logits = jax.vmap(
+        lambda k: apply(params, cfg, x, k, mode=mode, spec=spec))(keys)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def nll_fn(cfg: BNNConfig, spec: SurrogateSpec = SurrogateSpec()):
+    """ELBO-compatible NLL closure for core.svi.elbo_loss."""
+
+    def nll(params, batch, key):
+        logits = apply(params, cfg, batch["images"], key,
+                       mode="surrogate", spec=spec)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(
+            logp, batch["labels"][:, None], axis=-1).mean()
+        acc = (logits.argmax(-1) == batch["labels"]).mean()
+        return nll, {"accuracy": acc}
+
+    return nll

@@ -1,0 +1,207 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+Per the assignment, the modality frontend is a STUB: the encoder consumes
+precomputed speech-frame embeddings (B, S_enc, d) from ``input_specs``.
+The encoder is bidirectional self-attention; the decoder interleaves causal
+self-attention (KV-cached at decode), cross-attention over the encoder
+memory (cross-KV computed once at prefill), and the MLP.  The Bayesian
+variational head sits on the decoder output (paper technique, §DESIGN 4).
+
+Encoder length is fixed at ``ENC_LEN`` (speech encoders emit a
+near-constant frame count); the shape-cell seq_len applies to the decoder.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.uncertainty import uncertainty_from_logits
+from repro.models import layers as L
+from repro.sharding.partition import constrain
+
+ENC_LEN = 1024
+
+
+def init_enc_block(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+            "attn": L.init_attention(k1, cfg),
+            "ln2": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+            "mlp": L.init_mlp(k2, cfg)}
+
+
+def init_dec_block(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+            "self_attn": L.init_attention(k1, cfg),
+            "ln_x": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+            "cross_attn": L.init_attention(k2, cfg),
+            "ln2": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+            "mlp": L.init_mlp(k3, cfg)}
+
+
+def init_params(key, cfg: ArchConfig):
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    n_enc = cfg.encoder_layers or cfg.num_layers
+    n_dec = cfg.decoder_layers or cfg.num_layers
+    enc = jax.vmap(lambda k: init_enc_block(k, cfg))(
+        jax.random.split(kenc, n_enc))
+    dec = jax.vmap(lambda k: init_dec_block(k, cfg))(
+        jax.random.split(kdec, n_dec))
+    return {"embed": L.init_embed(ke, cfg),
+            "encoder": enc, "decoder": dec,
+            "enc_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+            "final_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+            "head": L.init_head(kh, cfg)}
+
+
+def encode(params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, d) stub frontend embeddings -> encoder memory."""
+    x = frames.astype(L.dtype_of(cfg))
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def scan_step(x, bp):
+        def body(xx):
+            h, _ = L.apply_attention(bp["attn"], cfg,
+                                     L.rms_norm(xx, bp["ln1"]),
+                                     positions=positions, causal=False)
+            xx = xx + h
+            return xx + L.apply_mlp(bp["mlp"], cfg,
+                                    L.rms_norm(xx, bp["ln2"]))
+        y = jax.checkpoint(body, prevent_cse=False)(x) if cfg.remat \
+            else body(x)
+        return y, None
+
+    x, _ = jax.lax.scan(scan_step, x, params["encoder"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(bp, cfg, x, positions, enc_out=None, cross_kv=None,
+               kv_cache=None, cache_len=None):
+    h, kv = L.apply_attention(bp["self_attn"], cfg,
+                              L.rms_norm(x, bp["ln1"]),
+                              positions=positions, causal=True,
+                              kv_cache=kv_cache, cache_len=cache_len)
+    x = x + h
+    if cross_kv is None:
+        cross_kv = L.make_cross_kv(bp["cross_attn"], cfg, enc_out)
+    hc, _ = L.apply_attention(bp["cross_attn"], cfg,
+                              L.rms_norm(x, bp["ln_x"]),
+                              positions=positions, cross_kv=cross_kv)
+    x = x + hc
+    x = x + L.apply_mlp(bp["mlp"], cfg, L.rms_norm(x, bp["ln2"]))
+    return x, kv, cross_kv
+
+
+def decode_train(params, cfg: ArchConfig, tokens: jax.Array,
+                 enc_out: jax.Array) -> jax.Array:
+    x = L.apply_embed(params["embed"], tokens)
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def scan_step(x, bp):
+        def body(xx):
+            y, _, _ = _dec_block(bp, cfg, xx, positions, enc_out=enc_out)
+            return y
+        y = jax.checkpoint(body, prevent_cse=False)(x) if cfg.remat \
+            else body(x)
+        return y, None
+
+    x, _ = jax.lax.scan(scan_step, x, params["decoder"])
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def nll_loss(params, cfg: ArchConfig, batch: dict, key: jax.Array):
+    """batch: {frames (B,S_enc,d), tokens (B,S), labels (B,S)}."""
+    enc_out = encode(params, cfg, batch["frames"])
+    hidden = decode_train(params, cfg, batch["tokens"], enc_out)
+    head = params["head"]
+    if "q" in head:
+        eps = jax.random.normal(key, head["q"].mu.shape, jnp.float32)
+        w = head["q"].sample_with_eps(eps)
+        logits = jnp.dot(hidden, w.astype(hidden.dtype),
+                         preferred_element_type=jnp.float32)
+    else:
+        logits = L.head_logits_mean(head, hidden, cfg)
+    logits = constrain(logits, "batch", None, "model")
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tok = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, tok, 0.0).sum() / jnp.maximum(valid.sum(), 1)
+    acc = ((logits.argmax(-1) == labels) & valid).sum() / \
+        jnp.maximum(valid.sum(), 1)
+    return nll, {"accuracy": acc}
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or L.dtype_of(cfg)
+    n_dec = cfg.decoder_layers or cfg.num_layers
+    kv = (n_dec, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    cross = (n_dec, batch, ENC_LEN, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
+            "ck": jnp.zeros(cross, dt), "cv": jnp.zeros(cross, dt),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int,
+            frames: jax.Array):
+    """Encode frames, precompute cross-KV, run decoder prompt."""
+    enc_out = encode(params, cfg, frames)
+    x = L.apply_embed(params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def scan_step(x, bp):
+        y, kv, ckv = _dec_block(bp, cfg, x, positions, enc_out=enc_out)
+        return y, (kv, ckv)
+
+    x, (kvs, ckvs) = jax.lax.scan(scan_step, x, params["decoder"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    Sq = tokens.shape[1]
+    pad = max_len - Sq
+    k = jnp.pad(kvs[0], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(kvs[1], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": k, "v": v, "ck": ckvs[0], "cv": ckvs[1],
+             "len": jnp.asarray(Sq, jnp.int32)}
+    return x[:, -1], cache
+
+
+def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
+                key: jax.Array):
+    x = L.apply_embed(params["embed"], token[:, None])
+    x = constrain(x, "batch", None, None)
+    cache_len = cache["len"]
+    pos = jnp.reshape(cache_len, (1, 1))
+
+    def scan_step(x, bpkv):
+        bp, k, v, ck, cv = bpkv
+        y, kv, _ = _dec_block(bp, cfg, x, pos, cross_kv=(ck, cv),
+                              kv_cache=(k, v), cache_len=cache_len)
+        return y, kv
+
+    x, kvs = jax.lax.scan(
+        scan_step, x,
+        (params["decoder"], cache["k"], cache["v"], cache["ck"],
+         cache["cv"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    hidden = x[:, 0]
+    head = params["head"]
+    if "q" in head:
+        xi = jax.random.normal(
+            key, (cfg.mc_samples, hidden.shape[0], cfg.vocab_size),
+            jnp.float32)
+        logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
+    else:
+        logits = L.head_logits_mean(head, hidden, cfg)[None]
+    unc = uncertainty_from_logits(logits)
+    outputs = {"next_token": unc["p_mean"].argmax(-1).astype(jnp.int32),
+               "H": unc["H"], "SE": unc["SE"], "MI": unc["MI"],
+               "p_max": unc["p_mean"].max(-1)}
+    return outputs, {"k": kvs[0], "v": kvs[1], "ck": cache["ck"],
+                     "cv": cache["cv"], "len": cache_len + 1}

@@ -1,0 +1,204 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block
+applied every ``attn_every`` layers (arXiv:2411.15242).
+
+The shared block (attention + MLP, one set of weights reused at every
+application depth) is the Zamba trick: global-context mixing at a fraction
+of the parameter cost.  Implementation: scan over the stacked Mamba blocks
+with a ``lax.cond`` that fires the shared block whenever
+``layer_idx % attn_every == 0`` — the HLO stays O(1) in depth and only one
+branch executes at runtime.
+
+Decode keeps: per-layer Mamba (ssm, conv) states + per-APPLICATION KV
+caches for the shared attention (same weights, distinct activations =>
+distinct cache per application depth).  Mamba carries the long context;
+attention applications see the full cache — decode attention is O(S) per
+token, which is why this arch runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.uncertainty import uncertainty_from_logits
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.sharding.partition import constrain
+
+
+def n_attn_apps(cfg: ArchConfig) -> int:
+    return (cfg.num_layers + cfg.attn_every - 1) // cfg.attn_every
+
+
+def init_params(key, cfg: ArchConfig):
+    ke, kb, ka, km, kh = jax.random.split(key, 5)
+    blocks = jax.vmap(lambda k: S.init_block(k, cfg))(
+        jax.random.split(kb, cfg.num_layers))
+    shared = {
+        "ln1": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+        "attn": L.init_attention(ka, cfg),
+        "ln2": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+        "mlp": L.init_mlp(km, cfg),
+    }
+    return {"embed": L.init_embed(ke, cfg), "blocks": blocks,
+            "shared": shared,
+            "final_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+            "head": L.init_head(kh, cfg)}
+
+
+def _shared_fwd(sp, cfg, x, positions):
+    h, kv = L.apply_attention(sp["attn"], cfg, L.rms_norm(x, sp["ln1"]),
+                              positions=positions, causal=True)
+    x = x + h
+    x = x + L.apply_mlp(sp["mlp"], cfg, L.rms_norm(x, sp["ln2"]))
+    return x, kv
+
+
+def forward(params, cfg: ArchConfig, tokens: jax.Array):
+    x = L.apply_embed(params["embed"], tokens)
+    x = constrain(x, "batch", None, None)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    sp = params["shared"]
+
+    def scan_step(x, idx_bp):
+        idx, bp = idx_bp
+
+        def body(xx):
+            y = jax.lax.cond(
+                idx % cfg.attn_every == 0,
+                lambda v: _shared_fwd(sp, cfg, v, positions)[0],
+                lambda v: v, xx)
+            y, _, _ = S.apply_block(bp, cfg, y)
+            return y
+
+        y = jax.checkpoint(body, prevent_cse=False)(x) if cfg.remat \
+            else body(x)
+        return y, None
+
+    idxs = jnp.arange(cfg.num_layers)
+    x, _ = jax.lax.scan(scan_step, x, (idxs, params["blocks"]))
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def nll_loss(params, cfg: ArchConfig, batch: dict, key: jax.Array):
+    hidden = forward(params, cfg, batch["tokens"])
+    head = params["head"]
+    if "q" in head:
+        eps = jax.random.normal(key, head["q"].mu.shape, jnp.float32)
+        w = head["q"].sample_with_eps(eps)
+        logits = jnp.dot(hidden, w.astype(hidden.dtype),
+                         preferred_element_type=jnp.float32)
+    else:
+        logits = L.head_logits_mean(head, hidden, cfg)
+    logits = constrain(logits, "batch", None, "model")
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tok = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, tok, 0.0).sum() / jnp.maximum(valid.sum(), 1)
+    acc = ((logits.argmax(-1) == labels) & valid).sum() / \
+        jnp.maximum(valid.sum(), 1)
+    return nll, {"accuracy": acc}
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    d_in, H, P, N = S.dims(cfg)
+    dt = dtype or L.dtype_of(cfg)
+    A = n_attn_apps(cfg)
+    return {
+        "ssm": jnp.zeros((cfg.num_layers, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv_width - 1,
+                           d_in + 2 * N), dt),
+        "attn_k": jnp.zeros((A, batch, max_len, cfg.num_kv_heads,
+                             cfg.head_dim), dt),
+        "attn_v": jnp.zeros((A, batch, max_len, cfg.num_kv_heads,
+                             cfg.head_dim), dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int):
+    """Prefill with python-level loop over attention applications (static
+    count) + scanned mamba groups — keeps caches per application."""
+    x = L.apply_embed(params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    sp = params["shared"]
+    A = n_attn_apps(cfg)
+    Sq = tokens.shape[1]
+    ks, vs, hs, cs = [], [], [], []
+    for a in range(A):
+        lo = a * cfg.attn_every
+        hi = min(lo + cfg.attn_every, cfg.num_layers)
+        x, kv = _shared_fwd(sp, cfg, x, positions)
+        pad = max_len - Sq
+        ks.append(jnp.pad(kv[0], ((0, 0), (0, pad), (0, 0), (0, 0))))
+        vs.append(jnp.pad(kv[1], ((0, 0), (0, pad), (0, 0), (0, 0))))
+        grp = jax.tree.map(lambda p: p[lo:hi], params["blocks"])
+
+        def scan_step(x, bp):
+            y, h, c = S.apply_block(bp, cfg, x)
+            return y, (h, c)
+
+        x, (h, c) = jax.lax.scan(scan_step, x, grp)
+        hs.append(h)
+        cs.append(c)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    cache = {"ssm": jnp.concatenate(hs, 0), "conv": jnp.concatenate(cs, 0),
+             "attn_k": jnp.stack(ks), "attn_v": jnp.stack(vs),
+             "len": jnp.asarray(Sq, jnp.int32)}
+    return x[:, -1], cache
+
+
+def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
+                key: jax.Array):
+    x = L.apply_embed(params["embed"], token[:, None])
+    x = constrain(x, "batch", None, None)
+    sp = params["shared"]
+    cache_len = cache["len"]
+    A = n_attn_apps(cfg)
+    new_k, new_v, new_h, new_c = [], [], [], []
+    for a in range(A):
+        lo = a * cfg.attn_every
+        hi = min(lo + cfg.attn_every, cfg.num_layers)
+        pos = jnp.reshape(cache_len, (1, 1))
+        h_att, kv = L.apply_attention(
+            sp["attn"], cfg, L.rms_norm(x, sp["ln1"]), positions=pos,
+            kv_cache=(cache["attn_k"][a], cache["attn_v"][a]),
+            cache_len=cache_len)
+        x = x + h_att
+        x = x + L.apply_mlp(sp["mlp"], cfg, L.rms_norm(x, sp["ln2"]))
+        new_k.append(kv[0])
+        new_v.append(kv[1])
+        grp = jax.tree.map(lambda p: p[lo:hi], params["blocks"])
+        hgrp = cache["ssm"][lo:hi]
+        cgrp = cache["conv"][lo:hi]
+
+        def scan_step(x, bpstate):
+            bp, h, c = bpstate
+            y, h2, c2 = S.apply_block(bp, cfg, x, ssm_state=h, conv_state=c)
+            return y, (h2, c2)
+
+        x, (h2, c2) = jax.lax.scan(scan_step, x, (grp, hgrp, cgrp))
+        new_h.append(h2)
+        new_c.append(c2)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    hidden = x[:, 0]
+    head = params["head"]
+    if "q" in head:
+        xi = jax.random.normal(
+            key, (cfg.mc_samples, hidden.shape[0], cfg.vocab_size),
+            jnp.float32)
+        logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
+    else:
+        logits = L.head_logits_mean(head, hidden, cfg)[None]
+    unc = uncertainty_from_logits(logits)
+    outputs = {"next_token": unc["p_mean"].argmax(-1).astype(jnp.int32),
+               "H": unc["H"], "SE": unc["SE"], "MI": unc["MI"],
+               "p_max": unc["p_mean"].max(-1)}
+    new_cache = {"ssm": jnp.concatenate(new_h, 0),
+                 "conv": jnp.concatenate(new_c, 0),
+                 "attn_k": jnp.stack(new_k), "attn_v": jnp.stack(new_v),
+                 "len": cache_len + 1}
+    return outputs, new_cache

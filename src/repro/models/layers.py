@@ -1,0 +1,355 @@
+"""Shared model layers: norms, RoPE, flash-style attention, MLPs, heads.
+
+Pure-functional: ``init_*`` builds param pytrees (plain dicts), ``apply``
+functions are jit/scan/remat friendly.  All matmuls keep a bf16 storage /
+f32 accumulation policy via ``preferred_element_type``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.bayesian import GaussianVariational
+
+
+def dtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _mm(x, w):
+    # output dtype == activation dtype: the MXU still accumulates f32
+    # internally, but the PARTIAL-SUM output of sharded contractions is
+    # bf16, so GSPMD's row-parallel all-reduces move bf16 not f32
+    # (2x collective bytes; Megatron's 'bf16 reduce' — §Perf/grok it.5).
+    return jnp.dot(x, w, preferred_element_type=x.dtype)
+
+
+def he_init(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)
+            / jnp.sqrt(float(max(fan_in, 1)))).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# flash-style chunked attention (pure jnp online softmax)
+# --------------------------------------------------------------------------
+
+def _attn_chunk_spec(nq: int, B: int, H: int):
+    """Sharding for the (nq, B, qc, H, D) q-chunk stack.
+
+    Heads shard over 'model' when they divide; otherwise the q-CHUNK axis
+    takes the model axis (sequence-parallel attention).  GQA archs whose
+    head counts don't divide the 16-way model axis (qwen2-7b: 28H) force
+    GSPMD into per-tile score all-reduces under head sharding — the
+    chunk-parallel layout keeps every score tile device-local
+    (EXPERIMENTS.md §Perf/qwen2_7b-prefill).
+    """
+    from repro.sharding.partition import get_mesh
+    mesh = get_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    msize = mesh.shape["model"]
+    if H % msize == 0:
+        return (None, "batch", None, "model", None)
+    if nq % msize == 0:
+        return ("model", "batch", None, None, None)
+    return (None, "batch", None, None, None)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_chunk: int = 512,
+                    kv_chunk: int = 1024,
+                    q_offset: int = 0) -> jax.Array:
+    """Memory-bounded attention (flash-style online softmax).
+
+    q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D) with H % Hkv == 0 (GQA).
+    Online-softmax over kv chunks (sequential scan), VMAPPED over q
+    chunks — q chunks are independent, so the chunk axis is shardable
+    (sequence parallelism) and XLA may batch it.  Peak score buffer is
+    (chunks_local, B, H, q_chunk, kv_chunk).
+
+    The whole body runs under ``jax.named_scope('fused_attention')``: on
+    TPU this region maps to the Pallas kernel
+    ``kernels/flash_attention.py`` (same tiling, VMEM-resident score
+    tiles); the roofline accounting uses the scope to model the fused
+    kernel's HBM traffic (launch.hlo_cost skip_byte_scopes).
+
+    ``q_offset``: absolute position of q[0] (prefill continuation).
+    """
+    from repro.sharding.partition import constrain
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    rep = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Sk)
+    # pad to chunk multiples
+    pq = (-Sq) % qc
+    pk = (-Sk) % kc
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // qc, kp.shape[1] // kc
+    qb = qp.reshape(B, nq, qc, H, D).transpose(1, 0, 2, 3, 4)
+    kb = kp.reshape(B, nk, kc, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, kc, Hkv, D).transpose(1, 0, 2, 3, 4)
+    spec = _attn_chunk_spec(nq, B, H)
+    if spec is not None:
+        qb = constrain(qb, *spec)
+
+    with jax.named_scope("fused_attention"):
+        def q_step(qi, blk):                               # (), (B,qc,H,D)
+            qpos = q_offset + qi * qc + jnp.arange(qc)
+
+            def kv_step(carry, kj_blks):
+                m, l, acc = carry
+                kj, kblk, vblk = kj_blks
+                kk = jnp.repeat(kblk, rep, axis=2)         # (B,kc,H,D)
+                vv = jnp.repeat(vblk, rep, axis=2)
+                s = jnp.einsum("bqhd,bkhd->bhqk", blk, kk,
+                               preferred_element_type=jnp.float32) * scale
+                kp_abs = kj * kc + jnp.arange(kc)
+                mask = kp_abs < Sk
+                if causal:
+                    mask = mask[None, :] & \
+                        (kp_abs[None, :] <= qpos[:, None])
+                else:
+                    mask = jnp.broadcast_to(mask[None, :], (qc, kc))
+                s = jnp.where(mask[None, None], s, -jnp.inf)
+                m2 = jnp.maximum(m, s.max(axis=-1))
+                # guard rows with no valid keys yet
+                m2s = jnp.where(jnp.isinf(m2), 0.0, m2)
+                p = jnp.exp(s - m2s[..., None])
+                p = jnp.where(mask[None, None], p, 0.0)
+                corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m2s))
+                l2 = l * corr + p.sum(axis=-1)
+                acc2 = acc * corr[..., None] + jnp.einsum(
+                    "bhqk,bkhd->bhqd", p, vv,
+                    preferred_element_type=jnp.float32)
+                return (m2, l2, acc2), None
+
+            m0 = jnp.full((B, H, qc), -jnp.inf, jnp.float32)
+            l0 = jnp.zeros((B, H, qc), jnp.float32)
+            a0 = jnp.zeros((B, H, qc, D), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0), (jnp.arange(nk), kb, vb))
+            out = acc / jnp.maximum(l, 1e-20)[..., None]
+            return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+        outs = jax.vmap(q_step)(jnp.arange(nq), qb)        # (nq,B,qc,H,D)
+
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * qc, H, D)
+    return out[:, :Sq]
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array) -> jax.Array:
+    """Single-token attention against a (B, S, Hkv, D) cache.
+
+    q: (B, 1, H, D); cache_len: () or (B,) number of valid cache slots.
+    GQA via grouped einsum — NOT jnp.repeat, which would materialize the
+    KV cache rep x (H/Hkv-fold HBM read amplification at decode).
+    """
+    B, S, Hkv, D = k_cache.shape
+    H = q.shape[2]
+    rep = H // Hkv
+    qg = q.reshape(B, 1, Hkv, rep, D)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(
+                       jnp.float32(D))
+    pos = jnp.arange(S)
+    mask = pos[None, :] < jnp.reshape(cache_len, (-1, 1))
+    s = jnp.where(mask[:, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention block (GQA, optional QKV bias, RoPE)
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hd, H, Hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    p = {
+        "wq": he_init(ks[0], (d, H * hd), d, dt),
+        "wk": he_init(ks[1], (d, Hkv * hd), d, dt),
+        "wv": he_init(ks[2], (d, Hkv * hd), d, dt),
+        "wo": he_init(ks[3], (H * hd, d), H * hd, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((Hkv * hd,), dt)
+        p["bv"] = jnp.zeros((Hkv * hd,), dt)
+    return p
+
+
+def apply_attention(p, cfg: ArchConfig, x: jax.Array, *,
+                    positions: jax.Array, causal: bool = True,
+                    kv_cache: Optional[tuple] = None,
+                    cache_len: Optional[jax.Array] = None,
+                    cross_kv: Optional[tuple] = None):
+    """Returns (out, new_kv) where new_kv is the updated (k, v) cache slot
+    content for decode, or the computed (k, v) for prefill, or None."""
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _mm(x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, H, hd)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = flash_attention(q, k, v, causal=False,
+                              q_chunk=cfg.attn_q_chunk,
+                              kv_chunk=cfg.attn_kv_chunk)
+        new_kv = None
+    else:
+        k = _mm(x, p["wk"])
+        v = _mm(x, p["wv"])
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        k = k.reshape(B, S, Hkv, hd)
+        v = v.reshape(B, S, Hkv, hd)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if kv_cache is not None:
+            kc, vc = kv_cache
+            idx = jnp.reshape(cache_len, ())
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, idx, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, idx, axis=1)
+            out = decode_attention(q, kc, vc, cache_len + S)
+            new_kv = (kc, vc)
+        else:
+            out = flash_attention(q, k, v, causal=causal,
+                                  q_chunk=cfg.attn_q_chunk,
+                                  kv_chunk=cfg.attn_kv_chunk,
+                                  q_offset=0)
+            new_kv = (k, v)
+    out = out.reshape(B, S, H * hd)
+    return _mm(out, p["wo"]), new_kv
+
+
+def make_cross_kv(p, cfg: ArchConfig, enc_out: jax.Array):
+    """Precompute cross-attention K/V from encoder output (no RoPE)."""
+    B, S, _ = enc_out.shape
+    Hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = _mm(enc_out, p["wk"]).reshape(B, S, Hkv, hd)
+    v = _mm(enc_out, p["wv"]).reshape(B, S, Hkv, hd)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# MLP (gated silu/gelu or nemotron squared-ReLU)
+# --------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig, d_model: Optional[int] = None,
+             d_ff: Optional[int] = None):
+    d = d_model or cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_activation == "relu2":
+        return {"w1": he_init(ks[0], (d, ff), d, dt),
+                "w2": he_init(ks[1], (ff, d), ff, dt)}
+    return {"w1": he_init(ks[0], (d, ff), d, dt),       # gate
+            "w3": he_init(ks[1], (d, ff), d, dt),       # up
+            "w2": he_init(ks[2], (ff, d), ff, dt)}      # down
+
+
+def apply_mlp(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.mlp_activation == "relu2":
+        h = _mm(x, p["w1"])
+        h = jnp.square(jax.nn.relu(h))
+        return _mm(h, p["w2"])
+    g = _mm(x, p["w1"])
+    u = _mm(x, p["w3"])
+    act = jax.nn.silu if cfg.mlp_activation == "silu" else jax.nn.gelu
+    return _mm(act(g) * u, p["w2"])
+
+
+# --------------------------------------------------------------------------
+# embeddings + (Bayesian) output head
+# --------------------------------------------------------------------------
+
+def init_embed(key, cfg: ArchConfig):
+    dt = dtype_of(cfg)
+    return {"table": he_init(key, (cfg.vocab_size, cfg.d_model),
+                             cfg.d_model, dt)}
+
+
+def apply_embed(p, tokens: jax.Array) -> jax.Array:
+    from repro.sharding.partition import constrain
+    x = jnp.take(p["table"], tokens, axis=0)
+    return constrain(x, "batch", None, None)
+
+
+def init_head(key, cfg: ArchConfig):
+    """Deterministic or Gaussian-variational output projection."""
+    if cfg.bayesian_head:
+        return {"q": GaussianVariational.init(
+            key, (cfg.d_model, cfg.vocab_size), fan_in=cfg.d_model,
+            init_sigma=cfg.head_init_sigma, dtype=jnp.float32)}
+    return {"w": he_init(key, (cfg.d_model, cfg.vocab_size), cfg.d_model,
+                         dtype_of(cfg))}
+
+
+def head_logits_mean(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Mean logits (training fwd uses MC draws via head_logits_sampled)."""
+    w = p["q"].mu if "q" in p else p["w"]
+    logits = jnp.dot(x, w.astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def head_logits_sampled(p, x: jax.Array, cfg: ArchConfig,
+                        xi: jax.Array) -> jax.Array:
+    """One LRT draw of the Bayesian head: x (..., d), xi (..., V).
+
+    This is the jnp form of kernels/lrt_matmul (kernel used on TPU).
+    """
+    if "q" not in p:
+        return head_logits_mean(p, x, cfg)
+    q = p["q"]
+    x32 = x.astype(jnp.float32)
+    mean = x32 @ q.mu
+    var = (x32 * x32) @ (q.sigma ** 2)
+    logits = mean + jnp.sqrt(jnp.maximum(var, 0.0)) * xi
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

@@ -1,0 +1,335 @@
+"""Mixture-of-Experts transformer (grok-1-314b, deepseek-moe-16b).
+
+Routing: softmax top-k with capacity-based dispatch.  Token positions per
+expert come from a cumsum over the routing one-hot (no sort), tokens are
+scattered into an (E, C, d) buffer, experts run as one batched einsum, and
+the combine weights scatter results back.  Capacity overflow drops tokens
+(standard GShard semantics) — the capacity factor and the auxiliary
+load-balancing loss keep drops rare.
+
+Expert parallelism: the (E, ...) expert weights shard over the ``model``
+mesh axis when ``expert_sharding == 'ep'`` (deepseek: 64 experts / 16-way
+model axis = 4 experts per group; the dispatch buffer's E axis is
+sharding-constrained so GSPMD inserts the dispatch/return all-to-alls).
+grok-1's 8 experts < 16-way axis, so it uses ``'tp'``: experts replicated
+over the axis with their ff dim tensor-parallel — no all-to-all, instead
+the usual TP reduce.
+
+DeepSeekMoE specifics (arXiv:2401.06066): fine-grained experts
+(moe_d_ff=1408 vs dense d_ff) + 2 shared experts always active.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.uncertainty import uncertainty_from_logits
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.sharding.partition import constrain, constrain_seq
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_experts(key, cfg: ArchConfig, num: int, d_ff: int):
+    dt = L.dtype_of(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+
+    def stack(k, shape, fan):
+        return (jax.random.normal(k, (num, *shape), jnp.float32)
+                / jnp.sqrt(float(fan))).astype(dt)
+
+    return {"w1": stack(ks[0], (d, d_ff), d),
+            "w3": stack(ks[1], (d, d_ff), d),
+            "w2": stack(ks[2], (d_ff, d), d_ff)}
+
+
+def init_block(key, cfg: ArchConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    eff = cfg.moe_d_ff or cfg.d_ff
+    ename = "experts_ep" if cfg.expert_sharding == "ep" else "experts_tp"
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+        "router": {"w": (jax.random.normal(
+            k2, (cfg.d_model, cfg.num_experts), jnp.float32) * 0.02)},
+        ename: _init_experts(k3, cfg, cfg.num_experts, eff),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = _init_experts(
+            k4, cfg, cfg.num_shared_experts, eff)
+    return p
+
+
+def init_params(key, cfg: ArchConfig):
+    ke, kb, kh = jax.random.split(key, 3)
+    block_keys = jax.random.split(kb, cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(block_keys)
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+        "head": L.init_head(kh, cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MoE layer
+# ---------------------------------------------------------------------------
+
+def _expert_ffn(ep, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """x: (..., E, C, d) -> (..., E, C, d), batched gated MLP over
+    experts (leading group axis broadcasts over the expert weights)."""
+    # partial-sum outputs in the activation dtype: the row-parallel (w2)
+    # all-reduce moves bf16 not f32 (§Perf/grok iteration 5)
+    g = jnp.einsum("...ecd,edf->...ecf", x, ep["w1"],
+                   preferred_element_type=x.dtype)
+    u = jnp.einsum("...ecd,edf->...ecf", x, ep["w3"],
+                   preferred_element_type=x.dtype)
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...ecf,efd->...ecd", h, ep["w2"],
+                      preferred_element_type=x.dtype)
+
+
+def _dispatch_groups(cfg: ArchConfig, total_tokens: int) -> int:
+    """Number of dispatch groups = DP shards (GShard-style local
+    dispatch).  Tokens never leave their data shard for the capacity
+    buffer; only the expert einsum communicates (EP all-to-all or TP
+    reduce).  Without a mesh context (unit tests) this is 1 group --
+    identical semantics, global capacity.
+    """
+    from repro.sharding.partition import get_mesh
+    mesh = get_mesh()
+    if mesh is None:
+        return 1
+    g = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            g *= mesh.shape[a]
+    while total_tokens % g and g > 1:       # safety for odd test shapes
+        g //= 2
+    return max(g, 1)
+
+
+def moe_ffn(bp, cfg: ArchConfig, x: jax.Array):
+    """x: (B, S, d) -> (y, aux_loss). Top-k capacity dispatch.
+
+    Grouped dispatch (perf iteration 1, EXPERIMENTS.md §Perf/grok):
+    tokens are dispatched into a (G, E, C, d) buffer whose group axis G
+    aligns with the DP sharding of the batch, so the scatter/gather is
+    LOCAL to each data shard (the naive global (E, C, d) buffer forced
+    GSPMD to all-reduce a replicated 32 GB scatter per layer).
+    """
+    B, S, d = x.shape
+    Tn = B * S
+    E, K = cfg.num_experts, cfg.top_k
+    G = _dispatch_groups(cfg, Tn)
+    Tg = Tn // G
+    C = max(int(Tg * K / E * cfg.capacity_factor), 8)
+    xg = x.reshape(G, Tg, d)                                   # B-major
+    xg = constrain(xg, "batch", None, None)
+
+    gate_logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                             bp["router"]["w"])
+    gates = jax.nn.softmax(gate_logits, axis=-1)               # (G, T, E)
+    topv, topi = jax.lax.top_k(gates, K)                       # (G, T, K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)        # (G,T,K,E)
+    f = onehot.sum(2).mean(1)                                  # (G, E)
+    p = gates.mean(1)
+    aux = E * jnp.sum(f * p, axis=-1).mean()
+
+    # position of each (token, k) within its expert queue, per group
+    oh_flat = onehot.reshape(G, Tg * K, E)
+    pos = jnp.sum((jnp.cumsum(oh_flat, axis=1) - 1.0) * oh_flat,
+                  axis=-1).reshape(G, Tg, K)
+    keep = pos < C                                             # capacity
+    eid = topi.reshape(G, Tg * K)
+    cid = jnp.where(keep, pos, C).reshape(G, Tg * K).astype(jnp.int32)
+
+    # per-group local scatter into (E, C+1, d); slot C = overflow bin
+    def scatter_group(xt, e, c):
+        tok_rep = jnp.repeat(xt, K, axis=0)                    # (T*K, d)
+        return jnp.zeros((E, C + 1, d), x.dtype).at[e, c].add(tok_rep)
+
+    buf = jax.vmap(scatter_group)(xg, eid, cid)                # (G,E,C+1,d)
+    buf = constrain(buf, "batch",
+                    "model" if cfg.expert_sharding == "ep" else None,
+                    None, None)
+    ep = bp["experts_ep"] if "experts_ep" in bp else bp["experts_tp"]
+    out_buf = _expert_ffn(ep, cfg, buf[:, :, :C])
+    out_buf = constrain(out_buf, "batch",
+                        "model" if cfg.expert_sharding == "ep" else None,
+                        None, None)
+    out_buf = jnp.pad(out_buf, ((0, 0), (0, 0), (0, 1), (0, 0)))
+
+    # gather back with combine weights, per group
+    def gather_group(ob, e, c, w):
+        y = ob[e, c]                                           # (T*K, d)
+        return (y * w[:, None]).reshape(Tg, K, d).sum(1)
+
+    w = (topv.reshape(G, Tg * K)
+         * keep.reshape(G, Tg * K)).astype(x.dtype)
+    y = jax.vmap(gather_group)(out_buf, eid, cid, w)           # (G, Tg, d)
+
+    if cfg.num_shared_experts:
+        sh = _expert_ffn(bp["shared"], cfg,
+                         jnp.broadcast_to(
+                             xg.reshape(1, Tn, d),
+                             (cfg.num_shared_experts, Tn, d)))
+        y = y + sh.sum(0).reshape(G, Tg, d)
+    return y.reshape(B, S, d), aux
+
+
+def _block_fwd(bp, cfg: ArchConfig, x, positions):
+    # sequence-parallel residual stream (see models/transformer.py)
+    h, _ = L.apply_attention(bp["attn"], cfg, L.rms_norm(x, bp["ln1"]),
+                             positions=positions, causal=True)
+    x = x + constrain_seq(h, cfg.seq_parallel)
+    x = constrain_seq(x, cfg.seq_parallel)
+    y, aux = moe_ffn(bp, cfg, L.rms_norm(x, bp["ln2"]))
+    x = x + constrain_seq(y, cfg.seq_parallel)
+    x = constrain_seq(x, cfg.seq_parallel)
+    return x, aux
+
+
+def forward(params, cfg: ArchConfig, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None):
+    x = L.apply_embed(params["embed"], tokens)
+    x = constrain(x, "batch", None, None)
+    x = constrain_seq(x, cfg.seq_parallel)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def scan_step(carry, bp):
+        x = carry
+        if cfg.remat:
+            y, aux = jax.checkpoint(
+                lambda b, xx: _block_fwd(b, cfg, xx, positions),
+                prevent_cse=False)(bp, x)
+        else:
+            y, aux = _block_fwd(bp, cfg, x, positions)
+        return y, aux
+
+    g = cfg.remat_group
+    if cfg.scan_layers and cfg.remat and g and cfg.num_layers % g == 0:
+        # hierarchical remat (see models/transformer.py)
+        grouped = jax.tree.map(
+            lambda a: a.reshape(cfg.num_layers // g, g, *a.shape[1:]),
+            params["blocks"])
+
+        def outer_step(x, bps):
+            def inner(xx, bp):
+                y, aux = _block_fwd(bp, cfg, xx, positions)
+                return y, aux
+
+            y, auxes = jax.checkpoint(
+                lambda b, xx: jax.lax.scan(inner, xx, b),
+                prevent_cse=False)(bps, x)
+            return y, auxes.mean()
+
+        x, auxes = jax.lax.scan(outer_step, x, grouped)
+    else:
+        x, auxes = jax.lax.scan(scan_step, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, auxes.mean()
+
+
+def nll_loss(params, cfg: ArchConfig, batch: dict, key: jax.Array,
+             aux_weight: float = 0.01):
+    hidden, aux = forward(params, cfg, batch["tokens"])
+    head = params["head"]
+    if "q" in head:
+        eps = jax.random.normal(key, head["q"].mu.shape, jnp.float32)
+        w = head["q"].sample_with_eps(eps)
+        logits = jnp.dot(hidden, w.astype(hidden.dtype),
+                         preferred_element_type=jnp.float32)
+    else:
+        logits = L.head_logits_mean(head, hidden, cfg)
+    if cfg.logits_softcap:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    logits = constrain(logits, "batch", None, "model")
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tok_nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, tok_nll, 0.0).sum() / jnp.maximum(valid.sum(), 1)
+    acc = ((logits.argmax(-1) == labels) & valid).sum() / \
+        jnp.maximum(valid.sum(), 1)
+    return nll + aux_weight * aux, {"accuracy": acc, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving (decode with per-token MoE routing)
+# ---------------------------------------------------------------------------
+
+make_cache = T.make_cache  # same KV cache layout
+
+
+def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int):
+    """MoE prefill: rerun forward collecting kv (same trick as dense)."""
+    x = L.apply_embed(params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def scan_step(x, bp):
+        h, kv = L.apply_attention(bp["attn"], cfg,
+                                  L.rms_norm(x, bp["ln1"]),
+                                  positions=positions, causal=True)
+        x = x + h
+        y, _ = moe_ffn(bp, cfg, L.rms_norm(x, bp["ln2"]))
+        return x + y, kv
+
+    x, kvs = jax.lax.scan(scan_step, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    S = tokens.shape[1]
+    k, v = kvs
+    pad = max_len - S
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return x[:, -1], {"k": k, "v": v, "len": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
+                key: jax.Array):
+    x = L.apply_embed(params["embed"], token[:, None])
+    cache_len = cache["len"]
+
+    def scan_step(x, bpkv):
+        bp, kv = bpkv
+        pos = jnp.reshape(cache_len, (1, 1))
+        h, new_kv = L.apply_attention(
+            bp["attn"], cfg, L.rms_norm(x, bp["ln1"]), positions=pos,
+            kv_cache=(kv["k"], kv["v"]), cache_len=cache_len)
+        x = x + h
+        y, _ = moe_ffn(bp, cfg, L.rms_norm(x, bp["ln2"]))
+        return x + y, {"k": new_kv[0], "v": new_kv[1]}
+
+    x, new_kvs = jax.lax.scan(
+        scan_step, x, (params["blocks"], {"k": cache["k"], "v": cache["v"]}))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    hidden = x[:, 0]
+    head = params["head"]
+    if "q" in head:
+        xi = jax.random.normal(
+            key, (cfg.mc_samples, hidden.shape[0], cfg.vocab_size),
+            jnp.float32)
+        logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
+    else:
+        logits = L.head_logits_mean(head, hidden, cfg)[None]
+    unc = uncertainty_from_logits(logits)
+    outputs = {"next_token": unc["p_mean"].argmax(-1).astype(jnp.int32),
+               "H": unc["H"], "SE": unc["SE"], "MI": unc["MI"],
+               "p_max": unc["p_mean"].max(-1)}
+    return outputs, {"k": new_kvs["k"], "v": new_kvs["v"],
+                     "len": cache_len + 1}

@@ -1,0 +1,95 @@
+"""Model dispatch: ArchConfig.family -> implementation module.
+
+Uniform API across families:
+    init_params(key, cfg) -> params
+    nll_loss(params, cfg, batch, key) -> (nll, aux)
+    make_cache(cfg, batch, max_len) -> cache
+    prefill(params, cfg, tokens, max_len, **modality) -> (hidden, cache)
+    decode_step(params, cfg, token, cache, key) -> (outputs, cache)
+
+``batch_spec``/``cache_spec``/modality stubs are centralized here so the
+launcher's ``input_specs`` stays arch-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, hybrid, moe, ssm, transformer
+
+
+def module_for(cfg: ArchConfig):
+    return {
+        "dense": transformer,
+        "vlm": transformer,
+        "audio": encdec,
+        "encdec": encdec,
+        "moe": moe,
+        "ssm": ssm,
+        "hybrid": hybrid,
+    }[cfg.family]
+
+
+def init_params(key, cfg: ArchConfig):
+    return module_for(cfg).init_params(key, cfg)
+
+
+def init_params_shape(cfg: ArchConfig):
+    """Shape-only params (no allocation) for dry-run lowering."""
+    return jax.eval_shape(
+        lambda: module_for(cfg).init_params(jax.random.key(0), cfg))
+
+
+def make_batch_specs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    """ShapeDtypeStruct training batch for this family."""
+    tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    specs = {"tokens": tok, "labels": tok}
+    if cfg.family == "encdec":
+        from repro.models.encdec import ENC_LEN
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, ENC_LEN, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_prefix_embeds, cfg.d_model), jnp.float32)
+    return specs
+
+
+def make_batch(key, cfg: ArchConfig, batch: int, seq: int) -> dict:
+    """Concrete random batch matching make_batch_specs."""
+    specs = make_batch_specs(cfg, batch, seq)
+    out = {}
+    for name, s in specs.items():
+        key, k = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size,
+                                           s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, s.dtype) * 0.02
+    return out
+
+
+def nll_loss(params, cfg: ArchConfig, batch: dict, key):
+    return module_for(cfg).nll_loss(params, cfg, batch, key)
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return module_for(cfg).make_cache(cfg, batch, max_len)
+
+
+def prefill(params, cfg: ArchConfig, tokens, max_len: int,
+            modality: Any = None):
+    mod = module_for(cfg)
+    if cfg.family == "encdec":
+        return mod.prefill(params, cfg, tokens, max_len, frames=modality)
+    if cfg.family == "vlm":
+        return mod.prefill(params, cfg, tokens, max_len,
+                           prefix_embeds=modality)
+    return mod.prefill(params, cfg, tokens, max_len)
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, key):
+    return module_for(cfg).decode_step(params, cfg, token, cache, key)

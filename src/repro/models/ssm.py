@@ -1,0 +1,307 @@
+"""Mamba2 — state-space duality (SSD) blocks (arXiv:2405.21060).
+
+Block: in_proj -> (z gate, x, B, C, dt) -> causal depthwise conv on
+(x, B, C) -> SSD mixing -> gated RMSNorm -> out_proj.
+
+SSD with scalar-per-head decay A:
+    h_t = exp(A * dt_t) h_{t-1} + dt_t * B_t  (outer) x_t
+    y_t = C_t . h_t + D * x_t
+
+Training uses the chunked dual form (quadratic intra-chunk 'attention' with
+a decay mask + a chunk-level recurrence), which is the MXU-friendly
+formulation and the reason this arch owns the ``long_500k`` cell: state is
+O(H*P*N) regardless of context.  Decode is the O(1) recurrence.
+
+The chunk recurrence is validated against the naive recurrence in
+tests/test_ssm.py.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.uncertainty import uncertainty_from_logits
+from repro.models import layers as L
+from repro.sharding.partition import constrain
+
+
+def dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    return d_in, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ArchConfig):
+    d = cfg.d_model
+    d_in, H, P, N = dims(cfg)
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * N + H          # z, x, B, C, dt (G=1 group)
+    conv_ch = d_in + 2 * N
+    return {
+        "ln": jnp.ones((d,), dt),
+        "in_proj": L.he_init(ks[0], (d, proj_out), d, dt),
+        "conv_w": L.he_init(ks[1], (cfg.ssm_conv_width, conv_ch),
+                            cfg.ssm_conv_width, dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),  # softplus^-1(~0.12)
+        "gate_ln": jnp.ones((d_in,), dt),
+        "out_proj": L.he_init(ks[2], (d_in, d), d_in, dt),
+    }
+
+
+def init_params(key, cfg: ArchConfig):
+    ke, kb, kh = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(
+        jax.random.split(kb, cfg.num_layers))
+    return {"embed": L.init_embed(ke, cfg), "blocks": blocks,
+            "final_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+            "head": L.init_head(kh, cfg)}
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int,
+                h0: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,) negative; Bm/Cm: (B, S, N);
+    D: (H,). Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // Q
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+
+    loga = dtc * A[None, None, None, :]              # (B,nc,Q,H) negative
+    cum = jnp.cumsum(loga, axis=2)                   # within-chunk cumsum
+    total = cum[:, :, -1:]                           # (B,nc,1,H)
+
+    # intra-chunk: y[i] = sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) dt_j x_j
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)   # (B,nc,Q,Q)
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    dec = jnp.where(mask[None, None, :, :, None], dec, -jnp.inf)
+    w = scores[..., None] * jnp.exp(dec)             # (B,nc,Q,Q,H)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]    # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xdt)
+
+    # chunk states: S_c = sum_j exp(total - cum_j) dt_j B_j (x) x_j
+    sdec = jnp.exp(total - cum)                       # (B,nc,Q,H)
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                        sdec * dtc, Bc, xc.astype(jnp.float32))
+
+    # inter-chunk recurrence over c: Hc = exp(total_c) H_{c-1} + S_c
+    decay_c = jnp.exp(total[:, :, 0])                 # (B,nc,H)
+
+    def step(h, inp):
+        d_c, s_c = inp                                # (B,H), (B,H,P,N)
+        h_new = h * d_c[:, :, None, None] + s_c
+        return h_new, h                               # emit PREVIOUS state
+
+    h_init = h0 if h0 is not None else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_last, h_prev = jax.lax.scan(
+        step, h_init,
+        (decay_c.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)          # (B,nc,H,P,N)
+
+    # inter contribution: y[i] += C_i . (exp(cum_i) * H_{c-1})
+    y_inter = jnp.einsum("bcin,bcihp... ->bcihp" if False else
+                         "bcin,bchpn,bcih->bcihp",
+                         Cc, h_prev, jnp.exp(cum))
+    y = y_intra + y_inter + D[None, None, None, :, None] * \
+        xc.astype(jnp.float32)
+    y = y.reshape(Bsz, nc * Q, H, P)[:, :S]
+    return y.astype(x.dtype), h_last
+
+
+def ssd_step(h, x, dt, A, Bm, Cm, D):
+    """One-token recurrence. h: (B,H,P,N); x: (B,H,P); dt: (B,H);
+    Bm/Cm: (B,N)."""
+    a = jnp.exp(dt * A[None, :])                      # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm, x.astype(jnp.float32))
+    h = h * a[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm, h) + D[None, :, None] * x
+    return h, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg, proj):
+    d_in, H, P, N = dims(cfg)
+    z, xr, B_, C_, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, xr, B_, C_, dt
+
+
+def _causal_conv(u, w, b):
+    """u: (B, S, C); w: (W, C) depthwise causal; left-pad W-1."""
+    W = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def apply_block(bp, cfg: ArchConfig, x: jax.Array,
+                ssm_state=None, conv_state=None):
+    """x: (B, S, d). If states given, runs recurrent single/few-step mode."""
+    d_in, H, P, N = dims(cfg)
+    u = L.rms_norm(x, bp["ln"], cfg.norm_eps)
+    proj = L._mm(u, bp["in_proj"])
+    z, xr, B_, C_, dtp = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xr, B_, C_], axis=-1)
+
+    if conv_state is None:
+        conv = _causal_conv(conv_in, bp["conv_w"], bp["conv_b"])
+        new_conv_state = conv_in[:, -(cfg.ssm_conv_width - 1):]
+    else:
+        # decode: prepend cached inputs
+        full = jnp.concatenate([conv_state, conv_in], axis=1)
+        conv = _causal_conv(full, bp["conv_w"], bp["conv_b"])
+        conv = conv[:, conv_state.shape[1]:]
+        new_conv_state = full[:, -(cfg.ssm_conv_width - 1):]
+
+    xr, B_, C_ = jnp.split(conv, [d_in, d_in + N], axis=-1)
+    Bsz, S = x.shape[0], x.shape[1]
+    xh = xr.reshape(Bsz, S, H, P)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + bp["dt_bias"])
+    A = -jnp.exp(bp["A_log"])
+
+    if ssm_state is None:
+        y, h_last = ssd_chunked(xh, dt, A, B_, C_, bp["D"], cfg.ssm_chunk)
+    elif S == 1:
+        h_last, y1 = ssd_step(ssm_state, xh[:, 0], dt[:, 0], A,
+                              B_[:, 0].astype(jnp.float32),
+                              C_[:, 0].astype(jnp.float32), bp["D"])
+        y = y1[:, None]
+    else:
+        y, h_last = ssd_chunked(xh, dt, A, B_, C_, bp["D"], cfg.ssm_chunk,
+                                h0=ssm_state)
+    y = y.reshape(Bsz, S, d_in)
+    y = L.rms_norm(y * jax.nn.silu(z), bp["gate_ln"], cfg.norm_eps)
+    out = L._mm(y, bp["out_proj"])
+    return x + out, h_last, new_conv_state
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ArchConfig, tokens: jax.Array):
+    x = L.apply_embed(params["embed"], tokens)
+    x = constrain(x, "batch", None, None)
+
+    def scan_step(x, bp):
+        if cfg.remat:
+            y, _, _ = jax.checkpoint(
+                lambda b, xx: apply_block(b, cfg, xx),
+                prevent_cse=False)(bp, x)
+        else:
+            y, _, _ = apply_block(bp, cfg, x)
+        return y, None
+
+    x, _ = jax.lax.scan(scan_step, x, params["blocks"])
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def nll_loss(params, cfg: ArchConfig, batch: dict, key: jax.Array):
+    hidden = forward(params, cfg, batch["tokens"])
+    head = params["head"]
+    if "q" in head:
+        eps = jax.random.normal(key, head["q"].mu.shape, jnp.float32)
+        w = head["q"].sample_with_eps(eps)
+        logits = jnp.dot(hidden, w.astype(hidden.dtype),
+                         preferred_element_type=jnp.float32)
+    else:
+        logits = L.head_logits_mean(head, hidden, cfg)
+    logits = constrain(logits, "batch", None, "model")
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tok = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, tok, 0.0).sum() / jnp.maximum(valid.sum(), 1)
+    acc = ((logits.argmax(-1) == labels) & valid).sum() / \
+        jnp.maximum(valid.sum(), 1)
+    return nll, {"accuracy": acc}
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    """Recurrent cache: per-layer SSM state + conv tail (O(1) in context!)."""
+    d_in, H, P, N = dims(cfg)
+    dt = dtype or L.dtype_of(cfg)
+    Lh = cfg.num_layers
+    return {
+        "ssm": jnp.zeros((Lh, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((Lh, batch, cfg.ssm_conv_width - 1, d_in + 2 * N),
+                          dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int):
+    x = L.apply_embed(params["embed"], tokens)
+
+    def scan_step(x, bp):
+        y, h, cstate = apply_block(bp, cfg, x)
+        return y, (h, cstate)
+
+    x, (hs, cs) = jax.lax.scan(scan_step, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    cache = {"ssm": hs, "conv": cs,
+             "len": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return x[:, -1], cache
+
+
+def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
+                key: jax.Array):
+    x = L.apply_embed(params["embed"], token[:, None])
+    x = constrain(x, "batch", None, None)
+
+    def scan_step(x, bpstate):
+        bp, h, cstate = bpstate
+        y, h_new, c_new = apply_block(bp, cfg, x, ssm_state=h,
+                                      conv_state=cstate)
+        return y, (h_new, c_new)
+
+    x, (hs, cs) = jax.lax.scan(
+        scan_step, x, (params["blocks"], cache["ssm"], cache["conv"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    hidden = x[:, 0]
+    head = params["head"]
+    if "q" in head:
+        xi = jax.random.normal(
+            key, (cfg.mc_samples, hidden.shape[0], cfg.vocab_size),
+            jnp.float32)
+        logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
+    else:
+        logits = L.head_logits_mean(head, hidden, cfg)[None]
+    unc = uncertainty_from_logits(logits)
+    outputs = {"next_token": unc["p_mean"].argmax(-1).astype(jnp.int32),
+               "H": unc["H"], "SE": unc["SE"], "MI": unc["MI"],
+               "p_max": unc["p_mean"].max(-1)}
+    return outputs, {"ssm": hs, "conv": cs, "len": cache["len"] + 1}

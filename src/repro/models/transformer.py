@@ -1,0 +1,248 @@
+"""Dense decoder-only transformer (qwen2*, codeqwen, nemotron, phi-3-vision).
+
+Covers the ``dense`` and ``vlm`` families.  VLM/audio frontends are stubs
+per the assignment: ``prefix_embeds`` (precomputed patch/frame embeddings)
+overwrite the leading positions of the token embedding sequence.
+
+Layers are stacked on a leading L axis and consumed with ``jax.lax.scan``
+(+ optional per-layer remat) so the HLO stays O(1) in depth — essential
+for the 64-layer dry-runs to compile quickly and for XLA's scheduler to
+pipeline the FSDP all-gathers (weights of layer i+1 prefetch during i).
+
+The output head follows the paper: a Gaussian-variational projection
+(``bayesian_head=True``) trained with SVI (one weight-space draw per step)
+and sampled N times at serving to produce the (H, SE, MI) uncertainty
+triplet per generated token.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.uncertainty import uncertainty_from_logits
+from repro.models import layers as L
+from repro.sharding.partition import constrain, constrain_seq
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def init_params(key, cfg: ArchConfig):
+    ke, kb, kh = jax.random.split(key, 3)
+    block_keys = jax.random.split(kb, cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(block_keys)
+    return {
+        "embed": L.init_embed(ke, cfg),
+        "blocks": blocks,                      # stacked (L, ...)
+        "final_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+        "head": L.init_head(kh, cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_fwd(bp, cfg: ArchConfig, x, positions):
+    # sequence-parallel residual stream: x lives S-sharded over 'model';
+    # rms_norm is position-local so it runs sharded; the attention/MLP
+    # inputs gather S implicitly (GSPMD AG) and their row-parallel
+    # outputs reduce-scatter back into the sharded stream.
+    h, kv = L.apply_attention(bp["attn"], cfg, L.rms_norm(x, bp["ln1"]),
+                              positions=positions, causal=True)
+    x = x + constrain_seq(h, cfg.seq_parallel)
+    x = constrain_seq(x, cfg.seq_parallel)
+    x = x + constrain_seq(L.apply_mlp(bp["mlp"], cfg,
+                                      L.rms_norm(x, bp["ln2"])),
+                          cfg.seq_parallel)
+    x = constrain_seq(x, cfg.seq_parallel)
+    return x, kv
+
+
+def forward(params, cfg: ArchConfig, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None,
+            return_kv: bool = False):
+    """tokens: (B, S) -> hidden (B, S, d); optionally per-layer (k, v)."""
+    x = L.apply_embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
+        x = jnp.concatenate(
+            [prefix_embeds.astype(x.dtype), x[:, P:]], axis=1)
+    x = constrain(x, "batch", None, None)
+    x = constrain_seq(x, cfg.seq_parallel)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def scan_step(x, bp):
+        if cfg.remat:
+            y, kv = jax.checkpoint(
+                lambda b, xx: _block_fwd(b, cfg, xx, positions),
+                prevent_cse=False)(bp, x)
+        else:
+            y, kv = _block_fwd(bp, cfg, x, positions)
+        return y, (kv if return_kv else None)
+
+    g = cfg.remat_group
+    if (cfg.scan_layers and cfg.remat and g and not return_kv
+            and cfg.num_layers % g == 0):
+        # hierarchical remat: checkpoint every g layers — the saved
+        # residual stack shrinks L -> L/g slabs (grok: 64 -> 8), trading
+        # one extra inner recompute during bwd (EXPERIMENTS.md §Perf).
+        grouped = jax.tree.map(
+            lambda a: a.reshape(cfg.num_layers // g, g, *a.shape[1:]),
+            params["blocks"])
+
+        def outer_step(x, bps):
+            def inner(xx, bp):
+                y, _ = _block_fwd(bp, cfg, xx, positions)
+                return y, None
+
+            y, _ = jax.checkpoint(
+                lambda b, xx: jax.lax.scan(inner, xx, b),
+                prevent_cse=False)(bps, x)
+            return y, None
+
+        x, kvs = jax.lax.scan(outer_step, x, grouped)
+    elif cfg.scan_layers:
+        x, kvs = jax.lax.scan(scan_step, x, params["blocks"])
+    else:
+        kvs = []
+        blocks = [jax.tree.map(lambda a, i=i: a[i], params["blocks"])
+                  for i in range(cfg.num_layers)]
+        for bp in blocks:
+            x, kv = scan_step(x, bp)
+            kvs.append(kv)
+        if return_kv:
+            kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (x, kvs) if return_kv else (x, None)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def nll_loss(params, cfg: ArchConfig, batch: dict, key: jax.Array):
+    """Mean next-token NLL with one weight-space draw of the Bayesian head.
+
+    batch: {tokens (B,S), labels (B,S)} (labels already shifted; -100 pad).
+    """
+    hidden, _ = forward(params, cfg, batch["tokens"],
+                        prefix_embeds=batch.get("prefix_embeds"))
+    head = params["head"]
+    if "q" in head:
+        eps = jax.random.normal(key, head["q"].mu.shape, jnp.float32)
+        w = head["q"].sample_with_eps(eps)
+        logits = jnp.dot(hidden, w.astype(hidden.dtype),
+                         preferred_element_type=jnp.float32)
+    else:
+        logits = L.head_logits_mean(head, hidden, cfg)
+    if cfg.logits_softcap:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    logits = constrain(logits, "batch", None, "model")
+    labels = batch["labels"]
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tok_nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    tok_nll = jnp.where(valid, tok_nll, 0.0)
+    nll = tok_nll.sum() / jnp.maximum(valid.sum(), 1)
+    acc = ((logits.argmax(-1) == labels) & valid).sum() / \
+        jnp.maximum(valid.sum(), 1)
+    return nll, {"accuracy": acc}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + MC-sampled uncertain decode
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=None):
+    dt = dtype or L.dtype_of(cfg)
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int,
+            prefix_embeds: Optional[jax.Array] = None):
+    """Run the full prompt, build the KV cache, return (hidden_last, cache)."""
+    hidden, kvs = forward(params, cfg, tokens, prefix_embeds=prefix_embeds,
+                          return_kv=True)
+    S = tokens.shape[1]
+    k, v = kvs  # (L, B, S, Hkv, hd) each (scan stacks the per-layer kv)
+    pad = max_len - S
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": k, "v": v, "len": jnp.asarray(S, jnp.int32)}
+    return hidden[:, -1], cache
+
+
+def _decode_block(bp, cfg, x, kv, cache_len):
+    """One layer of single-token decode; kv: dict k/v (B, S, Hkv, hd)."""
+    pos = jnp.reshape(cache_len, (1, 1))
+    h, new_kv = L.apply_attention(
+        bp["attn"], cfg, L.rms_norm(x, bp["ln1"]), positions=pos,
+        kv_cache=(kv["k"], kv["v"]), cache_len=cache_len)
+    x = x + h
+    x = x + L.apply_mlp(bp["mlp"], cfg, L.rms_norm(x, bp["ln2"]))
+    return x, {"k": new_kv[0], "v": new_kv[1]}
+
+
+def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
+                key: jax.Array):
+    """One uncertain decode step.
+
+    token: (B,) last sampled token.  Returns (outputs, new_cache) where
+    outputs = {next_token, H, SE, MI, p_max} per sequence — the paper's
+    uncertainty triplet computed from cfg.mc_samples LRT head draws
+    (fused in kernels/uncertainty_head on TPU; jnp math here lowers
+    everywhere and is what the dry-run compiles).
+    """
+    x = L.apply_embed(params["embed"], token[:, None])
+    x = constrain(x, "batch", None, None)
+    cache_len = cache["len"]
+
+    def scan_step(x, bpkv):
+        bp, kv = bpkv
+        x, new_kv = _decode_block(bp, cfg, x, kv, cache_len)
+        return x, new_kv
+
+    x, new_kvs = jax.lax.scan(
+        scan_step, x, (params["blocks"], {"k": cache["k"], "v": cache["v"]}))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    hidden = x[:, 0]                                   # (B, d)
+
+    B = hidden.shape[0]
+    S = cfg.mc_samples
+    head = params["head"]
+    if "q" in head:
+        xi = jax.random.normal(key, (S, B, cfg.vocab_size), jnp.float32)
+        logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
+    else:
+        logits = L.head_logits_mean(head, hidden, cfg)[None]
+    logits = constrain(logits, None, "batch", "model")
+    unc = uncertainty_from_logits(logits)
+    outputs = {
+        "next_token": unc["p_mean"].argmax(-1).astype(jnp.int32),
+        "H": unc["H"], "SE": unc["SE"], "MI": unc["MI"],
+        "p_max": unc["p_mean"].max(-1),
+    }
+    new_cache = {"k": new_kvs["k"], "v": new_kvs["v"],
+                 "len": cache_len + 1}
+    return outputs, new_cache

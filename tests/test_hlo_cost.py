@@ -1,0 +1,153 @@
+"""Trip-count-aware HLO cost model: validation against XLA cost_analysis.
+
+The key property: on an UNROLLED program (no while loops) our accounting
+must track XLA's own cost_analysis; on the SCANNED version of the same
+model it must still report the unrolled totals (XLA's counts collapse by
+the trip count — the bug this module exists to fix).
+"""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs.registry import get_config, reduced
+from repro.launch.hlo_cost import HloCost, analyze, parse_module
+from repro.models import registry as M
+
+
+@pytest.fixture(scope="module")
+def compiled_pair():
+    key = jax.random.key(0)
+    cfg0 = reduced(get_config("qwen2_1_5b"))
+
+    def compile_for(cfg):
+        params = jax.eval_shape(lambda: M.init_params(key, cfg))
+        batch = M.make_batch_specs(cfg, 2, 64)
+        return jax.jit(jax.grad(
+            lambda p, b: M.nll_loss(p, cfg, b, key)[0])).lower(
+                params, batch).compile()
+
+    unrolled = compile_for(dataclasses.replace(
+        cfg0, scan_layers=False, remat=False, num_layers=4))
+    scanned = compile_for(dataclasses.replace(
+        cfg0, scan_layers=True, remat=False, num_layers=4))
+    return unrolled, scanned
+
+
+def _xla_cost(compiled):
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
+
+
+def test_flops_match_xla_on_unrolled(compiled_pair):
+    unrolled, _ = compiled_pair
+    mine = analyze(unrolled.as_text())
+    xla = _xla_cost(unrolled)["flops"]
+    assert abs(mine["flops"] - xla) / xla < 0.15
+
+
+def test_bytes_match_xla_on_unrolled(compiled_pair):
+    unrolled, _ = compiled_pair
+    mine = analyze(unrolled.as_text())
+    xla = _xla_cost(unrolled)["bytes accessed"]
+    assert 0.5 < mine["bytes"] / xla < 2.0
+
+
+def test_scan_recovers_unrolled_flops(compiled_pair):
+    """THE fix: scanned program reports the same total flops as unrolled,
+    while XLA's own cost_analysis under-reports by ~the trip count."""
+    unrolled, scanned = compiled_pair
+    mine_u = analyze(unrolled.as_text())["flops"]
+    mine_s = analyze(scanned.as_text())["flops"]
+    assert abs(mine_s - mine_u) / mine_u < 0.05
+    xla_s = _xla_cost(scanned)["flops"]
+    assert xla_s < 0.6 * mine_s  # demonstrates XLA's undercount
+
+
+def test_scan_bytes_within_band(compiled_pair):
+    unrolled, scanned = compiled_pair
+    mine_u = analyze(unrolled.as_text())["bytes"]
+    mine_s = analyze(scanned.as_text())["bytes"]
+    assert 0.8 < mine_s / mine_u < 2.5
+
+
+def test_flops_scale_linearly_in_depth():
+    key = jax.random.key(1)
+    cfg0 = reduced(get_config("qwen2_1_5b"))
+
+    def flops_at(L):
+        cfg = dataclasses.replace(cfg0, scan_layers=True, remat=False,
+                                  num_layers=L)
+        params = jax.eval_shape(lambda: M.init_params(key, cfg))
+        batch = M.make_batch_specs(cfg, 2, 64)
+        c = jax.jit(jax.grad(
+            lambda p, b: M.nll_loss(p, cfg, b, key)[0])).lower(
+                params, batch).compile()
+        return analyze(c.as_text())["flops"]
+
+    f4, f8 = flops_at(4), flops_at(8)
+    per_layer = (f8 - f4) / 4
+    base = f4 - 4 * per_layer
+    assert per_layer > 0 and base >= 0
+    assert 1.7 < f8 / f4 < 2.0   # near-linear with a base offset
+
+
+def test_parse_module_structure():
+    hlo = """
+%fused_add (p0: f32[4], p1: f32[4]) -> f32[4] {
+  %p0 = f32[4]{0} parameter(0)
+  %p1 = f32[4]{0} parameter(1)
+  ROOT %a = f32[4]{0} add(%p0, %p1)
+}
+
+ENTRY %main (x: f32[4]) -> f32[4] {
+  %x = f32[4]{0} parameter(0)
+  ROOT %f = f32[4]{0} fusion(%x, %x), kind=kLoop, calls=%fused_add
+}
+"""
+    comps, entry, types = parse_module(hlo)
+    assert entry == "main"
+    assert "fused_add" in comps
+    assert types["f"] == "f32[4]{0}"
+
+
+def test_while_multiplier_synthetic():
+    hlo = """
+%body (t: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %t = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %w = f32[8,8]{1,0} get-tuple-element(%t), index=1
+  %d = f32[8,8]{1,0} dot(%w, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %r = (s32[], f32[8,8]) tuple(%i, %d)
+}
+
+%cond (t: (s32[], f32[8,8])) -> pred[] {
+  %t = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  ROOT %c = pred[] compare(%i, %i), direction=LT
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%zero, %x)
+  %wh = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+    c = HloCost(hlo)
+    # one 8x8x8 dot per trip, 10 trips
+    assert c.flops == 10 * 2 * 8 * 8 * 8
+
+
+def test_collective_accounting_synthetic():
+    hlo = """
+ENTRY %main (x: bf16[128,256]) -> bf16[2048,256] {
+  %x = bf16[128,256]{1,0} parameter(0)
+  ROOT %ag = bf16[2048,256]{1,0} all-gather(%x), replica_groups={}
+}
+"""
+    c = HloCost(hlo)
+    assert c.coll["all-gather"]["bytes"] == (2048 - 128) * 256 * 2
+    assert c.coll["all-gather"]["count"] == 1

@@ -1,0 +1,175 @@
+"""End-to-end paper experiments at CPU scale (qualitative agreement).
+
+These train the paper's BNN on synthetic stand-ins and assert the
+*mechanisms* behind the headline numbers: ID accuracy above chance, OOD
+MI > ID MI, rejection improves accuracy, three-cluster disentanglement.
+Exact figures are dataset-bound (DESIGN.md §6); the benchmarks print the
+quantitative comparison table.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import svi
+from repro.core.bayesian import GaussianVariational
+from repro.core.surrogate import SurrogateSpec
+from repro.core.uncertainty import (auroc, best_rejection_threshold,
+                                    disentangle_clusters,
+                                    predictive_moments,
+                                    rejection_accuracy)
+from repro.data import synthetic as D
+from repro.models import bnn_cnn as B
+from repro.optim import adamw
+
+
+def _train_bnn(cfg, images, labels, steps=120, lr=3e-3, batch=64, seed=0):
+    key = jax.random.key(seed)
+    params = B.init_params(key, cfg)
+    opt_cfg = adamw.AdamWConfig(lr=lr, warmup_steps=10, total_steps=steps,
+                                weight_decay=1e-4)
+    state = adamw.init_state(params, opt_cfg)
+    svi_cfg = svi.SVIConfig(num_train_examples=images.shape[0],
+                            kl_warmup_steps=steps // 3)
+    nll = B.nll_fn(cfg)
+
+    @jax.jit
+    def step(params, state, batch, key, i):
+        (loss, aux), g = jax.value_and_grad(
+            lambda p: svi.elbo_loss(nll, p, batch, key, i, svi_cfg),
+            has_aux=True)(params)
+        params, state, _ = adamw.apply_updates(params, g, state, opt_cfg)
+        return params, state, loss, aux
+
+    n = images.shape[0]
+    for i in range(steps):
+        key, k1, k2 = jax.random.split(key, 3)
+        idx = jax.random.randint(k1, (batch,), 0, n)
+        b = {"images": jnp.asarray(images[idx]),
+             "labels": jnp.asarray(labels[idx])}
+        params, state, loss, aux = step(params, state, b, k2,
+                                        jnp.asarray(i))
+    return params
+
+
+@pytest.fixture(scope="module")
+def bloodcell_bnn():
+    # quickstart scale: the epistemic signal needs enough SVI steps for
+    # sigma to concentrate where data constrains it (under-trained BNNs
+    # can invert the OOD-MI ordering; see EXPERIMENTS.md)
+    rng = np.random.default_rng(0)
+    cfg = B.BNNConfig(num_classes=7, in_channels=3, width=16,
+                      mc_samples=10)
+    xtr, ytr = D.blood_cells(rng, 3000)
+    params = _train_bnn(cfg, xtr, ytr, steps=300)
+    return cfg, params
+
+
+class TestBloodCell:
+    def test_id_accuracy_above_chance(self, bloodcell_bnn):
+        cfg, params = bloodcell_bnn
+        rng = np.random.default_rng(1)
+        xte, yte = D.blood_cells(rng, 300)
+        probs = B.mc_predict(params, cfg, jnp.asarray(xte),
+                             jax.random.key(5), mode="machine")
+        m = predictive_moments(probs)
+        acc = float((m["p_mean"].argmax(-1) == jnp.asarray(yte)).mean())
+        assert acc > 0.5, f"ID accuracy {acc} barely above chance (1/7)"
+
+    def test_ood_has_higher_mi_and_auroc(self, bloodcell_bnn):
+        """Erythroblast (held-out morphology) MI must separate from ID MI
+        (paper: AUROC 91.16%; we assert >> 0.5)."""
+        cfg, params = bloodcell_bnn
+        rng = np.random.default_rng(2)
+        xid, yid = D.blood_cells(rng, 250)
+        xood, _ = D.blood_cells_ood(rng, 250)
+        key = jax.random.key(6)
+        p_id = B.mc_predict(params, cfg, jnp.asarray(xid), key, "machine")
+        p_ood = B.mc_predict(params, cfg, jnp.asarray(xood), key, "machine")
+        mi_id = predictive_moments(p_id)["MI"]
+        mi_ood = predictive_moments(p_ood)["MI"]
+        a = float(auroc(mi_ood, mi_id))
+        assert a > 0.7, f"OOD AUROC {a}"
+
+    def test_rejection_improves_id_accuracy(self, bloodcell_bnn):
+        """Fig. 4d mechanism: rejecting high-MI samples raises accuracy."""
+        cfg, params = bloodcell_bnn
+        rng = np.random.default_rng(3)
+        xte, yte = D.blood_cells(rng, 400)
+        probs = B.mc_predict(params, cfg, jnp.asarray(xte),
+                             jax.random.key(7), "machine")
+        m = predictive_moments(probs)
+        t, acc_rej = best_rejection_threshold(m["MI"], m["p_mean"],
+                                              jnp.asarray(yte))
+        r = rejection_accuracy(m["p_mean"], m["MI"], jnp.asarray(yte), t)
+        assert float(r["accuracy_accepted"]) >= float(r["accuracy_all"])
+
+
+@pytest.fixture(scope="module")
+def glyph_bnn():
+    rng = np.random.default_rng(10)
+    cfg = B.BNNConfig(num_classes=10, in_channels=1, width=16,
+                      mc_samples=10)
+    xtr, ytr = D.glyphs(rng, 3000)
+    params = _train_bnn(cfg, xtr, ytr, steps=300, seed=1)
+    return cfg, params
+
+
+class TestDisentanglement:
+    def _moments(self, params, cfg, x, key):
+        probs = B.mc_predict(params, cfg, jnp.asarray(x), key, "machine")
+        return predictive_moments(probs)
+
+    def test_three_regimes(self, glyph_bnn):
+        """ID low-everything; ambiguous high SE; fashion-OOD higher MI
+        than ID (paper Fig. 5e)."""
+        cfg, params = glyph_bnn
+        rng = np.random.default_rng(11)
+        key = jax.random.key(8)
+        m_id = self._moments(params, cfg, D.glyphs(rng, 200)[0], key)
+        m_amb = self._moments(params, cfg,
+                              D.ambiguous_glyphs(rng, 200)[0], key)
+        m_ood = self._moments(params, cfg, D.fashion_ood(rng, 200)[0], key)
+
+        # aleatoric: ambiguous SE above ID SE
+        assert float(m_amb["SE"].mean()) > float(m_id["SE"].mean())
+        # epistemic: OOD MI above ID MI
+        assert float(m_ood["MI"].mean()) > float(m_id["MI"].mean())
+        # disentanglement: SE-detector and MI-detector both informative
+        a_alea = float(auroc(m_amb["SE"], m_id["SE"]))
+        a_epi = float(auroc(m_ood["MI"], m_id["MI"]))
+        assert a_alea > 0.6, f"aleatoric AUROC {a_alea}"
+        assert a_epi > 0.6, f"epistemic AUROC {a_epi}"
+
+    def test_cluster_separation(self, glyph_bnn):
+        cfg, params = glyph_bnn
+        rng = np.random.default_rng(12)
+        key = jax.random.key(9)
+        mis, ses, ids = [], [], []
+        for d, gen in enumerate((D.glyphs, D.ambiguous_glyphs,
+                                 D.fashion_ood)):
+            m = self._moments(params, cfg, gen(rng, 150)[0], key)
+            mis.append(m["MI"])
+            ses.append(m["SE"])
+            ids.append(jnp.full((150,), d))
+        r = disentangle_clusters(jnp.concatenate(mis),
+                                 jnp.concatenate(ses),
+                                 jnp.concatenate(ids))
+        assert float(r["min_pairwise"]) > 0.01
+
+
+class TestSurrogateMachineAgreement:
+    def test_surrogate_and_machine_agree_on_mean(self, glyph_bnn):
+        """The paper trains on the surrogate and predicts on the machine:
+        both paths must yield consistent mean predictions."""
+        cfg, params = glyph_bnn
+        rng = np.random.default_rng(13)
+        x = jnp.asarray(D.glyphs(rng, 100)[0])
+        key = jax.random.key(10)
+        p_sur = B.mc_predict(params, cfg, x, key, "surrogate").mean(0)
+        p_mac = B.mc_predict(params, cfg, x, key, "machine").mean(0)
+        agree = float((p_sur.argmax(-1) == p_mac.argmax(-1)).mean())
+        assert agree > 0.85, f"surrogate/machine agreement {agree}"
