@@ -1,22 +1,36 @@
 """Benchmark: fused-sampling kernel micro-bench (beyond-paper, TPU analog
 of the machine's 'randomness never transits the digital datapath').
 
-Compares on this host (jnp reference path; the Pallas kernels compile for
-TPU and validate in interpret mode):
-  * naive MC head: materialize S sampled weight tensors, S GEMMs
-  * LRT fused head: 1 mean GEMM + 1 var GEMM + output-space noise
-and reports the entropy-traffic reduction (bytes of randomness per MC
-sample) that motivates kernels/bayes_matmul + kernels/uncertainty_head.
+Two measurements, reported to stdout and to ``BENCH_kernels.json`` so the
+perf trajectory accumulates in CI:
+
+  1. **S-sample fused GEMM** — the vmap-of-single-sample baseline (S
+     weight-space draws, S GEMMs, PRNG in the path: exactly what
+     ``mc_forward`` does today) vs the fused seeded path
+     (``ops.lrt_matmul_sampled``: ONE mean GEMM + ONE variance GEMM
+     shared by all S samples, same marginals by the local
+     reparameterization theorem).  On this CPU host the timings are
+     indicative; the structural win (2 matmuls vs 2*S, one weight load
+     per prediction) is backend-independent.
+
+  2. **Entropy HBM traffic per prediction** — bytes of randomness
+     crossing HBM on each path: S*K*V*4 for the naive weight-space
+     operand, S*M*V*4 for the LRT operand, and 0 for the in-kernel PRNG
+     path (the variates are born and die in registers;
+     ``pltpu.prng_random_bits`` + Box-Muller, kernels/rng.py).  Measured
+     via ``ops.entropy_bytes`` — the same accounting the kernels' block
+     specs imply — not asserted.
 """
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 
 
 def _timeit(f, iters=10):
@@ -36,39 +50,71 @@ def run(quick: bool = False) -> dict:
     mu = jax.random.normal(ks[1], (K, V)) * 0.02
     sigma = jnp.abs(jax.random.normal(ks[2], (K, V))) * 0.01
 
+    # baseline: vmap of single-sample weight-space draws (PRNG in path,
+    # one sampled (K, V) weight tensor and one GEMM per MC sample) —
+    # the repo's pre-fusion MC serving path.
     @jax.jit
-    def naive(x, key):
+    def vmap_single(x, key):
         def one(k):
-            eps = jax.random.normal(k, (K, V))     # S weight-space draws
+            eps = jax.random.normal(k, (K, V))
             return ref.bayes_matmul(x, mu, sigma, eps)
         return jax.vmap(one)(jax.random.split(key, S))
 
+    # fused: all S samples from one seeded call, mean/var GEMMs shared.
     @jax.jit
-    def fused(x, key):
-        xi = jax.random.normal(key, (S, M, V))     # output-space noise
-        return jax.vmap(lambda z: ref.lrt_matmul(x, mu, sigma, z))(xi)
+    def fused_sampled(x, seed):
+        return ops.lrt_matmul_sampled(x, mu, sigma, seed, num_samples=S,
+                                      impl="auto")
 
-    t_naive = _timeit(lambda: naive(x, ks[3]))
-    t_fused = _timeit(lambda: fused(x, ks[3]))
+    seed = jnp.asarray(42, jnp.int32)
+    t_vmap = _timeit(lambda: vmap_single(x, ks[3]))
+    t_fused = _timeit(lambda: fused_sampled(x, seed))
+
+    on_tpu = jax.default_backend() == "tpu"
+    traffic = {
+        "weight_space_operand": ops.entropy_bytes(
+            "weight_space", num_samples=S, k=K, n=V),
+        "lrt_operand": ops.entropy_bytes("lrt", num_samples=S, m=M, n=V),
+        "head_operand": ops.entropy_bytes("head", num_samples=S, m=M, n=V),
+        "in_kernel": ops.entropy_bytes("lrt", num_samples=S, m=M, n=V,
+                                       in_kernel=True),
+    }
     return {
-        "naive_ms": t_naive * 1e3,
-        "fused_lrt_ms": t_fused * 1e3,
-        "speedup_x": t_naive / t_fused,
-        "entropy_bytes_naive": S * K * V * 4,
-        "entropy_bytes_fused": S * M * V * 4,
-        "entropy_reduction_x": (K / M),
+        "shapes": {"M": M, "K": K, "V": V, "S": S},
+        "backend": jax.default_backend(),
+        "timings_indicative": not on_tpu,
+        "vmap_single_sample_ms": t_vmap * 1e3,
+        "fused_sampled_ms": t_fused * 1e3,
+        "speedup_fused_x": t_vmap / t_fused,
+        "entropy_bytes_per_prediction": traffic,
+        "entropy_reduction_operand_x": (K / M),
     }
 
 
-def main(quick: bool = False):
+def main(quick: bool = False, json_path: str = "BENCH_kernels.json"):
     r = run(quick)
+    s = r["shapes"]
     print("fused Bayesian head micro-bench (beyond-paper TPU adaptation)")
-    print(f"  naive S-sample weight-space head: {r['naive_ms']:9.2f} ms")
-    print(f"  fused LRT head:                   {r['fused_lrt_ms']:9.2f} ms"
-          f"   ({r['speedup_x']:.2f}x)")
-    print(f"  entropy traffic: {r['entropy_bytes_naive'] / 1e6:.1f} MB -> "
-          f"{r['entropy_bytes_fused'] / 1e6:.1f} MB per prediction "
-          f"({r['entropy_reduction_x']:.0f}x less)")
+    print(f"  vmap-of-single-sample (S={s['S']} weight draws): "
+          f"{r['vmap_single_sample_ms']:9.2f} ms")
+    print(f"  fused S-sample seeded GEMM:                      "
+          f"{r['fused_sampled_ms']:9.2f} ms   "
+          f"({r['speedup_fused_x']:.2f}x)")
+    tb = r["entropy_bytes_per_prediction"]
+    print("  entropy over HBM per prediction:")
+    print(f"    weight-space operand: {tb['weight_space_operand'] / 1e6:8.1f} MB"
+          f"   (S*K*V*4)")
+    print(f"    LRT operand:          {tb['lrt_operand'] / 1e6:8.1f} MB"
+          f"   (S*M*V*4, {r['entropy_reduction_operand_x']:.0f}x less)")
+    print(f"    in-kernel PRNG:       {tb['in_kernel'] / 1e6:8.1f} MB"
+          f"   (born in registers)")
+    if r["timings_indicative"]:
+        print(f"  [timings on {r['backend']} are indicative; the kernel "
+              f"path compiles on TPU]")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(r, f, indent=1, default=float)
+        print(f"  -> {json_path}")
     return r
 
 

@@ -7,6 +7,9 @@
   bench_bloodcell    paper Fig. 4     ID/OOD classification + rejection
   bench_disentangle  paper Fig. 5     MNIST/Ambiguous/Fashion clusters
   bench_kernels      beyond-paper     fused-sampling kernel micro-bench
+                                      (emits BENCH_kernels.json: entropy
+                                      HBM traffic + fused-GEMM speedup,
+                                      the CI perf-trajectory artifact)
   roofline           deliverable (g)  three-term roofline per dry-run cell
 """
 

@@ -63,6 +63,9 @@ class ArchConfig:
     bayesian_head: bool = True       # Gaussian variational output head
     mc_samples: int = 10             # paper: N=10 MC draws per prediction
     head_init_sigma: float = 0.01
+    head_entropy: str = "kernel"     # "kernel": seeded fused head (drawn
+                                     # in-kernel on TPU); "operand":
+                                     # key-threaded explicit xi tensor
 
     # --- numerics / memory ---
     param_dtype: str = "bfloat16"

@@ -8,10 +8,13 @@ optimization (Blundell et al. 2015).
 
 The sampled forward pass is reparameterized:  w = mu + sigma * eps, with eps
 from an ``EntropySource`` -- the digital PRNG baseline, the ASE digital
-twin, or (inside Pallas kernels) an explicit entropy-stream operand.  The
+twin, an explicit entropy-stream operand, or (the fast path) the in-kernel
+TPU PRNG: ``KernelEntropy`` carries a base seed and the Pallas ``*_sampled``
+kernels draw the variates in-register, so eps never exists in HBM.  The
 same code path therefore runs the surrogate (training) and the machine
 (prediction) exactly like the paper swaps its surrogate for the photonic
-hardware.
+hardware; ``bayes_dense_sampled`` / ``mc_forward_seeded`` are the
+seed-driven twins of ``bayes_dense`` / ``mc_forward``.
 """
 
 from __future__ import annotations
@@ -22,7 +25,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.entropy import EntropySource, PRNGEntropy
+from repro.core.entropy import EntropySource, KernelEntropy, PRNGEntropy
 from repro.core.photonic import quantize_ste
 
 
@@ -125,4 +128,36 @@ def mc_forward(apply_fn: Callable[[jax.Array], jax.Array], key: jax.Array,
     The paper uses N=10 samples per prediction.
     """
     keys = jax.random.split(key, num_samples)
+    return jax.vmap(apply_fn)(keys)
+
+
+# --------------------------------------------------------------------------
+# seed-driven fast path (in-kernel entropy on TPU)
+# --------------------------------------------------------------------------
+
+def bayes_dense_sampled(x: jax.Array, q: GaussianVariational,
+                        entropy: KernelEntropy, num_samples: int,
+                        impl: str = "auto") -> jax.Array:
+    """All S MC samples of y = x @ w, w ~ q, in one fused call: (S, M, N).
+
+    On TPU the weight noise is generated inside the kernel from
+    ``entropy.seed`` (mu/sigma tiles read once for all S samples — the
+    37.5 ps/conv amortization); elsewhere the seeded oracle runs.  The
+    per-sample twin is ``bayes_dense`` (one key, one draw).
+    """
+    from repro.kernels import ops
+    return ops.bayes_matmul_sampled(x, q.mu, q.sigma, entropy.fold(),
+                                    num_samples=num_samples, impl=impl)
+
+
+def mc_forward_seeded(apply_fn: Callable[[jax.Array], jax.Array],
+                      entropy: KernelEntropy,
+                      num_samples: int) -> jax.Array:
+    """Seed-driven ``mc_forward``: sample s runs on ``entropy.key(s)``.
+
+    Deterministic per base seed (same KernelEntropy -> same prediction),
+    so serving replicas with the same seed agree bit-for-bit off-TPU and
+    distributionally on-TPU.
+    """
+    keys = jax.random.split(entropy.key(), num_samples)
     return jax.vmap(apply_fn)(keys)

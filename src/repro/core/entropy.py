@@ -20,7 +20,7 @@ realizes them differentially (balanced detection of a signal and a reference
 arm). We model that as an affine map ``w = g * (I - I_ref)`` applied to the
 non-negative photocurrent ``I``.
 
-This module gives three interchangeable sources behind one API:
+This module gives four interchangeable sources behind one API:
 
   * ``PRNGEntropy``      -- counter-based Gaussian, the digital baseline the
                             paper says is the bottleneck (and our oracle).
@@ -32,12 +32,21 @@ This module gives three interchangeable sources behind one API:
                             mirroring how the physical machine's randomness
                             is *external* to the digital datapath.  Pallas
                             kernels take this as a plain input tensor.
+  * ``KernelEntropy``    -- the in-kernel TPU PRNG: randomness is generated
+                            *at the MAC* (pltpu.prng_random_bits +
+                            Box-Muller inside the Pallas kernels, seeded
+                            from this source's base seed + grid coords), so
+                            zero entropy bytes cross HBM — the TPU twin of
+                            the machine's architectural rule.  Off-TPU,
+                            ``sample`` emulates the stream host-side from
+                            the same seed (moment-, not bit-, equivalent).
 
 All sampling is shaped (num_samples, *weight_shape) and returns *standard*
 variates (zero mean, unit std) so that layers can apply the reparameterized
 ``w = mu + sigma * eps`` regardless of the source.  For ``ASEEntropy`` the
 standardized Gamma keeps its skewness ``2/sqrt(M)`` -- tests assert both the
-standardization and the residual skew so the physics is not silently lost.
+standardization and the residual skew so the physics is not silently lost;
+``KernelEntropy`` is contractually Gaussian (skew 0) and seed-deterministic.
 """
 
 from __future__ import annotations
@@ -133,6 +142,43 @@ class ASEEntropy(EntropySource):
         m = jnp.asarray(self.modes, jnp.float32)
         gam = jax.random.gamma(key, jnp.broadcast_to(m, shape)) / m
         return ((gam - 1.0) * jnp.sqrt(m)).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntropy(EntropySource):
+    """In-kernel TPU PRNG source: entropy born and consumed in registers.
+
+    Carries the base seed that the Pallas kernels mix with their grid
+    coordinates (``pltpu.prng_seed(seed, i, j, ...)``), so every tile owns
+    a distinct, replayable stream and no entropy tensor ever exists in
+    HBM.  The ``*_sampled`` wrappers in ``kernels.ops`` consume
+    ``self.seed`` directly; ``sample``/``key`` provide the host-side
+    emulation used off-TPU and by layers that need materialized variates.
+
+    Contract (tested): standard normal — mean 0, std 1, skew 0 (unlike
+    ``ASEEntropy``'s 2/sqrt(M)) — and same seed -> same stream.
+    """
+
+    seed: int = 0
+
+    def fold(self, *ids: int) -> jax.Array:
+        """Derive a per-site int32 seed from the base seed (same mixing
+        on host and device: successive fold-ins of the call-site ids)."""
+        s = jnp.asarray(self.seed, jnp.uint32)
+        for i in ids:
+            s = s * jnp.uint32(0x9E3779B9) + jnp.asarray(i, jnp.uint32) \
+                + jnp.uint32(1)
+        return s.astype(jnp.int32)
+
+    def key(self, *ids: int) -> jax.Array:
+        """Host-side PRNG key for the (optionally folded) stream."""
+        return jax.random.key(
+            jnp.asarray(self.fold(*ids), jnp.uint32))
+
+    def sample(self, key, shape, dtype=jnp.float32):
+        """EntropySource interface: key=None draws the seed's own stream."""
+        k = self.key() if key is None else key
+        return jax.random.normal(k, shape, dtype)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,16 +1,42 @@
 """Pallas TPU kernels for the probabilistic compute hot spots.
 
-bayes_matmul     -- fused sampled-weight GEMM (weight-space noise)
-lrt_matmul       -- local-reparameterization GEMM (output-space noise)
-photonic_conv    -- the machine's 9-tap frequency-time interleaved conv
-uncertainty_head -- fused S-sample Bayesian head + online H/SE/MI reduce
-flash_attention  -- fused online-softmax attention (score tiles in VMEM)
+Every Bayesian kernel family exists on two entropy paths:
 
-Each has a pure-jnp oracle in ref.py (flash: models.layers) and a jit'd
-public wrapper in ops.py.
+  * **in-kernel PRNG fast path** — the production TPU path.  Kernels seed
+    the per-core PRNG from (seed, grid coordinates) and draw standard
+    normals in-register (``pltpu.prng_random_bits`` + Box-Muller, see
+    ``rng.py``).  No entropy operand exists: 0 bytes of randomness cross
+    HBM per prediction — the TPU twin of the photonic machine's
+    "randomness never transits the digital datapath".  Selected by the
+    ``*_sampled`` ops wrappers when running compiled on TPU.
+  * **explicit-operand validation path** — the standard variates arrive
+    as a plain tensor operand (``eps``/``xi``).  Used by interpret mode
+    on CPU (the generic interpreter has no TPU PRNG rule), by the parity
+    tests against the ``ref.py`` oracles, and to model the paper's
+    *external* entropy source (``core.entropy.EntropyStream``).
+
+Kernels:
+
+bayes_matmul      -- fused sampled-weight GEMM (weight-space noise)
+lrt_matmul        -- local-reparameterization GEMM (output-space noise)
+*_sampled         -- fused S-sample variants: mu/sigma tiles stay
+                     VMEM-resident across all S MC samples (one weight
+                     load per prediction, not per sample), LRT shares
+                     one mean+variance GEMM across samples
+photonic_conv     -- the machine's 9-tap frequency-time interleaved conv
+uncertainty_head  -- fused S-sample Bayesian head + online H/SE/MI reduce;
+                     the sampled variant regenerates logits in pass 2
+                     from the replayed PRNG stream instead of re-reading
+                     an (S, M, V) HBM scratch
+flash_attention   -- fused online-softmax attention (score tiles in VMEM)
+
+Each has a pure-jnp oracle in ref.py (flash: models.layers) — including
+seeded ``*_sampled`` oracles — and a jit'd public wrapper in ops.py.
 """
 
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import ops, ref, rng  # noqa: F401
 from repro.kernels.ops import (  # noqa: F401
-    bayes_conv2d_im2col, bayes_matmul, flash_attention, lrt_matmul,
-    photonic_conv, uncertainty_head)
+    bayes_conv2d_im2col, bayes_conv2d_im2col_sampled, bayes_matmul,
+    bayes_matmul_sampled, entropy_bytes, flash_attention, lrt_matmul,
+    lrt_matmul_sampled, photonic_conv, photonic_conv_sampled,
+    uncertainty_head, uncertainty_head_sampled)

@@ -1,15 +1,28 @@
-"""Pallas TPU kernel: fused sampled-weight GEMM.
+"""Pallas TPU kernels: fused sampled-weight GEMM.
 
 The photonic machine's defining property is that the stochastic weights are
 *fused with the MAC*: randomness never transits the digital datapath.  The
 TPU translation: mu / sigma tiles are loaded HBM->VMEM once and perturbed
 in-register, so the HBM weight traffic per MC sample is the same as a
-deterministic GEMM of the *mean* weights (plus the entropy operand, which
-on hardware is generated in-kernel via pltpu.prng_random_bits; in this
-repo it is an explicit operand so the kernel validates in interpret mode
-and stays faithful to the paper's external entropy source).
+deterministic GEMM of the *mean* weights.
 
-Two variants:
+Every variant exists on two entropy paths:
+
+  * **in-kernel PRNG fast path** (``*_fused_kernel`` with
+    ``in_kernel_rng=True``): the kernel seeds the per-core PRNG from
+    ``(seed, grid coordinates)`` and draws its standard variates
+    in-register via ``pltpu.prng_random_bits`` + Box-Muller
+    (``kernels.rng``).  No entropy operand exists — 0 bytes of randomness
+    cross HBM per prediction.  This is the production path on TPU.
+  * **explicit-operand validation path** (``in_kernel_rng=False``, and the
+    original single-sample kernels below): the standard variates arrive as
+    a plain input tensor.  This is what interpret mode executes on CPU
+    (the generic interpreter has no rule for the TPU PRNG primitives),
+    what the parity tests drive bit-exactly against ``ref.py``, and the
+    faithful model of the paper's *external* entropy source
+    (``core.entropy.EntropyStream``).
+
+Single-sample kernels (one MC draw per call, entropy operand only):
 
   * ``bayes_matmul_kernel``  -- weight-space noise, eps: (K, N).  Used for
     the CNN's probabilistic conv (9-channel weights are tiny).
@@ -17,10 +30,22 @@ Two variants:
     Noise in output space: exact same marginals, S-sample entropy cost
     scales with activations, not weights.  This is the LM-head workhorse.
 
+Fused S-sample kernels (the TPU twin of the machine's 37.5 ps/conv
+amortization — one weight load per *prediction*, not per sample):
+
+  * ``bayes_matmul_fused_kernel`` -- grid (M/bm, N/bn, K/bk); each
+    mu/sigma tile is read once and all S sampled partial products are
+    accumulated into an (S, bm, bn) VMEM-resident output block.
+  * ``lrt_matmul_fused_kernel``   -- mean and variance GEMMs are computed
+    ONCE (they are sample-independent), accumulated in VMEM scratch, and
+    the S output samples are formed on the last K step with output-space
+    noise: 2 matmuls total instead of 2*S.
+
 Tiling: classic (M/bm, N/bn, K/bk) grid, K innermost/sequential, f32
 accumulation in the output ref.  Block shapes default to MXU-aligned
-(128, 128) tiles with bk=512 to amortize loop overhead while three f32
-operand tiles + accumulator stay well under VMEM (~1.3 MB at defaults).
+(128, 128) tiles with bk=512 to amortize loop overhead while the operand
+tiles + accumulators stay well under VMEM (~1.3 MB at single-sample
+defaults; the fused S=10 output block adds ~0.65 MB).
 """
 
 from __future__ import annotations
@@ -30,9 +55,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import rng
 
 
-def _bayes_mm_kernel(x_ref, mu_ref, sg_ref, eps_ref, o_ref, *, nk: int):
+# ---------------------------------------------------------------------------
+# single-sample, explicit-operand kernels (validation / external entropy)
+# ---------------------------------------------------------------------------
+
+def _bayes_mm_kernel(x_ref, mu_ref, sg_ref, eps_ref, o_ref):
     """One (bm, bn) output tile; accumulate over the K grid dimension."""
     k = pl.program_id(2)
 
@@ -56,7 +88,7 @@ def bayes_matmul_kernel(x: jax.Array, mu: jax.Array, sigma: jax.Array,
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(
-        functools.partial(_bayes_mm_kernel, nk=grid[2]),
+        _bayes_mm_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
@@ -70,31 +102,29 @@ def bayes_matmul_kernel(x: jax.Array, mu: jax.Array, sigma: jax.Array,
     )(x, mu, sigma, eps)
 
 
-def _lrt_mm_kernel(x_ref, mu_ref, sg_ref, xi_ref, o_ref, *, nk: int):
-    """LRT tile: accumulate mean part and variance part over K, then
-    combine with the output-space noise on the last K step."""
+def _lrt_mm_kernel(x_ref, mu_ref, sg_ref, xi_ref, o_ref, mean_ref, var_ref,
+                   *, nk: int):
+    """LRT tile: accumulate mean and variance parts over K in VMEM
+    scratch, then combine with the output-space noise on the last K step."""
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        mean_ref[...] = jnp.zeros_like(mean_ref)
+        var_ref[...] = jnp.zeros_like(var_ref)
 
     x = x_ref[...].astype(jnp.float32)
     mu = mu_ref[...].astype(jnp.float32)
     sg = sg_ref[...].astype(jnp.float32)
-    mean_part = jnp.dot(x, mu, preferred_element_type=jnp.float32)
-    var_part = jnp.dot(x * x, sg * sg, preferred_element_type=jnp.float32)
-    # pack (mean, var) accumulation: o carries mean + i*var? No complex --
-    # accumulate var scaled into the imaginary trick is fragile; instead
-    # o_ref is (2, bm, bn): channel 0 mean, channel 1 variance.
-    o_ref[0] += mean_part
-    o_ref[1] += var_part
+    mean_ref[...] += jnp.dot(x, mu, preferred_element_type=jnp.float32)
+    var_ref[...] += jnp.dot(x * x, sg * sg,
+                            preferred_element_type=jnp.float32)
 
     @pl.when(k == nk - 1)
     def _finish():
-        mean = o_ref[0]
-        var = jnp.maximum(o_ref[1], 0.0)
-        o_ref[0] = mean + jnp.sqrt(var) * xi_ref[0].astype(jnp.float32)
+        var = jnp.maximum(var_ref[...], 0.0)
+        o_ref[...] = (mean_ref[...] +
+                      jnp.sqrt(var) * xi_ref[...].astype(jnp.float32))
 
 
 def lrt_matmul_kernel(x: jax.Array, mu: jax.Array, sigma: jax.Array,
@@ -110,18 +140,186 @@ def lrt_matmul_kernel(x: jax.Array, mu: jax.Array, sigma: jax.Array,
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
     grid = (m // bm, n // bn, k // bk)
-    xi3 = xi[None]  # leading unit axis so the block carries a channel dim
-    out = pl.pallas_call(
+    return pl.pallas_call(
         functools.partial(_lrt_mm_kernel, nk=grid[2]),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((1, bm, bn), lambda i, j, kk: (0, i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         ],
-        out_specs=pl.BlockSpec((2, bm, bn), lambda i, j, kk: (0, i, j)),
-        out_shape=jax.ShapeDtypeStruct((2, m, n), jnp.float32),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
         interpret=interpret,
-    )(x, mu, sigma, xi3)
-    return out[0]
+    )(x, mu, sigma, xi)
+
+
+# ---------------------------------------------------------------------------
+# fused S-sample kernels (weights VMEM-resident across all MC samples)
+# ---------------------------------------------------------------------------
+
+def _bayes_mm_fused_kernel(*refs, num_samples: int, in_kernel_rng: bool):
+    """All S sampled partial products of one mu/sigma tile read.
+
+    The weight tile is loaded once and perturbed S times in-register —
+    one HBM weight read per prediction instead of per sample.
+    """
+    if in_kernel_rng:
+        seed_ref, x_ref, mu_ref, sg_ref, o_ref = refs
+    else:
+        seed_ref, x_ref, mu_ref, sg_ref, eps_ref, o_ref = refs
+    j, k = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    mu = mu_ref[...].astype(jnp.float32)
+    sg = sg_ref[...].astype(jnp.float32)
+    if in_kernel_rng:
+        # seed on the WEIGHT tile coordinates only: one MC sample must
+        # apply one sampled W to every row block, so the i-th row tile
+        # must replay the same eps for weight tile (j, k).
+        pltpu.prng_seed(seed_ref[0, 0], j, k)
+    for s in range(num_samples):
+        if in_kernel_rng:
+            eps = rng.normal_draw(mu.shape)
+        else:
+            eps = eps_ref[s].astype(jnp.float32)
+        o_ref[s] += jnp.dot(x, mu + sg * eps,
+                            preferred_element_type=jnp.float32)
+
+
+def bayes_matmul_fused_kernel(x: jax.Array, mu: jax.Array, sigma: jax.Array,
+                              seed, *, num_samples: int,
+                              eps: jax.Array | None = None,
+                              bm: int = 128, bn: int = 128, bk: int = 512,
+                              interpret: bool = False) -> jax.Array:
+    """S weight-space MC samples in one pass: (S, M, N) f32.
+
+    eps=None selects the in-kernel PRNG fast path (TPU only); an explicit
+    eps (S, K, N) selects the validation path (runs in interpret mode).
+    """
+    m, k = x.shape
+    _, n = mu.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    grid = (m // bm, n // bn, k // bk)
+    in_kernel_rng = eps is None
+    seed_arr = jnp.asarray(seed, jnp.int32).reshape(1, 1)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [seed_arr, x, mu, sigma]
+    if not in_kernel_rng:
+        assert eps.shape == (num_samples, k, n), (eps.shape, (k, n))
+        in_specs.append(
+            pl.BlockSpec((num_samples, bk, bn), lambda i, j, kk: (0, kk, j)))
+        operands.append(eps)
+    return pl.pallas_call(
+        functools.partial(_bayes_mm_fused_kernel, num_samples=num_samples,
+                          in_kernel_rng=in_kernel_rng),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((num_samples, bm, bn),
+                               lambda i, j, kk: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((num_samples, m, n), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+
+
+def _lrt_mm_fused_kernel(*refs, num_samples: int, nk: int,
+                         in_kernel_rng: bool):
+    """S LRT samples sharing ONE mean GEMM and ONE variance GEMM.
+
+    The two matmuls are sample-independent, so they accumulate once in
+    VMEM scratch; the S samples differ only by the output-space noise
+    applied on the last K step.  2 matmuls per prediction vs 2*S for
+    vmap-of-single-sample.
+    """
+    if in_kernel_rng:
+        seed_ref, x_ref, mu_ref, sg_ref, o_ref, mean_ref, var_ref = refs
+    else:
+        (seed_ref, x_ref, mu_ref, sg_ref, xi_ref, o_ref,
+         mean_ref, var_ref) = refs
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        mean_ref[...] = jnp.zeros_like(mean_ref)
+        var_ref[...] = jnp.zeros_like(var_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    mu = mu_ref[...].astype(jnp.float32)
+    sg = sg_ref[...].astype(jnp.float32)
+    mean_ref[...] += jnp.dot(x, mu, preferred_element_type=jnp.float32)
+    var_ref[...] += jnp.dot(x * x, sg * sg,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        mean = mean_ref[...]
+        std = jnp.sqrt(jnp.maximum(var_ref[...], 0.0))
+        if in_kernel_rng:
+            pltpu.prng_seed(seed_ref[0, 0], i, j)
+        for s in range(num_samples):
+            if in_kernel_rng:
+                xi = rng.normal_draw(mean.shape)
+            else:
+                xi = xi_ref[s].astype(jnp.float32)
+            o_ref[s] = mean + std * xi
+
+
+def lrt_matmul_fused_kernel(x: jax.Array, mu: jax.Array, sigma: jax.Array,
+                            seed, *, num_samples: int,
+                            xi: jax.Array | None = None,
+                            bm: int = 128, bn: int = 128, bk: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """S LRT MC samples in one pass: (S, M, N) f32.
+
+    xi=None selects the in-kernel PRNG fast path (TPU only); an explicit
+    xi (S, M, N) selects the validation path (runs in interpret mode).
+    """
+    m, k = x.shape
+    _, n = mu.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    grid = (m // bm, n // bn, k // bk)
+    in_kernel_rng = xi is None
+    seed_arr = jnp.asarray(seed, jnp.int32).reshape(1, 1)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [seed_arr, x, mu, sigma]
+    if not in_kernel_rng:
+        assert xi.shape == (num_samples, m, n), (xi.shape, (m, n))
+        in_specs.append(
+            pl.BlockSpec((num_samples, bm, bn), lambda i, j, kk: (0, i, j)))
+        operands.append(xi)
+    return pl.pallas_call(
+        functools.partial(_lrt_mm_fused_kernel, num_samples=num_samples,
+                          nk=grid[2], in_kernel_rng=in_kernel_rng),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((num_samples, bm, bn),
+                               lambda i, j, kk: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((num_samples, m, n), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*operands)

@@ -5,6 +5,14 @@ Selection logic: on TPU backends the Pallas path runs compiled; elsewhere
 for correctness, and callers who need speed on CPU (tests over big sweeps,
 examples) can force the pure-jnp oracle with ``impl='ref'``.
 
+The ``*_sampled`` wrappers are the seed-driven fast path: on TPU the
+kernels generate their entropy in-register (``in_kernel_rng=True``, zero
+HBM entropy bytes); in interpret mode the same fused kernels run with an
+explicit operand derived host-side from the same seed (the validation
+path); ``impl='ref'`` routes to the seeded jnp oracle.  ``entropy_bytes``
+reports the HBM randomness traffic of each configuration so benchmarks
+measure the win instead of asserting it.
+
 All wrappers handle padding to kernel tile multiples and strip it off, so
 arbitrary problem shapes are accepted.
 """
@@ -18,10 +26,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.bayes_matmul import bayes_matmul_kernel, lrt_matmul_kernel
+from repro.kernels.bayes_matmul import (
+    bayes_matmul_fused_kernel, bayes_matmul_kernel, lrt_matmul_fused_kernel,
+    lrt_matmul_kernel)
 from repro.kernels.flash_attention import flash_attention_kernel
-from repro.kernels.photonic_conv import photonic_conv_kernel
-from repro.kernels.uncertainty_head import uncertainty_head_kernel
+from repro.kernels.photonic_conv import (
+    photonic_conv_fused_kernel, photonic_conv_kernel)
+from repro.kernels.uncertainty_head import (
+    uncertainty_head_fused_kernel, uncertainty_head_kernel)
 
 Impl = Literal["auto", "pallas", "ref"]
 
@@ -135,6 +147,152 @@ def flash_attention(q, k, v, impl: Impl = "auto", causal: bool = True,
         v.transpose(0, 2, 1, 3), causal=causal, q_offset=q_offset,
         bq=bq, bk=bk, interpret=interp)
     return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# seed-driven fast path: entropy generated in-kernel on TPU
+# ---------------------------------------------------------------------------
+
+def entropy_bytes(kind: str, *, num_samples: int, m: int = 0, k: int = 0,
+                  n: int = 0, b: int = 0, t_out: int = 0, c: int = 9,
+                  in_kernel: bool = False) -> int:
+    """Bytes of randomness crossing HBM per prediction.
+
+    kind: 'weight_space' (S*K*N operand), 'lrt' (S*M*N), 'head' (S*M*V ==
+    lrt at the vocab), 'conv' (S*B*To*C — one fresh per-symbol draw per
+    MC shot).  The in-kernel path is 0 by construction: the variates are
+    born and die in registers.
+    """
+    if in_kernel:
+        return 0
+    counts = {
+        "weight_space": num_samples * k * n,
+        "lrt": num_samples * m * n,
+        "head": num_samples * m * n,
+        "conv": num_samples * b * t_out * c,
+    }
+    return counts[kind] * 4
+
+
+@functools.partial(jax.jit, static_argnames=("num_samples", "impl", "bm",
+                                             "bn", "bk"))
+def bayes_matmul_sampled(x, mu, sigma, seed, num_samples: int = 10,
+                         impl: Impl = "auto", bm: int = 128, bn: int = 128,
+                         bk: int = 512):
+    """S seeded weight-space MC samples of y = x @ (mu + sigma*eps).
+
+    Returns (S, M, N).  On TPU the eps tensor never exists: the kernel
+    draws it in-register from (seed, grid coords), and each mu/sigma tile
+    is read once for all S samples.
+    """
+    use_pallas, interp = _resolve(impl)
+    if not use_pallas:
+        return ref.bayes_matmul_sampled(x, mu, sigma, seed, num_samples)
+    m, k = x.shape
+    _, n = mu.shape
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    mup = _pad_to(_pad_to(mu, 0, bk), 1, bn)
+    sgp = _pad_to(_pad_to(sigma, 0, bk), 1, bn)
+    eps = None
+    if interp:  # validation path: host-derived operand, same seed
+        eps = ref.sampled_normal(seed, (num_samples, *mup.shape))
+    y = bayes_matmul_fused_kernel(xp, mup, sgp, seed,
+                                  num_samples=num_samples, eps=eps,
+                                  bm=bm, bn=bn, bk=bk, interpret=interp)
+    return y[:, :m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("num_samples", "impl", "bm",
+                                             "bn", "bk"))
+def lrt_matmul_sampled(x, mu, sigma, seed, num_samples: int = 10,
+                       impl: Impl = "auto", bm: int = 128, bn: int = 128,
+                       bk: int = 512):
+    """S seeded LRT MC samples: (S, M, N), one mean/var GEMM for all S."""
+    use_pallas, interp = _resolve(impl)
+    if not use_pallas:
+        return ref.lrt_matmul_sampled(x, mu, sigma, seed, num_samples)
+    m, k = x.shape
+    _, n = mu.shape
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    mup = _pad_to(_pad_to(mu, 0, bk), 1, bn)
+    sgp = _pad_to(_pad_to(sigma, 0, bk), 1, bn)
+    xi = None
+    if interp:
+        xi = ref.sampled_normal(
+            seed, (num_samples, xp.shape[0], mup.shape[1]))
+    y = lrt_matmul_fused_kernel(xp, mup, sgp, seed,
+                                num_samples=num_samples, xi=xi,
+                                bm=bm, bn=bn, bk=bk, interpret=interp)
+    return y[:, :m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "bb", "dac_bits",
+                                             "adc_bits"))
+def photonic_conv_sampled(x, mu, sigma, seed, impl: Impl = "auto",
+                          bb: int = 8, dac_bits: int = 8, adc_bits: int = 8):
+    """Seeded machine primitive: per-symbol draws born in-kernel on TPU."""
+    use_pallas, interp = _resolve(impl)
+    if not use_pallas:
+        return ref.photonic_conv_sampled(x, mu, sigma, seed,
+                                         dac_bits=dac_bits,
+                                         adc_bits=adc_bits)
+    b, t = x.shape
+    c = mu.shape[-1]
+    xp = _pad_to(x, 0, bb)
+    eps = None
+    if interp:
+        eps = ref.sampled_normal(seed, (xp.shape[0], t - c + 1, c))
+    y = photonic_conv_fused_kernel(xp, mu, sigma, seed, eps=eps, bb=bb,
+                                   dac_bits=dac_bits, adc_bits=adc_bits,
+                                   interpret=interp)
+    return y[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("num_samples", "impl", "bm",
+                                             "bv"))
+def uncertainty_head_sampled(x, mu, sigma, seed, num_samples: int = 10,
+                             impl: Impl = "auto", bm: int = 128,
+                             bv: int = 512):
+    """Seeded fused Bayesian head: no xi operand, no logits scratch.
+
+    Pass 2 regenerates the sample logits from the replayed in-kernel
+    stream instead of re-reading an (S, M, V) HBM buffer.
+    """
+    use_pallas, interp = _resolve(impl)
+    if not use_pallas:
+        return ref.uncertainty_head_sampled(x, mu, sigma, seed, num_samples)
+    m = x.shape[0]
+    xp = _pad_to(x, 0, bm)
+    xi = None
+    if interp:
+        xi = ref.sampled_normal(
+            seed, (num_samples, xp.shape[0], mu.shape[-1]))
+    out = uncertainty_head_fused_kernel(xp, mu, sigma, seed,
+                                        num_samples=num_samples, xi=xi,
+                                        bm=bm, bv=bv, interpret=interp)
+    return {k: v[:m] for k, v in out.items()}
+
+
+def bayes_conv2d_im2col_sampled(x, mu, sigma, seed, num_samples: int = 10,
+                                impl: Impl = "auto"):
+    """S seeded MC samples of the 3x3 probabilistic conv (im2col GEMM).
+
+    x: (B, C_in, H, W); mu/sigma: (C_out, C_in, 3, 3)
+    -> (S, B, C_out, H, W).  The im2col GEMM routes through the fused
+    S-sample kernel: one weight load per prediction.
+    """
+    b, cin, h, w = x.shape
+    cout = mu.shape[0]
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    patches = jax.lax.conv_general_dilated_patches(
+        xp, (3, 3), (1, 1), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NHWC"))
+    pk = patches.reshape(b * h * w, cin * 9)
+    mu2 = mu.reshape(cout, cin * 9).T
+    sg2 = sigma.reshape(cout, cin * 9).T
+    y = bayes_matmul_sampled(pk, mu2, sg2, seed, num_samples=num_samples,
+                             impl=impl)
+    return y.reshape(num_samples, b, h, w, cout).transpose(0, 1, 4, 2, 3)
 
 
 def bayes_conv2d_im2col(x, mu, sigma, eps, impl: Impl = "auto"):

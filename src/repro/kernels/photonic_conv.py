@@ -10,6 +10,12 @@ machine's interface, so one kernel call is one batch of analog shots.
 Grid: batch tiles only — the full time axis of a tile lives in VMEM
 (To <= a few thousand symbols per shot, exactly the machine's operating
 regime; bb*T*4B + bb*To*C*4B ~ 2.5 MB at bb=8, T=4096).
+
+Two entropy paths (see kernels/bayes_matmul.py for the full story):
+``photonic_conv_kernel`` takes an explicit eps operand (validation /
+external-entropy path); ``photonic_conv_fused_kernel`` with eps=None
+seeds the per-core PRNG and draws the per-symbol variates in-register —
+the (B, To, C) entropy operand never exists in HBM.
 """
 
 from __future__ import annotations
@@ -19,8 +25,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import entropy as E
+from repro.kernels import rng
 
 
 def _quant(x, bits, x_max):
@@ -73,3 +81,70 @@ def photonic_conv_kernel(x: jax.Array, mu: jax.Array, sigma: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, To), jnp.float32),
         interpret=interpret,
     )(x, mu[None], sigma[None], eps)
+
+
+def _photonic_conv_fused_kernel(*refs, num_channels: int, dac_bits: int,
+                                adc_bits: int, in_range: float,
+                                out_range: float, in_kernel_rng: bool):
+    if in_kernel_rng:
+        seed_ref, x_ref, mu_ref, sg_ref, o_ref = refs
+    else:
+        seed_ref, x_ref, mu_ref, sg_ref, eps_ref, o_ref = refs
+    C = num_channels
+    To = o_ref.shape[-1]
+    xq = _quant(x_ref[...].astype(jnp.float32), dac_bits, in_range)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    if in_kernel_rng:
+        pltpu.prng_seed(seed_ref[0, 0], pl.program_id(0))
+    for k in range(C):
+        if in_kernel_rng:
+            eps_k = rng.normal_draw((xq.shape[0], To))
+        else:
+            eps_k = eps_ref[..., C - 1 - k].astype(jnp.float32)
+        w = mu_ref[0, C - 1 - k] + sg_ref[0, C - 1 - k] * eps_k
+        acc += xq[:, k:k + To] * w
+    o_ref[...] = _quant(acc, adc_bits, out_range)
+
+
+def photonic_conv_fused_kernel(x: jax.Array, mu: jax.Array, sigma: jax.Array,
+                               seed, *, eps: jax.Array | None = None,
+                               dac_bits: int = E.DAC_BITS,
+                               adc_bits: int = E.ADC_BITS,
+                               in_range: float = 1.0, out_range: float = 4.0,
+                               bb: int = 8,
+                               interpret: bool = False) -> jax.Array:
+    """x: (B, T); mu/sigma: (C,) -> y: (B, To) with in-kernel entropy.
+
+    eps=None selects the in-kernel PRNG fast path (TPU only); an explicit
+    eps (B, To, C) selects the validation path (runs in interpret mode).
+    """
+    B, T = x.shape
+    C = mu.shape[-1]
+    To = T - C + 1
+    bb = min(bb, B)
+    assert B % bb == 0
+    grid = (B // bb,)
+    in_kernel_rng = eps is None
+    seed_arr = jnp.asarray(seed, jnp.int32).reshape(1, 1)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        pl.BlockSpec((bb, T), lambda i: (i, 0)),
+        pl.BlockSpec((1, C), lambda i: (0, 0)),
+        pl.BlockSpec((1, C), lambda i: (0, 0)),
+    ]
+    operands = [seed_arr, x, mu[None], sigma[None]]
+    if not in_kernel_rng:
+        assert eps.shape == (B, To, C)
+        in_specs.append(pl.BlockSpec((bb, To, C), lambda i: (i, 0, 0)))
+        operands.append(eps)
+    return pl.pallas_call(
+        functools.partial(_photonic_conv_fused_kernel, num_channels=C,
+                          dac_bits=dac_bits, adc_bits=adc_bits,
+                          in_range=in_range, out_range=out_range,
+                          in_kernel_rng=in_kernel_rng),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bb, To), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, To), jnp.float32),
+        interpret=interpret,
+    )(*operands)

@@ -3,6 +3,14 @@
 These are the ground truth the kernels are validated against (interpret
 mode on CPU, shape/dtype sweeps in tests/test_kernels.py).  They are also
 the fallback path on backends without Pallas support.
+
+The ``*_sampled`` variants are the seeded oracles for the in-kernel
+entropy path: they derive their standard variates deterministically from
+an int32 seed (``sampled_normal``) and return all S Monte-Carlo samples.
+Parity with the kernels' in-kernel PRNG is statistical — output *moments*
+(mean/std over S) within tolerance — since the TPU PRNG and threefry
+produce different bit streams from the same seed.  Determinism (same
+seed -> same output) holds exactly on each path.
 """
 
 from __future__ import annotations
@@ -84,3 +92,56 @@ def uncertainty_head(x: jax.Array, mu: jax.Array, sigma: jax.Array,
     return {"H": h, "SE": se, "MI": mi,
             "pred": p_mean.argmax(axis=-1).astype(jnp.int32),
             "p_max": p_mean.max(axis=-1)}
+
+
+# ---------------------------------------------------------------------------
+# seeded oracles for the in-kernel entropy path
+# ---------------------------------------------------------------------------
+
+def sampled_normal(seed, shape: tuple[int, ...],
+                   dtype=jnp.float32) -> jax.Array:
+    """Deterministic standard variates from an int32 seed (threefry)."""
+    key = jax.random.key(jnp.asarray(seed, jnp.uint32))
+    return jax.random.normal(key, shape, dtype)
+
+
+def bayes_matmul_sampled(x: jax.Array, mu: jax.Array, sigma: jax.Array,
+                         seed, num_samples: int) -> jax.Array:
+    """S seeded weight-space MC samples: (S, M, N)."""
+    eps = sampled_normal(seed, (num_samples, *mu.shape))
+    return jax.vmap(lambda e: bayes_matmul(x, mu, sigma, e))(eps)
+
+
+def lrt_matmul_sampled(x: jax.Array, mu: jax.Array, sigma: jax.Array,
+                       seed, num_samples: int) -> jax.Array:
+    """S seeded LRT MC samples sharing one mean/variance GEMM: (S, M, N).
+
+    This IS the fused-kernel computation shape: the two matmuls are
+    sample-independent, only the output-space noise varies with s.
+    """
+    x32 = x.astype(jnp.float32)
+    mean = x32 @ mu.astype(jnp.float32)
+    var = (x32 * x32) @ (sigma.astype(jnp.float32) ** 2)
+    std = jnp.sqrt(jnp.maximum(var, 0.0))
+    xi = sampled_normal(seed, (num_samples, *mean.shape))
+    return mean[None] + std[None] * xi
+
+
+def photonic_conv_sampled(x: jax.Array, mu: jax.Array, sigma: jax.Array,
+                          seed, dac_bits: int = 8, adc_bits: int = 8,
+                          in_range: float = 1.0,
+                          out_range: float = 4.0) -> jax.Array:
+    """Seeded 9-tap probabilistic conv: fresh per-symbol draws from seed."""
+    C = mu.shape[-1]
+    To = x.shape[-1] - C + 1
+    eps = sampled_normal(seed, (*x.shape[:-1], To, C))
+    return photonic_conv(x, mu, sigma, eps, dac_bits=dac_bits,
+                         adc_bits=adc_bits, in_range=in_range,
+                         out_range=out_range)
+
+
+def uncertainty_head_sampled(x: jax.Array, mu: jax.Array, sigma: jax.Array,
+                             seed, num_samples: int) -> dict[str, jax.Array]:
+    """Seeded fused Bayesian head + uncertainty readout."""
+    xi = sampled_normal(seed, (num_samples, x.shape[0], mu.shape[-1]))
+    return uncertainty_head(x, mu, sigma, xi)

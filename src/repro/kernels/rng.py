@@ -1,0 +1,71 @@
+"""In-kernel entropy for the Bayesian Pallas kernels.
+
+The photonic machine's architectural rule — randomness is generated *at*
+the MAC and never transits the datapath — maps to TPU as the on-core PRNG:
+``pltpu.prng_seed`` + ``pltpu.prng_random_bits`` produce the standard
+variates in registers, so the entropy operand disappears from HBM
+entirely (0 bytes of randomness crossing the memory system per
+prediction, vs S*K*N*4 for weight-space operands or S*M*V*4 for the
+LRT head operand).
+
+Two helpers:
+
+  * ``uniform_from_bits``  -- uint32 -> U[0, 1) using the top 24 bits
+    (full f32 mantissa precision, no modulo bias).
+  * ``normal_draw``        -- Box-Muller over two independent bit draws;
+    the per-core PRNG state advances between ``prng_random_bits`` calls,
+    so repeated draws inside one kernel invocation are independent.
+
+Seeding convention (shared by every kernel family): the kernel mixes the
+user seed with its grid coordinates, ``pltpu.prng_seed(seed, i, j, ...)``,
+so each tile owns a distinct stream and re-seeding with the same
+coordinates replays the same bits — which is what lets the uncertainty
+head's pass 2 *regenerate* the sample logits instead of re-reading an
+(S, M, V) scratch from HBM.
+
+These primitives only lower on real TPUs (Mosaic); this container's
+generic interpret mode has no rule for them.  The ops.py wrappers
+therefore derive the variates host-side from the same seed
+(``ref.sampled_normal``) and feed them to the kernels as an explicit
+operand — the validation path.  Parity between the two paths is
+statistical (moments over S samples), not bitwise; determinism (same
+seed -> same output) holds on each path separately.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+_TWO_PI = 2.0 * math.pi
+_INV_2_24 = 1.0 / float(1 << 24)
+
+
+def uniform_from_bits(bits: jax.Array) -> jax.Array:
+    """uint32 random bits -> U[0, 1) f32 (top 24 bits, unbiased)."""
+    u32 = pltpu.bitcast(bits, jnp.uint32)
+    return (u32 >> jnp.uint32(8)).astype(jnp.float32) * _INV_2_24
+
+
+def normal_draw(shape: tuple[int, ...]) -> jax.Array:
+    """One standard-normal tensor from the seeded per-core PRNG.
+
+    Box-Muller: r*cos(theta) with r = sqrt(-2 log(1-u1)), theta = 2 pi u2.
+    u1 in [0, 1) keeps 1-u1 in (0, 1], so the log never sees 0.
+    Call pltpu.prng_seed(...) before the first draw of a kernel body.
+    """
+    u1 = uniform_from_bits(pltpu.prng_random_bits(shape))
+    u2 = uniform_from_bits(pltpu.prng_random_bits(shape))
+    r = jnp.sqrt(-2.0 * jnp.log(1.0 - u1))
+    return r * jnp.cos(_TWO_PI * u2)
+
+
+def seed_from_key(key: jax.Array) -> jax.Array:
+    """int32 kernel seed from a typed or raw uint32 PRNG key — the bridge
+    from key-threaded call sites to the seed-driven kernel entropy path."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return key.ravel()[-1].astype(jnp.int32)

@@ -27,15 +27,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, reduced
+from repro.core.entropy import KernelEntropy
 from repro.data.synthetic import TokenStreamState, token_batch
 from repro.launch import steps as S
 from repro.models import registry as M
 
 
 def serve(args) -> dict:
+    import dataclasses
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    cfg = dataclasses.replace(cfg, head_entropy=args.entropy)
     key = jax.random.key(args.seed)
     params = M.init_params(key, cfg)
 
@@ -54,9 +57,12 @@ def serve(args) -> dict:
         modality = jnp.zeros((args.batch, cfg.num_prefix_embeds,
                               cfg.d_model), jnp.float32)
 
+    entropy = KernelEntropy(seed=args.seed) \
+        if args.entropy == "kernel" else None
     prefill = jax.jit(lambda p, t, m: M.prefill(p, cfg, t, max_len, m),
                       static_argnames=())
-    decode = jax.jit(S.build_decode_step(cfg), donate_argnums=(2,))
+    decode = jax.jit(S.build_decode_step(cfg, entropy=entropy),
+                     donate_argnums=(2,))
 
     t0 = time.time()
     hidden, cache = M.prefill(params, cfg, tokens, max_len, modality)
@@ -77,6 +83,14 @@ def serve(args) -> dict:
     se = np.stack(rows["SE"])
     flags_epi = mi > args.mi_threshold
     flags_alea = (se > args.se_threshold) & ~flags_epi
+    # entropy HBM traffic of the head's MC draws per decoded token: the
+    # xi operand is (S, B, V) f32 per decode step and a step emits B
+    # tokens, so the per-token share is S*V*4; 0 on the in-kernel path
+    # (TPU only — off-TPU the kernel-mode falls back to the seeded host
+    # oracle, which still materializes the variates).
+    in_kernel = args.entropy == "kernel" and jax.default_backend() == "tpu"
+    entropy_bytes = 0 if in_kernel else \
+        cfg.mc_samples * cfg.vocab_size * 4
     result = {
         "tokens": np.stack(rows["token"]),
         "MI": mi, "SE": se, "H": np.stack(rows["H"]),
@@ -85,6 +99,8 @@ def serve(args) -> dict:
         "aleatoric_flags": int(flags_alea.sum()),
         "prefill_s": prefill_s,
         "decode_tok_per_s": args.gen_len * args.batch / max(decode_s, 1e-9),
+        "entropy_mode": args.entropy,
+        "entropy_hbm_bytes_per_token": entropy_bytes,
     }
     return result
 
@@ -99,12 +115,20 @@ def main():
     ap.add_argument("--mi-threshold", type=float, default=0.05)
     ap.add_argument("--se-threshold", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--entropy", choices=("operand", "kernel"),
+                    default="kernel",
+                    help="'kernel': seed-driven head draws, generated "
+                         "in-kernel on TPU (0 HBM entropy bytes); "
+                         "'operand': legacy key-threaded xi tensor")
     args = ap.parse_args()
     r = serve(args)
     print(f"prefill {r['prefill_s']:.2f}s  "
           f"decode {r['decode_tok_per_s']:.1f} tok/s  "
           f"epistemic flags {r['epistemic_flags']}  "
           f"aleatoric flags {r['aleatoric_flags']}")
+    print(f"entropy: {r['entropy_mode']} path, "
+          f"{r['entropy_hbm_bytes_per_token'] / 1e6:.2f} MB/token "
+          f"of randomness over HBM")
     print("MI (T,B):\n", np.array2string(r["MI"], precision=4))
 
 

@@ -106,9 +106,21 @@ def build_prefill_step(cfg: ArchConfig, max_len: int):
     return prefill_step
 
 
-def build_decode_step(cfg: ArchConfig):
+def build_decode_step(cfg: ArchConfig, entropy=None):
+    """Decode-step builder.
+
+    ``entropy`` (a ``core.entropy.KernelEntropy``) selects the seed-driven
+    path: the per-step key derives from its base seed, and the Bayesian
+    head's MC draws are generated in-kernel on TPU (zero HBM entropy
+    operand).  Default keeps the legacy fixed-key stream.
+    """
+    if entropy is not None:
+        base = entropy.key()
+    else:
+        base = jax.random.PRNGKey(17)
+
     def decode_step(params, token, cache, step):
-        key = jax.random.fold_in(jax.random.PRNGKey(17), step)
+        key = jax.random.fold_in(base, step)
         return M.decode_step(params, cfg, token, cache, key)
 
     return decode_step

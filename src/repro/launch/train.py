@@ -121,38 +121,47 @@ def train(args) -> dict:
 
         monitor = StragglerMonitor()
         history = []
-        for i in range(start_step, args.steps):
-            toks, stream = token_batch(stream, args.batch, args.seq + 1,
-                                       cfg.vocab_size)
-            batch = {"tokens": jnp.asarray(toks[:, :-1]),
-                     "labels": jnp.asarray(toks[:, 1:])}
-            if cfg.family == "encdec":
-                from repro.models.encdec import ENC_LEN
-                batch["frames"] = jnp.zeros(
-                    (args.batch, ENC_LEN, cfg.d_model), jnp.float32)
-            if cfg.family == "vlm":
-                batch["prefix_embeds"] = jnp.zeros(
-                    (args.batch, cfg.num_prefix_embeds, cfg.d_model),
-                    jnp.float32)
+        # join any in-flight async save on EVERY exit from the step loop
+        # (including exceptions): a completed-in-memory snapshot must
+        # reach its atomic rename before the process can act on the
+        # failure, or an immediate in-process resume races the writer
+        # thread and silently restarts from an older (or no) step.
+        try:
+            for i in range(start_step, args.steps):
+                toks, stream = token_batch(stream, args.batch, args.seq + 1,
+                                           cfg.vocab_size)
+                batch = {"tokens": jnp.asarray(toks[:, :-1]),
+                         "labels": jnp.asarray(toks[:, 1:])}
+                if cfg.family == "encdec":
+                    from repro.models.encdec import ENC_LEN
+                    batch["frames"] = jnp.zeros(
+                        (args.batch, ENC_LEN, cfg.d_model), jnp.float32)
+                if cfg.family == "vlm":
+                    batch["prefix_embeds"] = jnp.zeros(
+                        (args.batch, cfg.num_prefix_embeds, cfg.d_model),
+                        jnp.float32)
 
-            t0 = time.time()
-            state, metrics = jstep(state, batch)
-            loss = float(metrics["loss"])
-            dt = time.time() - t0
-            slow = monitor.observe(dt)
-            history.append(loss)
-            if args.fail_at_step is not None and i == args.fail_at_step:
-                raise RuntimeError(f"injected failure at step {i}")
-            if mgr is not None and (i + 1) % args.ckpt_every == 0:
-                mgr.save_async(i + 1, state,
-                               extra={"step": i + 1,
-                                      "stream": vars(stream)})
-            if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
-                print(f"step {i:5d} loss {loss:8.4f} "
-                      f"nll {float(metrics['nll']):8.4f} "
-                      f"kl {float(metrics['kl']):10.1f} "
-                      f"gnorm {float(metrics['grad_norm']):7.3f} "
-                      f"{'STRAGGLER' if slow else ''}")
+                t0 = time.time()
+                state, metrics = jstep(state, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                slow = monitor.observe(dt)
+                history.append(loss)
+                if args.fail_at_step is not None and i == args.fail_at_step:
+                    raise RuntimeError(f"injected failure at step {i}")
+                if mgr is not None and (i + 1) % args.ckpt_every == 0:
+                    mgr.save_async(i + 1, state,
+                                   extra={"step": i + 1,
+                                          "stream": vars(stream)})
+                if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+                    print(f"step {i:5d} loss {loss:8.4f} "
+                          f"nll {float(metrics['nll']):8.4f} "
+                          f"kl {float(metrics['kl']):10.1f} "
+                          f"gnorm {float(metrics['grad_norm']):7.3f} "
+                          f"{'STRAGGLER' if slow else ''}")
+        finally:
+            if mgr is not None:
+                mgr.wait()
         if mgr is not None:
             mgr.save_async(args.steps, state,
                            extra={"step": args.steps,

@@ -141,9 +141,20 @@ def apply(params, cfg: BNNConfig, x: jax.Array, key: jax.Array,
 
 def mc_predict(params, cfg: BNNConfig, x: jax.Array, key: jax.Array,
                mode: str = "machine",
-               spec: SurrogateSpec = SurrogateSpec()) -> jax.Array:
-    """N stochastic forward passes -> probs (N, B, classes) (paper N=10)."""
-    keys = jax.random.split(key, cfg.mc_samples)
+               spec: SurrogateSpec = SurrogateSpec(),
+               entropy: Optional[E.KernelEntropy] = None) -> jax.Array:
+    """N stochastic forward passes -> probs (N, B, classes) (paper N=10).
+
+    ``entropy`` selects the seed-driven fast path: the per-sample streams
+    derive from ``entropy.seed`` instead of the ambient ``key``, making
+    the prediction a pure function of (params, x, seed) — the contract
+    the in-kernel TPU entropy path (kernels/bayes_matmul) serves, and
+    what lets serving replicas agree without shipping PRNG state.
+    """
+    if entropy is not None:
+        keys = jax.random.split(entropy.key(), cfg.mc_samples)
+    else:
+        keys = jax.random.split(key, cfg.mc_samples)
     logits = jax.vmap(
         lambda k: apply(params, cfg, x, k, mode=mode, spec=spec))(keys)
     return jax.nn.softmax(logits, axis=-1)

@@ -231,6 +231,24 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     B = hidden.shape[0]
     S = cfg.mc_samples
     head = params["head"]
+    if "q" in head and not cfg.logits_softcap \
+            and cfg.head_entropy == "kernel":
+        # seed-driven fused head: on TPU the xi tensor never exists (the
+        # uncertainty-head kernel draws it in-register and regenerates the
+        # sample logits in its second pass); off-TPU the seeded oracle
+        # runs.  Softcapped heads keep the explicit-logits path below.
+        from repro.kernels import ops, rng
+        q = head["q"]
+        unc = ops.uncertainty_head_sampled(
+            hidden, q.mu, q.sigma, rng.seed_from_key(key), num_samples=S)
+        outputs = {
+            "next_token": unc["pred"],
+            "H": unc["H"], "SE": unc["SE"], "MI": unc["MI"],
+            "p_max": unc["p_max"],
+        }
+        new_cache = {"k": new_kvs["k"], "v": new_kvs["v"],
+                     "len": cache_len + 1}
+        return outputs, new_cache
     if "q" in head:
         xi = jax.random.normal(key, (S, B, cfg.vocab_size), jnp.float32)
         logits = L.head_logits_sampled(head, hidden[None], cfg, xi)

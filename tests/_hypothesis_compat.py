@@ -1,0 +1,40 @@
+"""Optional-hypothesis shim.
+
+pyproject.toml declares hypothesis as a test dependency, but the tier-1
+suite must still *collect and run* on environments without it (e.g. a
+container where only the runtime deps are baked in).  Importing from here
+instead of hypothesis directly turns the property tests into skips when
+hypothesis is absent, instead of failing the whole collection with
+ModuleNotFoundError.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised in bare envs
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for hypothesis.strategies; returns inert objects."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    def given(*args, **kwargs):
+        def deco(f):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+            _skipped.__name__ = f.__name__
+            _skipped.__doc__ = f.__doc__
+            return _skipped
+        return deco

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -174,6 +174,183 @@ def test_uncertainty_head_identities():
     assert (h <= np.log(v) + 1e-5).all()
     assert (mi <= h + 1e-6).all()
     np.testing.assert_allclose(se, h - mi, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# in-kernel entropy path: seeded parity (moments) + determinism
+# ---------------------------------------------------------------------------
+# The in-kernel PRNG only lowers on real TPUs; in interpret mode the
+# *_sampled wrappers run the same fused kernels with an explicit operand
+# derived host-side from the same seed (the validation path).  The oracle
+# and the kernel draw different bit streams, so parity is statistical —
+# mean/std over S samples — exactly the contract the TPU path satisfies.
+
+def _sampled_setup(key, m, k, n):
+    ks = jax.random.split(key, 3)
+    x = _rand(ks[0], m, k)
+    mu = _rand(ks[1], k, n, scale=0.3)
+    sg = jnp.abs(_rand(ks[2], k, n, scale=0.1))
+    return x, mu, sg
+
+
+def _assert_sample_moments(got, x, mu, sg, lrt=False):
+    """Moments of S MC samples vs the analytic LRT mean/std."""
+    x32 = x.astype(jnp.float32)
+    mean = x32 @ mu
+    std = jnp.sqrt(jnp.maximum((x32 * x32) @ (sg ** 2), 0.0))
+    s = got.shape[0]
+    # standardized residual of the sample mean is ~N(0,1) per element:
+    # its mean |.| is ~0.8 for an unbiased stream; a mean/std bug in the
+    # generated variates shifts it by O(sqrt(S)).
+    resid = (np.asarray(got.mean(0)) - np.asarray(mean)) \
+        / np.maximum(np.asarray(std) / np.sqrt(s), 1e-6)
+    assert np.abs(resid).mean() < 1.5, np.abs(resid).mean()
+    ratio = np.asarray(got.std(0)) / np.maximum(np.asarray(std), 1e-6)
+    assert abs(ratio.mean() - 1.0) < 0.2, ratio.mean()
+
+
+@pytest.mark.parametrize("fn,oracle", [
+    (ops.bayes_matmul_sampled, ref.bayes_matmul_sampled),
+    (ops.lrt_matmul_sampled, ref.lrt_matmul_sampled),
+])
+def test_sampled_matmul_moments_match_oracle(fn, oracle):
+    m, k, n, s = 16, 64, 24, 64
+    x, mu, sg = _sampled_setup(jax.random.key(30), m, k, n)
+    got = fn(x, mu, sg, 123, num_samples=s, impl="pallas")
+    want = oracle(x, mu, sg, 123, s)
+    assert got.shape == want.shape == (s, m, n)
+    _assert_sample_moments(got, x, mu, sg)
+    _assert_sample_moments(want, x, mu, sg)
+    # the two paths agree on the analytic mean within MC error of each
+    np.testing.assert_allclose(got.mean(0), want.mean(0), atol=0.5)
+
+
+@pytest.mark.parametrize("fn", [ops.bayes_matmul_sampled,
+                                ops.lrt_matmul_sampled])
+@pytest.mark.parametrize("impl", ["pallas", "ref"])
+def test_sampled_matmul_determinism(fn, impl):
+    x, mu, sg = _sampled_setup(jax.random.key(31), 8, 32, 16)
+    a = fn(x, mu, sg, 7, num_samples=4, impl=impl)
+    b = fn(x, mu, sg, 7, num_samples=4, impl=impl)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = fn(x, mu, sg, 8, num_samples=4, impl=impl)
+    assert not np.allclose(a, c)
+
+
+def test_fused_kernels_match_ref_with_explicit_entropy():
+    """Bit-exact parity of the fused S-sample kernel *structure* against
+    the oracle when both consume the same explicit variates (the
+    validation path — isolates the fusion from the RNG)."""
+    from repro.kernels.bayes_matmul import (bayes_matmul_fused_kernel,
+                                            lrt_matmul_fused_kernel)
+    m, k, n, s = 16, 32, 24, 5
+    x, mu, sg = _sampled_setup(jax.random.key(32), m, k, n)
+    eps = jax.random.normal(jax.random.key(33), (s, k, n))
+    got = bayes_matmul_fused_kernel(x, mu, sg, 0, num_samples=s, eps=eps,
+                                    interpret=True)
+    want = jax.vmap(lambda e: ref.bayes_matmul(x, mu, sg, e))(eps)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+    xi = jax.random.normal(jax.random.key(34), (s, m, n))
+    got = lrt_matmul_fused_kernel(x, mu, sg, 0, num_samples=s, xi=xi,
+                                  interpret=True)
+    want = jax.vmap(lambda z: ref.lrt_matmul(x, mu, sg, z))(xi)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_fused_head_matches_ref_with_explicit_entropy():
+    """The scratch-free two-pass head (pass 2 regenerates logits instead
+    of re-reading the (S, M, V) buffer) is exact vs the oracle when both
+    consume the same xi."""
+    from repro.kernels.uncertainty_head import uncertainty_head_fused_kernel
+    m, k, v, s = 8, 16, 21, 6
+    ks = jax.random.split(jax.random.key(35), 4)
+    x = _rand(ks[0], m, k)
+    mu = _rand(ks[1], k, v, scale=0.2)
+    sg = jnp.abs(_rand(ks[2], k, v, scale=0.05))
+    xi = _rand(ks[3], s, m, v)
+    got = uncertainty_head_fused_kernel(x, mu, sg, 0, num_samples=s, xi=xi,
+                                        bm=8, bv=16, interpret=True)
+    want = ref.uncertainty_head(x, mu, sg, xi)
+    for name in ("H", "SE", "MI", "p_max"):
+        np.testing.assert_allclose(got[name], want[name], rtol=1e-4,
+                                   atol=1e-5, err_msg=name)
+    np.testing.assert_array_equal(got["pred"], want["pred"])
+
+
+def test_sampled_head_moments_and_determinism():
+    m, k, v, s = 8, 16, 12, 10
+    ks = jax.random.split(jax.random.key(36), 3)
+    x = _rand(ks[0], m, k)
+    mu = _rand(ks[1], k, v, scale=0.2)
+    sg = jnp.abs(_rand(ks[2], k, v, scale=0.05))
+    a = ops.uncertainty_head_sampled(x, mu, sg, 5, num_samples=s,
+                                     impl="pallas")
+    b = ops.uncertainty_head_sampled(x, mu, sg, 5, num_samples=s,
+                                     impl="pallas")
+    for name in a:
+        np.testing.assert_array_equal(np.asarray(a[name]),
+                                      np.asarray(b[name]))
+    want = ref.uncertainty_head_sampled(x, mu, sg, 5, s)
+    # H of the mean predictive is dominated by the mean logits -> the two
+    # seed streams must land in the same entropy regime
+    np.testing.assert_allclose(a["H"], want["H"], atol=0.35)
+    assert (np.asarray(a["MI"]) >= -1e-6).all()
+    np.testing.assert_allclose(np.asarray(a["SE"]),
+                               np.asarray(a["H"]) - np.asarray(a["MI"]),
+                               atol=1e-5)
+
+
+def test_sampled_conv_moments_and_determinism():
+    b, t, c = 8, 64, 9
+    ks = jax.random.split(jax.random.key(37), 2)
+    x = jax.random.uniform(ks[0], (b, t), minval=-1, maxval=1)
+    mu = jax.random.uniform(ks[1], (c,), minval=-0.6, maxval=0.6)
+    sg = jnp.abs(mu) * 0.2
+    a = ops.photonic_conv_sampled(x, mu, sg, 9, impl="pallas")
+    a2 = ops.photonic_conv_sampled(x, mu, sg, 9, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a2))
+    # different seeds -> different shot noise, same mean conv
+    ys = np.stack([np.asarray(
+        ops.photonic_conv_sampled(x, mu, sg, s, impl="ref"))
+        for s in range(40)])
+    want = ref.photonic_conv(x, mu, sg, jnp.zeros((b, t - c + 1, c)))
+    np.testing.assert_allclose(ys.mean(0), np.asarray(want), atol=0.15)
+
+
+def test_im2col_sampled_shape_determinism_and_mean():
+    """The seeded 3x3-conv GEMM: (S, B, C_out, H, W) layout is right
+    (sample mean converges to the mean-weight conv), and the stream is a
+    pure function of the seed."""
+    ks = jax.random.split(jax.random.key(40), 3)
+    b, cin, cout, h, w, s = 2, 3, 4, 6, 6, 64
+    x = _rand(ks[0], b, cin, h, w)
+    mu = _rand(ks[1], cout, cin, 3, 3, scale=0.2)
+    sg = jnp.abs(_rand(ks[2], cout, cin, 3, 3, scale=0.05))
+    y = ops.bayes_conv2d_im2col_sampled(x, mu, sg, 3, num_samples=s,
+                                        impl="ref")
+    assert y.shape == (s, b, cout, h, w)
+    y2 = ops.bayes_conv2d_im2col_sampled(x, mu, sg, 3, num_samples=s,
+                                         impl="ref")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+    mean_conv = ops.bayes_conv2d_im2col(x, mu, sg, jnp.zeros_like(mu),
+                                        impl="ref")
+    np.testing.assert_allclose(y.mean(0), mean_conv, atol=0.35)
+
+
+def test_entropy_bytes_accounting():
+    """The benchmark's traffic columns: operand path counts the exact
+    operand bytes, in-kernel path is 0 by construction."""
+    s, m, k, v = 10, 128, 1024, 4096
+    assert ops.entropy_bytes("weight_space", num_samples=s, k=k, n=v) \
+        == s * k * v * 4
+    assert ops.entropy_bytes("head", num_samples=s, m=m, n=v) \
+        == s * m * v * 4
+    assert ops.entropy_bytes("conv", num_samples=1, b=8, t_out=248) \
+        == 8 * 248 * 9 * 4
+    for kind in ("weight_space", "lrt", "head", "conv"):
+        assert ops.entropy_bytes(kind, num_samples=s, m=m, k=k, n=v, b=8,
+                                 t_out=248, in_kernel=True) == 0
 
 
 # ---------------------------------------------------------------------------

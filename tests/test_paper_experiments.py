@@ -69,6 +69,26 @@ def bloodcell_bnn():
 
 
 class TestBloodCell:
+    def test_mc_predict_seed_driven_entropy_is_deterministic(
+            self, bloodcell_bnn):
+        """The KernelEntropy path: the prediction is a pure function of
+        (params, x, seed) — no ambient key — the contract the in-kernel
+        TPU entropy path serves."""
+        from repro.core.entropy import KernelEntropy
+        cfg, params = bloodcell_bnn
+        rng = np.random.default_rng(7)
+        xte, _ = D.blood_cells(rng, 16)
+        x = jnp.asarray(xte)
+        dead_key = jax.random.key(123)    # must be ignored when entropy set
+        a = B.mc_predict(params, cfg, x, dead_key, mode="machine",
+                         entropy=KernelEntropy(seed=4))
+        b = B.mc_predict(params, cfg, x, jax.random.key(999),
+                         mode="machine", entropy=KernelEntropy(seed=4))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        c = B.mc_predict(params, cfg, x, dead_key, mode="machine",
+                         entropy=KernelEntropy(seed=5))
+        assert not np.allclose(a, c)
+
     def test_id_accuracy_above_chance(self, bloodcell_bnn):
         cfg, params = bloodcell_bnn
         rng = np.random.default_rng(1)
