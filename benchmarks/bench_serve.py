@@ -1,0 +1,130 @@
+"""Benchmark: continuous-batching scan-decode engine vs per-token loop.
+
+The serving analog of the paper's headline numbers (37.5 ps/convolution,
+1.28 Tbit/s interface): how fast can the stack emit uncertainty-gated
+tokens?  Both paths run the identical model + MC head; they differ only
+in drive: the baseline dispatches one jitted step and syncs the host per
+token (the pre-engine ``serve`` driver, kept as
+``launch.serve.decode_loop_reference``), the engine decodes ``chunk``
+tokens per device call inside ``jax.lax.scan`` and syncs once per chunk,
+with requests continuously admitted/evicted over a slot-indexed KV
+cache.  Compilation is excluded on both sides (steady-state dispatch is
+what serving pays per token).
+
+Writes ``BENCH_serve.json`` (next to ``BENCH_kernels.json``, the CI
+perf-trajectory artifacts).  Fields:
+
+  shapes                 {slots, chunk, prompt_len, gen_len, num_requests}
+  backend                jax backend the numbers were taken on
+  timings_indicative     True off-TPU (CPU dispatch dominates)
+  baseline_tok_per_s     per-token-loop decode throughput (1 sync/token)
+  engine_tok_per_s       scan-decode engine decode throughput
+  speedup_scan_x         engine_tok_per_s / baseline_tok_per_s (>= 2x
+                         is the acceptance bar on the reduced CPU config)
+  engine_e2e_tok_per_s   engine end to end: prefills + scheduling + decode
+  latency_p50_s, latency_p99_s   per-request submit->finish latency
+  prefill_compile_s      first jitted prefill call (includes tracing+XLA)
+  prefill_steady_s       mean steady-state per-request prefill
+  flags_per_1k_tokens    {epistemic, aleatoric} gating rates of the run
+  entropy_mode           head-draw stream ('operand': the CPU parity path)
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, reduced
+from repro.launch import steps as S
+from repro.launch.serve import (Request, ServeEngine, decode_loop_reference)
+from repro.models import registry as M
+
+
+def run(quick: bool = False) -> dict:
+    slots, chunk, prompt_len = 4, 8, 16
+    gen_len, num_requests = (16, 8) if quick else (32, 12)
+    arch = "qwen2_1_5b"
+    cfg = reduced(get_config(arch))
+    import dataclasses
+    cfg = dataclasses.replace(cfg, head_entropy="operand")
+    key = jax.random.key(0)
+    params = M.init_params(key, cfg)
+    prompts = np.asarray(
+        jax.random.randint(key, (num_requests, prompt_len), 0,
+                           cfg.vocab_size), np.int32)
+
+    def make_requests():
+        return [Request(rid=i, prompt=prompts[i], max_new_tokens=gen_len)
+                for i in range(num_requests)]
+
+    # --- baseline: per-token loop over static batches of `slots` rows ---
+    decode_fn = jax.jit(S.build_decode_step(cfg), donate_argnums=(2,))
+    decode_loop_reference(params, cfg, prompts[:slots], 2,
+                          decode_fn=decode_fn)       # warm up compile
+    base_s, base_tokens = 0.0, 0
+    for lo in range(0, num_requests, slots):
+        batch = prompts[lo:lo + slots]
+        r = decode_loop_reference(params, cfg, batch, gen_len,
+                                  decode_fn=decode_fn)
+        base_s += r["decode_s"]
+        base_tokens += gen_len * batch.shape[0]
+    baseline_tok_s = base_tokens / max(base_s, 1e-9)
+
+    # --- engine: continuous batching + chunked scan decode ---
+    engine = ServeEngine(params, cfg, num_slots=slots,
+                         max_len=prompt_len + gen_len + chunk, chunk=chunk)
+    warm = engine.run(make_requests()[:slots])       # warm up compile
+    res = engine.run(make_requests())
+
+    return {
+        "shapes": {"slots": slots, "chunk": chunk,
+                   "prompt_len": prompt_len, "gen_len": gen_len,
+                   "num_requests": num_requests, "arch": arch},
+        "backend": jax.default_backend(),
+        "timings_indicative": jax.default_backend() != "tpu",
+        "baseline_tok_per_s": baseline_tok_s,
+        "engine_tok_per_s": res["decode_tok_per_s"],
+        "speedup_scan_x": res["decode_tok_per_s"] / baseline_tok_s,
+        "engine_e2e_tok_per_s": res["e2e_tok_per_s"],
+        "latency_p50_s": res["latency_p50_s"],
+        "latency_p99_s": res["latency_p99_s"],
+        "prefill_compile_s": warm["prefill_compile_s"],
+        "prefill_steady_s": res["prefill_steady_s"],
+        "flags_per_1k_tokens": res["flags_per_1k_tokens"],
+        "entropy_mode": "operand",
+    }
+
+
+def main(quick: bool = False, json_path: str = "BENCH_serve.json"):
+    r = run(quick)
+    s = r["shapes"]
+    print(f"serving bench ({s['arch']} reduced, {s['num_requests']} reqs, "
+          f"{s['slots']} slots, chunk {s['chunk']})")
+    print(f"  per-token loop:   {r['baseline_tok_per_s']:8.1f} tok/s "
+          f"(1 host sync per token)")
+    print(f"  scan-decode:      {r['engine_tok_per_s']:8.1f} tok/s "
+          f"({r['speedup_scan_x']:.2f}x, 1 sync per {s['chunk']} tokens)")
+    print(f"  engine e2e:       {r['engine_e2e_tok_per_s']:8.1f} tok/s "
+          f"(incl. prefill + scheduling)")
+    print(f"  latency p50/p99:  {r['latency_p50_s']:.3f}s / "
+          f"{r['latency_p99_s']:.3f}s per request")
+    print(f"  prefill:          compile {r['prefill_compile_s']:.2f}s, "
+          f"steady {r['prefill_steady_s'] * 1e3:.1f}ms")
+    f = r["flags_per_1k_tokens"]
+    print(f"  flags/1k tokens:  {f['epistemic']:.1f} epistemic, "
+          f"{f['aleatoric']:.1f} aleatoric")
+    if r["timings_indicative"]:
+        print(f"  [timings on {r['backend']} are indicative; the ratio is "
+              f"the dispatch-overhead win, which only grows on TPU]")
+    if json_path:
+        with open(json_path, "w") as fo:
+            json.dump(r, fo, indent=1, default=float)
+        print(f"  -> {json_path}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

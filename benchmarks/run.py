@@ -10,6 +10,10 @@
                                       (emits BENCH_kernels.json: entropy
                                       HBM traffic + fused-GEMM speedup,
                                       the CI perf-trajectory artifact)
+  bench_serve        beyond-paper     continuous-batching scan-decode
+                                      engine vs per-token loop (emits
+                                      BENCH_serve.json: tok/s, p50/p99
+                                      request latency, flags/1k tokens)
   roofline           deliverable (g)  three-term roofline per dry-run cell
 """
 
@@ -29,13 +33,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_bloodcell, bench_disentangle,
-                            bench_kernels, bench_photonic,
+                            bench_kernels, bench_photonic, bench_serve,
                             bench_throughput, roofline)
 
     benches = {
         "photonic": lambda: bench_photonic.main(args.quick),
         "throughput": lambda: bench_throughput.main(args.quick),
         "kernels": lambda: bench_kernels.main(args.quick),
+        "serve": lambda: bench_serve.main(args.quick),
         "bloodcell": lambda: bench_bloodcell.main(args.quick),
         "disentangle": lambda: bench_disentangle.main(args.quick),
     }

@@ -73,6 +73,13 @@ class MachineConfig:
     crosstalk: float = 0.04           # adjacent-channel leakage (grating sidelobes)
     eom_mod_depth: float = 0.75       # residual sin() nonlinearity after linearization
     drift_std: float = 0.03           # slow power drift between calibration and use
+    # bandwidth-axis impairments: the waveshaper programs channel bandwidth
+    # on a discrete setpoint grid and its filter edges wander shot to shot;
+    # both hit sigma (prop. 1/sqrt(BW)) while leaving the power (mean) axis
+    # untouched -- the asymmetry behind the paper's std error (0.266)
+    # exceeding its mean error (0.158).
+    bw_quant_ghz: float = 12.5        # waveshaper setpoint granularity
+    bw_jitter_std: float = 0.05       # fractional filter-edge jitter per shot
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,8 +88,13 @@ class ChannelProgram:
     power: jax.Array      # (C,)  differential optical power -> weight mean
     bandwidth: jax.Array  # (C,)  GHz -> weight std via Gamma modes
 
-    def moments(self) -> tuple[jax.Array, jax.Array]:
-        m = E.modes_from_bandwidth(self.bandwidth)
+    def moments(self, bandwidth: Optional[jax.Array] = None
+                ) -> tuple[jax.Array, jax.Array]:
+        """Weight moments for a bandwidth (default: the programmed
+        setpoint -- the controller's ideal model; the plant passes the
+        *effective* bandwidth it realizes, see ``effective_bandwidth``)."""
+        m = E.modes_from_bandwidth(self.bandwidth if bandwidth is None
+                                   else bandwidth)
         mu = self.power
         # std of the detected weight: |power|/sqrt(M); the differential
         # reference arm carries the sign but both arms fluctuate.
@@ -110,18 +122,40 @@ def program_for_target(mu: jax.Array, sigma: jax.Array,
 # the analog forward pass
 # --------------------------------------------------------------------------
 
+def effective_bandwidth(key: jax.Array, bw_ghz: jax.Array,
+                        cfg: MachineConfig = MachineConfig()) -> jax.Array:
+    """Bandwidth the filter actually realizes for a programmed setpoint.
+
+    The waveshaper snaps the request to its setpoint grid (``bw_quant_ghz``)
+    and its filter edges wander between shots (``bw_jitter_std``, fractional).
+    The controller's moment model (``ChannelProgram.moments``) stays ideal:
+    feedback calibration sees these imperfections only through measured
+    output moments, which is why they survive as residual sigma error.
+    """
+    bw = bw_ghz
+    if cfg.bw_quant_ghz > 0:
+        bw = jnp.round(bw / cfg.bw_quant_ghz) * cfg.bw_quant_ghz
+    if cfg.bw_jitter_std > 0:
+        jit = 1.0 + cfg.bw_jitter_std * jax.random.normal(
+            key, jnp.shape(bw))
+        bw = bw * jnp.maximum(jit, 0.1)
+    return jnp.clip(bw, E.BW_MIN_GHZ, E.BW_MAX_GHZ)
+
+
 def sample_weights(key: jax.Array, prog: ChannelProgram, shape: tuple[int, ...],
                    cfg: MachineConfig = MachineConfig()) -> jax.Array:
     """Draw physical weights w ~ machine(prog), fresh per output symbol.
 
     shape is appended in front of the channel axis:  (*shape, C).
     """
-    mu, sigma = prog.moments()
+    bw = effective_bandwidth(jax.random.fold_in(key, 0xB4D), prog.bandwidth,
+                             cfg)
+    mu, sigma = prog.moments(bandwidth=bw)
     if cfg.gaussian_surrogate:
         eps = jax.random.normal(key, (*shape, mu.shape[-1]))
     else:
-        m = E.modes_from_bandwidth(prog.bandwidth)
-        m = jnp.broadcast_to(m, (*shape, mu.shape[-1]))
+        m = jnp.broadcast_to(E.modes_from_bandwidth(bw),
+                             (*shape, mu.shape[-1]))
         gam = jax.random.gamma(key, m) / m
         eps = (gam - 1.0) * jnp.sqrt(m)
     return mu + sigma * eps

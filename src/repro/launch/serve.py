@@ -1,26 +1,44 @@
-"""Batched uncertainty-aware serving driver.
+"""Continuous-batching uncertainty serving engine.
 
-The inference analog of the paper's deployment: a batch of requests is
-prefLLed once, then decoded token by token; each decode step draws
-``cfg.mc_samples`` (paper: N=10) samples of the Bayesian output head --
-fused in the uncertainty-head kernel on TPU, jnp-LRT elsewhere -- and
-emits the (H, SE, MI) uncertainty triplet per token alongside the greedy
-token.  Tokens whose MI exceeds ``--mi-threshold`` are flagged epistemic
-(the LM analog of the paper's OOD rejection); high-SE/low-MI tokens are
-flagged aleatoric (ambiguous continuation).
+The deployment analog of the paper's high-throughput trustworthy
+inference: a queue of requests is served through a fixed set of decode
+slots over one slot-indexed KV cache.  A host-side ``SlotScheduler``
+admits queued requests into free slots (batch-1 jitted prefill written
+into the slot at its own offset), the inner decode loop is a
+``jax.lax.scan`` that generates ``--chunk`` tokens per device call --
+carrying the (H, SE, MI) uncertainty triplet and the epistemic/aleatoric
+gating flags in the scan carry, one host sync per chunk instead of one
+per token -- and slots are evicted on EOS / max-new-tokens and refilled
+from the queue.
+
+Each decode step draws ``cfg.mc_samples`` (paper: N=10) samples of the
+Bayesian output head -- fused in the uncertainty-head kernel on TPU,
+jnp-LRT elsewhere.  Tokens whose MI exceeds ``--mi-threshold`` are
+flagged epistemic (the LM analog of the paper's OOD rejection);
+high-SE/low-MI tokens are flagged aleatoric (ambiguous continuation).
+
+The pre-engine per-token loop survives as ``decode_loop_reference`` --
+the parity oracle (scan decode replays its token stream exactly in
+operand-entropy mode for requests admitted at engine start; requests
+admitted later draw from the engine's global step stream, so replaying
+them needs the same step offset) and the benchmark baseline that
+``benchmarks/bench_serve.py`` measures the engine against.
 
 Container-scale: reduced config, debug mesh.  Full-size serving shapes
 (prefill_32k / decode_32k / long_500k) are compile-proven by launch.dryrun.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_1_5b \
-      --batch 4 --prompt-len 32 --gen-len 16
+      --slots 4 --num-requests 8 --prompt-len 32 --gen-len 16 --chunk 8
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
+import dataclasses
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,75 +51,309 @@ from repro.launch import steps as S
 from repro.models import registry as M
 
 
+# ---------------------------------------------------------------------------
+# requests + host-side slot scheduler
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One serving request plus its accumulated results."""
+
+    rid: int
+    prompt: np.ndarray                    # (S,) int32
+    max_new_tokens: int
+    t_submit: float = 0.0
+    t_finish: float = 0.0
+    finish_reason: str = ""
+    tokens: list = dataclasses.field(default_factory=list)
+    H: list = dataclasses.field(default_factory=list)
+    SE: list = dataclasses.field(default_factory=list)
+    MI: list = dataclasses.field(default_factory=list)
+    p_max: list = dataclasses.field(default_factory=list)
+    epistemic_flags: int = 0
+    aleatoric_flags: int = 0
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_finish - self.t_submit
+
+
+class SlotScheduler:
+    """FIFO admission of queued requests into fixed decode slots.
+
+    Pure host-side bookkeeping (no jax): ``admit`` fills free slots in
+    slot order from the queue front, ``evict`` frees a slot for reuse.
+    """
+
+    def __init__(self, num_slots: int):
+        self.slots: list[Optional[Request]] = [None] * num_slots
+        self.queue: collections.deque[Request] = collections.deque()
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def admit(self) -> list[tuple[int, Request]]:
+        placed = []
+        for i, occupant in enumerate(self.slots):
+            if occupant is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                placed.append((i, req))
+        return placed
+
+    def evict(self, slot: int) -> Request:
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"evict of empty slot {slot}")
+        self.slots[slot] = None
+        return req
+
+    def active(self) -> list[tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class ServeEngine:
+    """Continuous-batching scan-decoded uncertainty engine.
+
+    ``num_slots`` concurrent decode slots over one slot-indexed KV cache
+    of depth ``max_len``; ``chunk`` tokens decoded per device call.
+    ``entropy`` (KernelEntropy) selects the seeded head-draw stream
+    (in-kernel on TPU); None keeps the legacy operand stream.
+    """
+
+    def __init__(self, params, cfg, *, num_slots: int, max_len: int,
+                 chunk: int = 8, entropy: Optional[KernelEntropy] = None,
+                 mi_threshold: float = 0.05, se_threshold: float = 1.0,
+                 eos_id: Optional[int] = None):
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.chunk = chunk
+        self.eos_id = eos_id
+        self._prefill = jax.jit(
+            lambda p, t, m: M.prefill(p, cfg, t, max_len, m))
+        self._write = jax.jit(
+            lambda c, slot, sub: M.write_slot(cfg, c, slot, sub),
+            donate_argnums=(0,))
+        self._scan = jax.jit(
+            S.build_scan_decode(cfg, entropy=entropy, chunk=chunk,
+                                mi_threshold=mi_threshold,
+                                se_threshold=se_threshold),
+            donate_argnums=(2,))
+
+    def _modality(self, batch: int):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            from repro.models.encdec import ENC_LEN
+            return jnp.zeros((batch, ENC_LEN, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            return jnp.zeros((batch, cfg.num_prefix_embeds, cfg.d_model),
+                             jnp.float32)
+        return None
+
+    def run(self, requests: list[Request]) -> dict:
+        """Serve ``requests`` to completion; returns engine metrics.
+
+        One host sync per admission (prefill) and one per decoded chunk
+        (the stacked (chunk, B) outputs) -- never per token.
+        """
+        for r in requests:
+            if len(r.prompt) == 0:
+                raise ValueError(f"request {r.rid}: empty prompt")
+            if r.max_new_tokens < 1:
+                raise ValueError(
+                    f"request {r.rid}: max_new_tokens must be >= 1")
+            if len(r.prompt) + r.max_new_tokens > self.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {len(r.prompt)} + "
+                    f"max_new_tokens {r.max_new_tokens} exceeds the "
+                    f"slot capacity max_len={self.max_len}; cache writes "
+                    f"past capacity would be dropped silently")
+        sched = SlotScheduler(self.num_slots)
+        t_start = time.perf_counter()
+        for r in requests:
+            r.t_submit = time.perf_counter()
+            sched.submit(r)
+
+        tok = jnp.zeros((self.num_slots,), jnp.int32)
+        cache = M.make_cache(self.cfg, self.num_slots, self.max_len)
+        active = jnp.zeros((self.num_slots,), bool)
+        flags = {"epistemic": jnp.zeros((self.num_slots,), jnp.int32),
+                 "aleatoric": jnp.zeros((self.num_slots,), jnp.int32)}
+        step0 = 0
+        decode_s = 0.0
+        # the jitted prefill compiles once per distinct prompt length;
+        # classify each admission's time accordingly so mixed-length
+        # traffic doesn't launder recompiles into the steady-state stat
+        compile_times: list[float] = []
+        steady_times: list[float] = []
+        seen_prompt_lens: set[int] = set()
+        modality1 = self._modality(1)
+
+        while sched.has_work():
+            for slot, req in sched.admit():
+                t0 = time.perf_counter()
+                _, sub = self._prefill(
+                    self.params, jnp.asarray(req.prompt)[None], modality1)
+                cache = self._write(cache, jnp.asarray(slot, jnp.int32),
+                                    sub)
+                tok = tok.at[slot].set(int(req.prompt[-1]))
+                active = active.at[slot].set(True)
+                flags = {k: v.at[slot].set(0) for k, v in flags.items()}
+                jax.block_until_ready(cache)
+                dt = time.perf_counter() - t0
+                if len(req.prompt) in seen_prompt_lens:
+                    steady_times.append(dt)
+                else:
+                    seen_prompt_lens.add(len(req.prompt))
+                    compile_times.append(dt)
+
+            t0 = time.perf_counter()
+            tok, cache, flags, ys = self._scan(
+                self.params, tok, cache, jnp.asarray(step0, jnp.int32),
+                active, flags)
+            ys = jax.device_get(ys)            # the chunk's single sync
+            decode_s += time.perf_counter() - t0
+            step0 += self.chunk
+
+            for slot, req in sched.active():
+                for t in range(self.chunk):
+                    tk = int(ys["token"][t, slot])
+                    req.tokens.append(tk)
+                    for name in ("H", "SE", "MI", "p_max"):
+                        getattr(req, name).append(float(ys[name][t, slot]))
+                    req.epistemic_flags += int(ys["epistemic"][t, slot])
+                    req.aleatoric_flags += int(ys["aleatoric"][t, slot])
+                    done_eos = self.eos_id is not None and tk == self.eos_id
+                    if done_eos or len(req.tokens) >= req.max_new_tokens:
+                        req.t_finish = time.perf_counter()
+                        req.finish_reason = "eos" if done_eos else "length"
+                        sched.evict(slot)
+                        active = active.at[slot].set(False)
+                        break
+
+        total_s = time.perf_counter() - t_start
+        gen_tokens = sum(len(r.tokens) for r in requests)
+        lat = np.array([r.latency_s for r in requests]) if requests \
+            else np.zeros((1,))
+        epi = sum(r.epistemic_flags for r in requests)
+        alea = sum(r.aleatoric_flags for r in requests)
+        return {
+            "requests": requests,
+            "num_requests": len(requests),
+            "gen_tokens": gen_tokens,
+            "total_s": total_s,
+            "decode_s": decode_s,
+            # first prefill per prompt length includes compilation; the
+            # rest are steady-state dispatch
+            "prefill_compile_s": float(np.sum(compile_times)),
+            "prefill_steady_s": float(np.mean(steady_times))
+            if steady_times else 0.0,
+            "decode_tok_per_s": gen_tokens / max(decode_s, 1e-9),
+            "e2e_tok_per_s": gen_tokens / max(total_s, 1e-9),
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p99_s": float(np.percentile(lat, 99)),
+            "epistemic_flags": int(epi),
+            "aleatoric_flags": int(alea),
+            "flags_per_1k_tokens": {
+                "epistemic": 1000.0 * epi / max(gen_tokens, 1),
+                "aleatoric": 1000.0 * alea / max(gen_tokens, 1),
+            },
+            # device-side telemetry from the scan carry: per-slot totals a
+            # pure-device driver could read without syncing ys.  Upper-
+            # bounds the exact host accounting above (a request finishing
+            # mid-chunk keeps counting until its chunk boundary).
+            "device_flag_counters": {
+                k: np.asarray(v).tolist() for k, v in flags.items()
+            },
+        }
+
+
+# ---------------------------------------------------------------------------
+# per-token reference loop (parity oracle + benchmark baseline)
+# ---------------------------------------------------------------------------
+
+def decode_loop_reference(params, cfg, tokens, gen_len: int, *,
+                          entropy: Optional[KernelEntropy] = None,
+                          max_len: Optional[int] = None,
+                          modality=None, decode_fn=None) -> dict:
+    """The pre-engine decode driver: one jitted step + one host sync per
+    token over a statically batched prompt matrix.  Scan decode must
+    reproduce this loop's token stream exactly in operand-entropy mode
+    (same fold_in(base, global_step) noise; tested in test_serve.py).
+
+    ``decode_fn`` lets benchmarks pass a pre-compiled step so the timed
+    loop measures steady-state dispatch, not compilation.
+    """
+    tokens = jnp.asarray(tokens)
+    B, P = tokens.shape
+    max_len = max_len or P + gen_len
+    _, cache = M.prefill(params, cfg, tokens, max_len, modality)
+    decode = decode_fn or jax.jit(S.build_decode_step(cfg, entropy=entropy),
+                                  donate_argnums=(2,))
+    tok = tokens[:, -1]
+    rows = {"token": [], "H": [], "SE": [], "MI": [], "p_max": []}
+    t0 = time.perf_counter()
+    for i in range(gen_len):
+        out, cache = decode(params, tok, cache, jnp.asarray(i, jnp.int32))
+        tok = out["next_token"]
+        rows["token"].append(np.asarray(tok))        # per-token sync
+        for k in ("H", "SE", "MI", "p_max"):
+            rows[k].append(np.asarray(out[k]))
+    decode_s = time.perf_counter() - t0
+    return {name: np.stack(vals) for name, vals in rows.items()} | {
+        "decode_s": decode_s,
+        "decode_tok_per_s": gen_len * B / max(decode_s, 1e-9),
+    }
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def make_requests(args, cfg) -> list[Request]:
+    stream = TokenStreamState(seed=args.seed, host=0, num_hosts=1)
+    toks, _ = token_batch(stream, args.num_requests, args.prompt_len,
+                          cfg.vocab_size)
+    return [Request(rid=i, prompt=np.asarray(toks[i], np.int32),
+                    max_new_tokens=args.gen_len)
+            for i in range(args.num_requests)]
+
+
 def serve(args) -> dict:
-    import dataclasses
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     cfg = dataclasses.replace(cfg, head_entropy=args.entropy)
-    key = jax.random.key(args.seed)
-    params = M.init_params(key, cfg)
-
-    stream = TokenStreamState(seed=args.seed, host=0, num_hosts=1)
-    toks, _ = token_batch(stream, args.batch, args.prompt_len,
-                          cfg.vocab_size)
-    tokens = jnp.asarray(toks)
-    max_len = args.prompt_len + args.gen_len
-
-    modality = None
-    if cfg.family == "encdec":
-        from repro.models.encdec import ENC_LEN
-        modality = jnp.zeros((args.batch, ENC_LEN, cfg.d_model),
-                             jnp.float32)
-    if cfg.family == "vlm":
-        modality = jnp.zeros((args.batch, cfg.num_prefix_embeds,
-                              cfg.d_model), jnp.float32)
+    params = M.init_params(jax.random.key(args.seed), cfg)
 
     entropy = KernelEntropy(seed=args.seed) \
         if args.entropy == "kernel" else None
-    prefill = jax.jit(lambda p, t, m: M.prefill(p, cfg, t, max_len, m),
-                      static_argnames=())
-    decode = jax.jit(S.build_decode_step(cfg, entropy=entropy),
-                     donate_argnums=(2,))
+    engine = ServeEngine(
+        params, cfg, num_slots=args.slots,
+        max_len=args.prompt_len + args.gen_len + args.chunk,
+        chunk=args.chunk, entropy=entropy,
+        mi_threshold=args.mi_threshold, se_threshold=args.se_threshold,
+        eos_id=args.eos_id)
+    result = engine.run(make_requests(args, cfg))
 
-    t0 = time.time()
-    hidden, cache = M.prefill(params, cfg, tokens, max_len, modality)
-    prefill_s = time.time() - t0
-
-    tok = tokens[:, -1]
-    rows = {"token": [], "H": [], "SE": [], "MI": [], "p_max": []}
-    t0 = time.time()
-    for i in range(args.gen_len):
-        out, cache = decode(params, tok, cache, jnp.asarray(i, jnp.int32))
-        tok = out["next_token"]
-        for k in ("H", "SE", "MI", "p_max"):
-            rows[k].append(np.asarray(out[k]))
-        rows["token"].append(np.asarray(tok))
-    decode_s = time.time() - t0
-
-    mi = np.stack(rows["MI"])           # (T, B)
-    se = np.stack(rows["SE"])
-    flags_epi = mi > args.mi_threshold
-    flags_alea = (se > args.se_threshold) & ~flags_epi
     # entropy HBM traffic of the head's MC draws per decoded token: the
     # xi operand is (S, B, V) f32 per decode step and a step emits B
     # tokens, so the per-token share is S*V*4; 0 on the in-kernel path
     # (TPU only — off-TPU the kernel-mode falls back to the seeded host
     # oracle, which still materializes the variates).
     in_kernel = args.entropy == "kernel" and jax.default_backend() == "tpu"
-    entropy_bytes = 0 if in_kernel else \
+    result["entropy_mode"] = args.entropy
+    result["entropy_hbm_bytes_per_token"] = 0 if in_kernel else \
         cfg.mc_samples * cfg.vocab_size * 4
-    result = {
-        "tokens": np.stack(rows["token"]),
-        "MI": mi, "SE": se, "H": np.stack(rows["H"]),
-        "p_max": np.stack(rows["p_max"]),
-        "epistemic_flags": int(flags_epi.sum()),
-        "aleatoric_flags": int(flags_alea.sum()),
-        "prefill_s": prefill_s,
-        "decode_tok_per_s": args.gen_len * args.batch / max(decode_s, 1e-9),
-        "entropy_mode": args.entropy,
-        "entropy_hbm_bytes_per_token": entropy_bytes,
-    }
     return result
 
 
@@ -109,9 +361,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2_1_5b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="concurrent decode slots (the decode batch)")
+    ap.add_argument("--num-requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16,
+                    help="max new tokens per request")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode steps per device call (scan length)")
+    ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--mi-threshold", type=float, default=0.05)
     ap.add_argument("--se-threshold", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -122,14 +380,25 @@ def main():
                          "'operand': legacy key-threaded xi tensor")
     args = ap.parse_args()
     r = serve(args)
-    print(f"prefill {r['prefill_s']:.2f}s  "
-          f"decode {r['decode_tok_per_s']:.1f} tok/s  "
-          f"epistemic flags {r['epistemic_flags']}  "
-          f"aleatoric flags {r['aleatoric_flags']}")
+    print(f"served {r['num_requests']} requests / {r['gen_tokens']} tokens "
+          f"in {r['total_s']:.2f}s")
+    print(f"prefill compile {r['prefill_compile_s']:.2f}s  "
+          f"steady {r['prefill_steady_s'] * 1e3:.1f}ms")
+    print(f"decode {r['decode_tok_per_s']:.1f} tok/s "
+          f"(e2e {r['e2e_tok_per_s']:.1f})  "
+          f"latency p50 {r['latency_p50_s']:.2f}s "
+          f"p99 {r['latency_p99_s']:.2f}s")
+    print(f"epistemic flags {r['epistemic_flags']}  "
+          f"aleatoric flags {r['aleatoric_flags']}  "
+          f"(per 1k tokens: {r['flags_per_1k_tokens']['epistemic']:.1f} / "
+          f"{r['flags_per_1k_tokens']['aleatoric']:.1f})")
     print(f"entropy: {r['entropy_mode']} path, "
           f"{r['entropy_hbm_bytes_per_token'] / 1e6:.2f} MB/token "
           f"of randomness over HBM")
-    print("MI (T,B):\n", np.array2string(r["MI"], precision=4))
+    print("MI per request:")
+    for r_ in r["requests"]:
+        print(f"  #{r_.rid} ({r_.finish_reason}): "
+              + np.array2string(np.asarray(r_.MI), precision=4))
 
 
 if __name__ == "__main__":

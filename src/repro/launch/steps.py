@@ -36,12 +36,17 @@ from repro.sharding.partition import param_pspecs, sanitize_pspecs
 
 def build_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
                      svi_cfg: Optional[SVIConfig] = None,
-                     micro_batches: int = 1):
+                     micro_batches: int = 1, seed: int = 0):
     """(state, batch) -> (state, metrics); state = {params, opt}.
 
     micro_batches > 1 scans over leading-dim splits of the batch,
     accumulating grads in f32 (bounds activation memory; the MoE dispatch
     buffer scales with the microbatch, DESIGN.md §5).
+
+    ``seed`` roots the SVI noise stream: the per-step key is
+    fold_in(PRNGKey(seed), step), so two runs with different seeds draw
+    different head samples (and two runs with the same seed replay the
+    same stream -- crash/resume stays bit-exact).
     """
     svi = svi_cfg or SVIConfig()
 
@@ -54,7 +59,7 @@ def build_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
     def train_step(state, batch):
         params, opt = state["params"], state["opt"]
         step = opt["step"]
-        key = jax.random.fold_in(jax.random.PRNGKey(0), step)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
 
         if micro_batches == 1:
             (loss, aux), grads = grad_fn(params, batch, key, step)
@@ -106,24 +111,90 @@ def build_prefill_step(cfg: ArchConfig, max_len: int):
     return prefill_step
 
 
-def build_decode_step(cfg: ArchConfig, entropy=None):
-    """Decode-step builder.
+def _decode_base_key(entropy):
+    """Base PRNG key of the decode noise stream.
 
     ``entropy`` (a ``core.entropy.KernelEntropy``) selects the seed-driven
-    path: the per-step key derives from its base seed, and the Bayesian
-    head's MC draws are generated in-kernel on TPU (zero HBM entropy
-    operand).  Default keeps the legacy fixed-key stream.
+    path: the Bayesian head's MC draws are generated in-kernel on TPU
+    (zero HBM entropy operand).  ``None`` keeps the legacy fixed-key
+    stream.
     """
-    if entropy is not None:
-        base = entropy.key()
-    else:
-        base = jax.random.PRNGKey(17)
+    return entropy.key() if entropy is not None else jax.random.PRNGKey(17)
+
+
+def build_decode_step(cfg: ArchConfig, entropy=None):
+    """Single uncertain decode step: (params, token, cache, step) ->
+    (outputs, cache).  The per-step key is fold_in(base, step) -- the
+    same convention ``build_scan_decode`` uses, so the two paths draw
+    identical noise at identical global step indices."""
+    base = _decode_base_key(entropy)
 
     def decode_step(params, token, cache, step):
         key = jax.random.fold_in(base, step)
         return M.decode_step(params, cfg, token, cache, key)
 
     return decode_step
+
+
+def build_scan_decode(cfg: ArchConfig, entropy=None, chunk: int = 8,
+                      mi_threshold: float = 0.05,
+                      se_threshold: float = 1.0):
+    """Chunked on-device decode: ``chunk`` tokens per host round-trip.
+
+    Returns ``scan_decode(params, token, cache, step0, active, flags) ->
+    (token, cache, flags, ys)`` where the inner ``jax.lax.scan`` carries
+    (token, slot-indexed cache, cumulative per-slot epistemic/aleatoric
+    flag counters) and stacks per-step outputs ``ys`` = {token, H, SE,
+    MI, p_max, epistemic, aleatoric}, each (chunk, B).  No per-token
+    host sync: the caller transfers ``ys`` once per chunk.
+
+    ``active`` (B,) bool gates the carried counters: only occupied slots
+    accumulate, so a pure-device driver can read per-slot flag totals
+    without ever syncing ``ys``.  The counters are device telemetry: a
+    request finishing mid-chunk keeps counting until the chunk boundary
+    (the host can't evict inside the scan), so they upper-bound the
+    exact per-request host accounting done from ``ys``.
+
+    Noise stream under scan: step t of the chunk uses key
+    fold_in(base, step0 + t) -- the same global-step convention as
+    ``build_decode_step``, so scan decode replays the per-step loop's
+    stream bit-for-bit in operand mode *at equal global step indices*
+    (a request admitted mid-stream replays only against a loop driven
+    from the same step offset).  On the seeded kernel path the
+    folded key reaches the uncertainty-head kernel as an int32 seed and
+    the in-kernel PRNG re-mixes it with the grid coordinates, so every
+    (slot, step) site owns a distinct replayable stream with zero HBM
+    entropy traffic.
+
+    Per-slot cache depths (``cache['len']``) give per-slot RoPE
+    positions, so slots admitted mid-stream decode correctly alongside
+    older slots.  A slot's capacity is enforced by the engine at
+    admission (prompt + max-new-tokens must fit ``max_len``); writes of
+    an over-deep slot would be dropped by the scatter.
+    """
+    base = _decode_base_key(entropy)
+
+    def scan_decode(params, token, cache, step0, active, flags):
+        def body(carry, t):
+            tok, cache, epi, alea = carry
+            key = jax.random.fold_in(base, step0 + t)
+            out, cache = M.decode_step(params, cfg, tok, cache, key)
+            is_epi = out["MI"] > mi_threshold
+            is_alea = (out["SE"] > se_threshold) & ~is_epi
+            ys = {"token": out["next_token"], "H": out["H"],
+                  "SE": out["SE"], "MI": out["MI"], "p_max": out["p_max"],
+                  "epistemic": is_epi, "aleatoric": is_alea}
+            carry = (out["next_token"], cache,
+                     epi + (is_epi & active).astype(jnp.int32),
+                     alea + (is_alea & active).astype(jnp.int32))
+            return carry, ys
+
+        (token, cache, epi, alea), ys = jax.lax.scan(
+            body, (token, cache, flags["epistemic"], flags["aleatoric"]),
+            jnp.arange(chunk, dtype=jnp.int32))
+        return token, cache, {"epistemic": epi, "aleatoric": alea}, ys
+
+    return scan_decode
 
 
 # ---------------------------------------------------------------------------
@@ -173,7 +244,7 @@ _CACHE_AXES = {
     "cv": ("layer", "batch", "seq", "heads", None),
     "conv": ("layer", "batch", None, "model_dim"),
     "ssm": ("layer", "batch", "heads", None, None),
-    "len": (),
+    "len": ("batch",),
 }
 
 

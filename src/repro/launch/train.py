@@ -90,7 +90,8 @@ def train(args) -> dict:
                                            args.batch * args.steps),
                     kl_warmup_steps=max(args.steps // 4, 1))
     step_fn = S.build_train_step(cfg, opt_cfg, svi,
-                                 micro_batches=args.micro_batches)
+                                 micro_batches=args.micro_batches,
+                                 seed=args.seed)
 
     mgr = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
     stream = TokenStreamState(seed=args.seed, host=jax.process_index(),

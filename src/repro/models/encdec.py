@@ -147,7 +147,7 @@ def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
     cross = (n_dec, batch, ENC_LEN, cfg.num_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
             "ck": jnp.zeros(cross, dt), "cv": jnp.zeros(cross, dt),
-            "len": jnp.zeros((), jnp.int32)}
+            "len": jnp.zeros((batch,), jnp.int32)}
 
 
 def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int,
@@ -168,7 +168,7 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int,
     k = jnp.pad(kvs[0], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
     v = jnp.pad(kvs[1], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
     cache = {"k": k, "v": v, "ck": ckvs[0], "cv": ckvs[1],
-             "len": jnp.asarray(Sq, jnp.int32)}
+             "len": jnp.full((tokens.shape[0],), Sq, jnp.int32)}
     return x[:, -1], cache
 
 
@@ -177,7 +177,7 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     x = L.apply_embed(params["embed"], token[:, None])
     x = constrain(x, "batch", None, None)
     cache_len = cache["len"]
-    pos = jnp.reshape(cache_len, (1, 1))
+    pos = jnp.reshape(cache_len, (-1, 1))
 
     def scan_step(x, bpkv):
         bp, k, v, ck, cv = bpkv

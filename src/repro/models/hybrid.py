@@ -115,7 +115,7 @@ def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
                              cfg.head_dim), dt),
         "attn_v": jnp.zeros((A, batch, max_len, cfg.num_kv_heads,
                              cfg.head_dim), dt),
-        "len": jnp.zeros((), jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -147,7 +147,7 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int):
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     cache = {"ssm": jnp.concatenate(hs, 0), "conv": jnp.concatenate(cs, 0),
              "attn_k": jnp.stack(ks), "attn_v": jnp.stack(vs),
-             "len": jnp.asarray(Sq, jnp.int32)}
+             "len": jnp.full((tokens.shape[0],), Sq, jnp.int32)}
     return x[:, -1], cache
 
 
@@ -162,7 +162,7 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     for a in range(A):
         lo = a * cfg.attn_every
         hi = min(lo + cfg.attn_every, cfg.num_layers)
-        pos = jnp.reshape(cache_len, (1, 1))
+        pos = jnp.reshape(cache_len, (-1, 1))
         h_att, kv = L.apply_attention(
             sp["attn"], cfg, L.rms_norm(x, sp["ln1"]), positions=pos,
             kv_cache=(cache["attn_k"][a], cache["attn_v"][a]),

@@ -246,10 +246,18 @@ def apply_attention(p, cfg: ArchConfig, x: jax.Array, *,
         k = rope(k, positions, cfg.rope_theta)
         if kv_cache is not None:
             kc, vc = kv_cache
-            idx = jnp.reshape(cache_len, ())
-            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, idx, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, idx, axis=1)
-            out = decode_attention(q, kc, vc, cache_len + S)
+            # cache_len: () -> every row appends at the same depth;
+            # (B,) -> slot-indexed cache, each row writes its own offset
+            # (continuous batching: slots admitted at different times sit
+            # at different depths).  The scatter handles any S (chunked
+            # appends included); rows already at capacity land out of
+            # bounds and are dropped.
+            lens = jnp.broadcast_to(jnp.reshape(cache_len, (-1,)), (B,))
+            rows = jnp.arange(B)[:, None]
+            idx = lens[:, None] + jnp.arange(S)[None, :]
+            kc = kc.at[rows, idx].set(k, mode="drop")
+            vc = vc.at[rows, idx].set(v, mode="drop")
+            out = decode_attention(q, kc, vc, lens + S)
             new_kv = (kc, vc)
         else:
             out = flash_attention(q, k, v, causal=causal,

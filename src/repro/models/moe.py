@@ -297,7 +297,8 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int):
     pad = max_len - S
     k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
     v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-    return x[:, -1], {"k": k, "v": v, "len": jnp.asarray(S, jnp.int32)}
+    return x[:, -1], {"k": k, "v": v,
+                      "len": jnp.full((tokens.shape[0],), S, jnp.int32)}
 
 
 def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
@@ -307,7 +308,7 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
 
     def scan_step(x, bpkv):
         bp, kv = bpkv
-        pos = jnp.reshape(cache_len, (1, 1))
+        pos = jnp.reshape(cache_len, (-1, 1))
         h, new_kv = L.apply_attention(
             bp["attn"], cfg, L.rms_norm(x, bp["ln1"]), positions=pos,
             kv_cache=(kv["k"], kv["v"]), cache_len=cache_len)

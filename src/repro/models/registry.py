@@ -6,6 +6,12 @@ Uniform API across families:
     make_cache(cfg, batch, max_len) -> cache
     prefill(params, cfg, tokens, max_len, **modality) -> (hidden, cache)
     decode_step(params, cfg, token, cache, key) -> (outputs, cache)
+    write_slot(cfg, cache, slot, sub) -> cache   (slot-indexed serving)
+
+Caches are slot-indexed: every leaf carries the slot (batch) axis and
+``cache["len"]`` is a per-slot (batch,) depth vector, so a continuous-
+batching engine can admit/evict requests into individual slots while the
+others keep decoding.
 
 ``batch_spec``/``cache_spec``/modality stubs are centralized here so the
 launcher's ``input_specs`` stays arch-agnostic.
@@ -93,3 +99,23 @@ def prefill(params, cfg: ArchConfig, tokens, max_len: int,
 
 def decode_step(params, cfg: ArchConfig, token, cache, key):
     return module_for(cfg).decode_step(params, cfg, token, cache, key)
+
+
+def write_slot(cfg: ArchConfig, cache, slot, sub):
+    """Write a batch-1 request cache ``sub`` into decode slot ``slot``.
+
+    Family-agnostic by layout convention: every cache leaf carries the
+    slot (batch) axis at position 1 -- (L, B, ...) KV stacks, SSM/conv
+    states, cross-attention KV -- except the per-slot ``len`` vector,
+    which carries it at position 0.  ``slot`` may be traced (one compile
+    serves every slot).
+    """
+
+    def w(c, s):
+        s = s.astype(c.dtype)
+        if c.ndim == 1:                      # the (B,) len vector
+            return jax.lax.dynamic_update_slice(c, s, (slot,))
+        start = (0, slot) + (0,) * (c.ndim - 2)
+        return jax.lax.dynamic_update_slice(c, s, start)
+
+    return jax.tree.map(w, cache, sub)

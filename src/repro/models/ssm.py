@@ -259,7 +259,7 @@ def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
         "ssm": jnp.zeros((Lh, batch, H, P, N), jnp.float32),
         "conv": jnp.zeros((Lh, batch, cfg.ssm_conv_width - 1, d_in + 2 * N),
                           dt),
-        "len": jnp.zeros((), jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -273,7 +273,8 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int):
     x, (hs, cs) = jax.lax.scan(scan_step, x, params["blocks"])
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     cache = {"ssm": hs, "conv": cs,
-             "len": jnp.asarray(tokens.shape[1], jnp.int32)}
+             "len": jnp.full((tokens.shape[0],), tokens.shape[1],
+                             jnp.int32)}
     return x[:, -1], cache
 
 

@@ -173,10 +173,12 @@ def nll_loss(params, cfg: ArchConfig, batch: dict, key: jax.Array):
 
 def make_cache(cfg: ArchConfig, batch: int, max_len: int,
                dtype=None):
+    """Slot-indexed KV cache: ``len`` is per-slot (batch,) so decode slots
+    admitted at different times sit at independent depths."""
     dt = dtype or L.dtype_of(cfg)
     shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
-            "len": jnp.zeros((), jnp.int32)}
+            "len": jnp.zeros((batch,), jnp.int32)}
 
 
 def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int,
@@ -189,13 +191,17 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int,
     pad = max_len - S
     k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
     v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-    cache = {"k": k, "v": v, "len": jnp.asarray(S, jnp.int32)}
+    cache = {"k": k, "v": v,
+             "len": jnp.full((tokens.shape[0],), S, jnp.int32)}
     return hidden[:, -1], cache
 
 
 def _decode_block(bp, cfg, x, kv, cache_len):
-    """One layer of single-token decode; kv: dict k/v (B, S, Hkv, hd)."""
-    pos = jnp.reshape(cache_len, (1, 1))
+    """One layer of single-token decode; kv: dict k/v (B, S, Hkv, hd).
+
+    cache_len () or (B,): per-slot depths give per-slot RoPE positions.
+    """
+    pos = jnp.reshape(cache_len, (-1, 1))
     h, new_kv = L.apply_attention(
         bp["attn"], cfg, L.rms_norm(x, bp["ln1"]), positions=pos,
         kv_cache=(kv["k"], kv["v"]), cache_len=cache_len)

@@ -129,20 +129,33 @@ class TestPhotonicMachine:
         assert hist["mu_err"][-1] < hist["mu_err"][0]
         assert hist["mu_err"][-1] < 0.05
 
-    @pytest.mark.xfail(
-        reason="pre-existing at seed (masked by the hypothesis collection "
-               "error): the twin's std_error lands below its mean_error, "
-               "violating the paper's ordering — needs a physics-tuning "
-               "pass on core.photonic noise terms, tracked in ROADMAP",
-        strict=True)
     def test_computation_error_in_paper_band(self):
         """Fig. 2c/d: mean err ~0.158, std err ~0.266.  The twin must land
-        in the same regime (we assert generous bands, not exact figures)."""
+        in the same regime (we assert generous bands, not exact figures).
+        The ordering comes from the bandwidth axis being the machine's
+        less accurate one: the balanced receiver's mode count puts the
+        realizable sigma floor (1/sqrt(M_max)) inside the target range,
+        and waveshaper quantization/jitter sit on top of it -- none of
+        which the power (mean) axis sees."""
         r = PH.computation_error(jax.random.key(5), n_kernels=6,
                                  n_shots=256, seq_len=48)
         assert r["mean_error"] < 0.35
         assert r["std_error"] < 0.6
         assert r["mean_error"] < r["std_error"]  # paper's ordering
+
+    def test_effective_bandwidth_quantizes_and_jitters(self):
+        cfg = PH.MachineConfig(bw_quant_ghz=12.5, bw_jitter_std=0.0)
+        bw = jnp.array([26.0, 99.0, 150.0])
+        eff = PH.effective_bandwidth(jax.random.key(0), bw, cfg)
+        np.testing.assert_allclose(eff, [25.0, 100.0, 150.0])
+        cfg = PH.MachineConfig(bw_quant_ghz=0.0, bw_jitter_std=0.1)
+        effs = jax.vmap(lambda k: PH.effective_bandwidth(
+            k, jnp.full((64,), 100.0), cfg))(
+                jax.random.split(jax.random.key(1), 256))
+        rel = np.asarray(effs) / 100.0 - 1.0
+        assert abs(rel.std() - 0.1) < 0.02      # per-shot filter jitter
+        assert (np.asarray(effs) >= E.BW_MIN_GHZ).all()
+        assert (np.asarray(effs) <= E.BW_MAX_GHZ).all()
 
     def test_throughput_constants(self):
         t = PH.conv_throughput_estimate()

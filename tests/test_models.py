@@ -51,7 +51,9 @@ def test_prefill_decode_smoke(arch, key):
         assert out[name].shape == (B,)
         assert np.isfinite(np.asarray(out[name])).all()
     assert (np.asarray(out["MI"]) >= -1e-6).all()
-    assert int(cache2["len"]) == int(cache["len"]) + 1
+    np.testing.assert_array_equal(np.asarray(cache2["len"]),
+                                  np.asarray(cache["len"]) + 1)
+    assert cache["len"].shape == (B,)      # slot-indexed: per-slot depth
 
 
 def test_decode_matches_forward_logits():
