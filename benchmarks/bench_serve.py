@@ -11,6 +11,13 @@ with requests continuously admitted/evicted over a slot-indexed KV
 cache.  Compilation is excluded on both sides (steady-state dispatch is
 what serving pays per token).
 
+A second, MIXED-LENGTH workload drives the paged KV allocator
+(``--kv-layout paged``): requests with heterogeneous prompt and
+generation lengths run through the dense-strip reference layout and the
+paged layout, and the row reports peak KV bytes actually resident
+(mapped blocks) against the dense ``slots * max_len`` strips at the
+measured decode throughput of each.
+
 Writes ``BENCH_serve.json`` (next to ``BENCH_kernels.json``, the CI
 perf-trajectory artifacts).  Fields:
 
@@ -27,6 +34,13 @@ perf-trajectory artifacts).  Fields:
   prefill_steady_s       mean steady-state per-request prefill
   flags_per_1k_tokens    {epistemic, aleatoric} gating rates of the run
   entropy_mode           head-draw stream ('operand': the CPU parity path)
+  mixed                  mixed-length dense-vs-paged row:
+    kv_block, max_len, prompt_lens/gen_lens of the workload,
+    dense_tok_per_s / paged_tok_per_s (+ paged_vs_dense_x),
+    kv_bytes_dense_strips   what the dense layout keeps resident,
+    kv_bytes_paged_peak     peak mapped paged blocks in bytes,
+    kv_bytes_saved_frac     1 - paged_peak / dense_strips,
+    blocks_peak / blocks_total   pool utilization high-water mark
 """
 
 from __future__ import annotations
@@ -79,7 +93,55 @@ def run(quick: bool = False) -> dict:
     warm = engine.run(make_requests()[:slots])       # warm up compile
     res = engine.run(make_requests())
 
+    # --- mixed-length traffic: dense strips vs paged blocks ---
+    kv_block = 8
+    mixed_max_len = 48                               # kv_block multiple
+    n_mixed = num_requests
+    prompt_lens = [16 if i % 2 == 0 else 8 for i in range(n_mixed)]
+    gen_lens = [(4, 24, 8, 16)[i % 4] for i in range(n_mixed)]
+    mixed_prompts = np.asarray(
+        jax.random.randint(jax.random.key(1), (n_mixed, 16), 0,
+                           cfg.vocab_size), np.int32)
+
+    def mixed_requests():
+        return [Request(rid=i, prompt=mixed_prompts[i, :prompt_lens[i]],
+                        max_new_tokens=gen_lens[i])
+                for i in range(n_mixed)]
+
+    engines = {}
+    for layout in ("dense", "paged"):
+        engines[layout] = ServeEngine(params, cfg, num_slots=slots,
+                                      max_len=mixed_max_len, chunk=chunk,
+                                      kv_layout=layout, kv_block=kv_block)
+        engines[layout].run(mixed_requests()[:slots])  # warm up compile
+    # interleaved best-of-3: CPU dispatch jitter on this tiny config is
+    # ~10%, larger than the layouts' real difference, so alternate the
+    # layouts run-to-run (drift hits both) and keep each one's best
+    runs = {"dense": [], "paged": []}
+    for _ in range(3):
+        for layout, eng in engines.items():
+            runs[layout].append(eng.run(mixed_requests()))
+    mixed = {layout: max(rs, key=lambda r: r["decode_tok_per_s"])
+             for layout, rs in runs.items()}
+    kv_d, kv_p = mixed["dense"]["kv"], mixed["paged"]["kv"]
+
     return {
+        "mixed": {
+            "kv_block": kv_block,
+            "max_len": mixed_max_len,
+            "prompt_lens": prompt_lens,
+            "gen_lens": gen_lens,
+            "dense_tok_per_s": mixed["dense"]["decode_tok_per_s"],
+            "paged_tok_per_s": mixed["paged"]["decode_tok_per_s"],
+            "paged_vs_dense_x": mixed["paged"]["decode_tok_per_s"]
+            / max(mixed["dense"]["decode_tok_per_s"], 1e-9),
+            "kv_bytes_dense_strips": kv_d["bytes_in_use_peak"],
+            "kv_bytes_paged_peak": kv_p["bytes_in_use_peak"],
+            "kv_bytes_saved_frac": 1.0 - kv_p["bytes_in_use_peak"]
+            / max(kv_d["bytes_in_use_peak"], 1),
+            "blocks_peak": kv_p["blocks_peak"],
+            "blocks_total": kv_p["blocks_total"],
+        },
         "shapes": {"slots": slots, "chunk": chunk,
                    "prompt_len": prompt_len, "gen_len": gen_len,
                    "num_requests": num_requests, "arch": arch},
@@ -116,6 +178,16 @@ def main(quick: bool = False, json_path: str = "BENCH_serve.json"):
     f = r["flags_per_1k_tokens"]
     print(f"  flags/1k tokens:  {f['epistemic']:.1f} epistemic, "
           f"{f['aleatoric']:.1f} aleatoric")
+    m = r["mixed"]
+    print(f"  mixed-length traffic (prompts {sorted(set(m['prompt_lens']))},"
+          f" gens {sorted(set(m['gen_lens']))}, kv_block {m['kv_block']}):")
+    print(f"    dense strips:   {m['dense_tok_per_s']:8.1f} tok/s, "
+          f"{m['kv_bytes_dense_strips'] / 1e3:.1f} KB KV resident")
+    print(f"    paged blocks:   {m['paged_tok_per_s']:8.1f} tok/s "
+          f"({m['paged_vs_dense_x']:.2f}x), "
+          f"{m['kv_bytes_paged_peak'] / 1e3:.1f} KB peak "
+          f"({m['blocks_peak']}/{m['blocks_total']} blocks, "
+          f"{m['kv_bytes_saved_frac']:.0%} saved)")
     if r["timings_indicative"]:
         print(f"  [timings on {r['backend']} are indicative; the ratio is "
               f"the dispatch-overhead win, which only grows on TPU]")

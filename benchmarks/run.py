@@ -11,9 +11,12 @@
                                       HBM traffic + fused-GEMM speedup,
                                       the CI perf-trajectory artifact)
   bench_serve        beyond-paper     continuous-batching scan-decode
-                                      engine vs per-token loop (emits
-                                      BENCH_serve.json: tok/s, p50/p99
-                                      request latency, flags/1k tokens)
+                                      engine vs per-token loop, plus a
+                                      mixed-length dense-vs-paged-KV
+                                      workload (emits BENCH_serve.json:
+                                      tok/s, p50/p99 request latency,
+                                      flags/1k tokens, peak KV bytes
+                                      paged vs dense strips)
   roofline           deliverable (g)  three-term roofline per dry-run cell
 """
 
@@ -25,7 +28,9 @@ import time
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes (CI-friendly)")
     ap.add_argument("--only", default=None)

@@ -24,6 +24,18 @@ admitted later draw from the engine's global step stream, so replaying
 them needs the same step offset) and the benchmark baseline that
 ``benchmarks/bench_serve.py`` measures the engine against.
 
+KV layout: ``--kv-layout dense`` (the reference) gives each slot one
+contiguous ``max_len`` strip; ``--kv-layout paged`` backs the
+self-attention KV with a global pool of ``--kv-block``-token blocks
+managed by the host-side ``BlockAllocator`` (free list, per-slot block
+tables, whole-request budget reserved at admission, blocks granted
+chunk by chunk, full release on eviction).  Admission then asks "are
+enough blocks free" instead of "is a slot free", so mixed prompt/gen
+lengths stop paying ``num_slots * max_len`` padding waste; pool
+exhaustion defers the queue head instead of crashing.  The paged path
+is bit-exact against dense in operand-entropy mode (tested in
+tests/test_paged_kv.py).
+
 Container-scale: reduced config, debug mesh.  Full-size serving shapes
 (prefill_32k / decode_32k / long_500k) are compile-proven by launch.dryrun.
 
@@ -78,34 +90,168 @@ class Request:
         return self.t_finish - self.t_submit
 
 
+class BlockAllocator:
+    """Free-list allocator over a global pool of fixed-size KV blocks.
+
+    Pure host-side (no jax).  A request's whole-lifetime block budget is
+    RESERVED at admission (so a running request can never starve
+    mid-decode and need preemption) but blocks are only ALLOCATED —
+    pulled off the free list and mapped into the slot's block table — as
+    the sequence actually grows: prompt blocks at admission, decode
+    blocks granted chunk by chunk by the scheduler.  ``available()`` is
+    what admission checks: free minus outstanding reservations.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError("need at least one block of at least one "
+                             "token")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: list[int] = list(range(num_blocks - 1, -1, -1))
+        self._reserved = 0
+        self.peak_in_use = 0
+
+    def blocks_for(self, tokens: int) -> int:
+        """Blocks needed to hold ``tokens`` KV entries (ceil)."""
+        return -(-tokens // self.block_size)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def available(self) -> int:
+        return len(self._free) - self._reserved
+
+    def reserve(self, n: int) -> bool:
+        """Set aside ``n`` blocks for later alloc; False if they aren't
+        there (the caller defers admission instead of crashing)."""
+        if self.available() < n:
+            return False
+        self._reserved += n
+        return True
+
+    def unreserve(self, n: int) -> None:
+        if n > self._reserved:
+            raise ValueError(f"unreserve({n}) exceeds {self._reserved} "
+                             "outstanding reservations")
+        self._reserved -= n
+
+    def alloc(self, n: int) -> list[int]:
+        """Draw ``n`` physical blocks down from an existing reservation."""
+        if n > self._reserved:
+            raise ValueError(f"alloc({n}) without reservation "
+                             f"({self._reserved} reserved)")
+        self._reserved -= n
+        ids = [self._free.pop() for _ in range(n)]
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return ids
+
+    def free(self, ids: list[int]) -> None:
+        dupes = sorted(set(ids) & set(self._free)) + sorted(
+            i for i in set(ids) if ids.count(i) > 1)
+        if dupes:
+            raise ValueError(f"double free of blocks {dupes}")
+        self._free.extend(ids)
+
+
 class SlotScheduler:
     """FIFO admission of queued requests into fixed decode slots.
 
     Pure host-side bookkeeping (no jax): ``admit`` fills free slots in
     slot order from the queue front, ``evict`` frees a slot for reuse.
+
+    With a ``BlockAllocator`` the scheduler also owns the paged-KV block
+    tables: admission switches from "is a slot free" to "are enough
+    blocks free" (whole-request budget reserved up front; the queue head
+    defers — FIFO, no skip-ahead — when the pool can't cover it), prompt
+    blocks are allocated at admission, ``grant`` maps further blocks
+    incrementally as decode deepens, and ``evict`` returns every block.
     """
 
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int,
+                 allocator: Optional[BlockAllocator] = None,
+                 table_width: int = 0):
         self.slots: list[Optional[Request]] = [None] * num_slots
         self.queue: collections.deque[Request] = collections.deque()
+        self.allocator = allocator
+        if allocator is not None:
+            if table_width < 1:
+                raise ValueError("paged scheduling needs table_width "
+                                 "(max blocks per slot)")
+            self.block_tables = np.full((num_slots, table_width), -1,
+                                        np.int32)
+            self._slot_blocks: list[list[int]] = \
+                [[] for _ in range(num_slots)]
+            self._slot_reserved = [0] * num_slots
+            # bumped on every table mutation (admit/grant/evict) so the
+            # engine only re-uploads the device table when it changed
+            self.table_version = 0
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def _admit_paged(self, slot: int) -> Optional[Request]:
+        alloc = self.allocator
+        req = self.queue[0]
+        need = alloc.blocks_for(len(req.prompt) + req.max_new_tokens)
+        if not alloc.reserve(need):
+            return None                  # pool exhausted: defer, FIFO
+        self.queue.popleft()
+        prompt_blocks = alloc.blocks_for(len(req.prompt))
+        ids = alloc.alloc(prompt_blocks)
+        self._slot_blocks[slot] = ids
+        self._slot_reserved[slot] = need - prompt_blocks
+        self.block_tables[slot, :] = -1
+        self.block_tables[slot, :prompt_blocks] = ids
+        self.table_version += 1
+        return req
 
     def admit(self) -> list[tuple[int, Request]]:
         placed = []
         for i, occupant in enumerate(self.slots):
             if occupant is None and self.queue:
-                req = self.queue.popleft()
+                if self.allocator is not None:
+                    req = self._admit_paged(i)
+                    if req is None:
+                        break
+                else:
+                    req = self.queue.popleft()
                 self.slots[i] = req
                 placed.append((i, req))
         return placed
+
+    def grant(self, slot: int, target_len: int) -> list[int]:
+        """Map blocks so slot ``slot`` can hold ``target_len`` tokens.
+
+        Draws from the request's admission-time reservation, so it
+        cannot fail; the grant is capped at that budget (junk steps a
+        finished request runs until its chunk boundary drop against the
+        unmapped tail instead of consuming pool)."""
+        have = len(self._slot_blocks[slot])
+        want = min(self.allocator.blocks_for(target_len),
+                   have + self._slot_reserved[slot])
+        if want <= have:
+            return []
+        ids = self.allocator.alloc(want - have)
+        self._slot_reserved[slot] -= len(ids)
+        self.block_tables[slot, have:want] = ids
+        self._slot_blocks[slot].extend(ids)
+        self.table_version += 1
+        return ids
 
     def evict(self, slot: int) -> Request:
         req = self.slots[slot]
         if req is None:
             raise ValueError(f"evict of empty slot {slot}")
         self.slots[slot] = None
+        if self.allocator is not None:
+            self.allocator.free(self._slot_blocks[slot])
+            self._slot_blocks[slot] = []
+            self.allocator.unreserve(self._slot_reserved[slot])
+            self._slot_reserved[slot] = 0
+            self.block_tables[slot, :] = -1
+            self.table_version += 1
         return req
 
     def active(self) -> list[tuple[int, Request]]:
@@ -126,23 +272,64 @@ class ServeEngine:
     of depth ``max_len``; ``chunk`` tokens decoded per device call.
     ``entropy`` (KernelEntropy) selects the seeded head-draw stream
     (in-kernel on TPU); None keeps the legacy operand stream.
+
+    ``kv_layout`` picks the cache layout.  Both layouts bound a request
+    to ``prompt + gen <= max_len`` (block tables span ``max_len``
+    logical tokens).  ``'dense'`` — the bit-exact reference — gives
+    every slot one contiguous ``max_len`` KV strip, so mixed-length
+    traffic pays full padding waste.  ``'paged'`` backs the self-attention KV
+    with a global pool of ``kv_blocks`` blocks of ``kv_block`` tokens:
+    admission reserves a request's whole-lifetime block budget ("are
+    enough blocks free", deferring instead of crashing when the pool is
+    exhausted), decode blocks are granted chunk by chunk, and eviction
+    returns everything — KV bytes in use track the tokens actually
+    resident instead of ``num_slots * max_len``.  Paged decode is
+    bit-exact against dense when ``max_len`` is a ``kv_block`` multiple
+    (equal logical spans; tested in tests/test_paged_kv.py).  Families
+    without KV strips (ssm) fall back to dense.
     """
 
     def __init__(self, params, cfg, *, num_slots: int, max_len: int,
                  chunk: int = 8, entropy: Optional[KernelEntropy] = None,
                  mi_threshold: float = 0.05, se_threshold: float = 1.0,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, kv_layout: str = "dense",
+                 kv_block: int = 16, kv_blocks: Optional[int] = None):
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if kv_block < 1:
+            raise ValueError(f"kv_block must be >= 1, got {kv_block}")
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
         self.chunk = chunk
         self.eos_id = eos_id
-        self._prefill = jax.jit(
-            lambda p, t, m: M.prefill(p, cfg, t, max_len, m))
-        self._write = jax.jit(
-            lambda c, slot, sub: M.write_slot(cfg, c, slot, sub),
-            donate_argnums=(0,))
+        self.kv_layout = kv_layout if M.supports_paged(cfg) else "dense"
+        self.kv_block = kv_block
+        self.table_width = M.paged_table_width(max_len, kv_block)
+        # default pool = full dense capacity: no admission change, the
+        # savings then show up as peak blocks in use < blocks allocated
+        self.kv_blocks = (kv_blocks if kv_blocks is not None
+                          else num_slots * self.table_width)
+        if self.kv_blocks < 1:
+            raise ValueError(f"kv_blocks must be >= 1, got {kv_blocks}")
+        paged = self.kv_layout == "paged"
+        if paged:
+            # paged prefill builds a minimal prompt-length strip (the
+            # scatter pages it out token by token); dense keeps the
+            # engine-wide max_len strip its slot write needs
+            self._prefill = jax.jit(
+                lambda p, t, m: M.prefill(p, cfg, t, t.shape[1], m))
+            self._write = jax.jit(
+                lambda c, slot, sub, row: M.write_slot(cfg, c, slot, sub,
+                                                       row),
+                donate_argnums=(0,))
+        else:
+            self._prefill = jax.jit(
+                lambda p, t, m: M.prefill(p, cfg, t, max_len, m))
+            self._write = jax.jit(
+                lambda c, slot, sub: M.write_slot(cfg, c, slot, sub),
+                donate_argnums=(0,))
         self._scan = jax.jit(
             S.build_scan_decode(cfg, entropy=entropy, chunk=chunk,
                                 mi_threshold=mi_threshold,
@@ -177,18 +364,34 @@ class ServeEngine:
                     f"max_new_tokens {r.max_new_tokens} exceeds the "
                     f"slot capacity max_len={self.max_len}; cache writes "
                     f"past capacity would be dropped silently")
-        sched = SlotScheduler(self.num_slots)
+        paged = self.kv_layout == "paged"
+        alloc = None
+        if paged:
+            alloc = BlockAllocator(self.kv_blocks, self.kv_block)
+            for r in requests:
+                need = alloc.blocks_for(len(r.prompt) + r.max_new_tokens)
+                if need > self.kv_blocks:
+                    raise ValueError(
+                        f"request {r.rid}: needs {need} KV blocks but the "
+                        f"pool only has {self.kv_blocks}; it could never "
+                        f"be admitted")
+        sched = SlotScheduler(self.num_slots, allocator=alloc,
+                              table_width=self.table_width)
         t_start = time.perf_counter()
         for r in requests:
             r.t_submit = time.perf_counter()
             sched.submit(r)
 
         tok = jnp.zeros((self.num_slots,), jnp.int32)
-        cache = M.make_cache(self.cfg, self.num_slots, self.max_len)
+        cache = M.make_cache(self.cfg, self.num_slots, self.max_len,
+                             layout=self.kv_layout,
+                             kv_block=self.kv_block,
+                             num_blocks=self.kv_blocks)
         active = jnp.zeros((self.num_slots,), bool)
         flags = {"epistemic": jnp.zeros((self.num_slots,), jnp.int32),
                  "aleatoric": jnp.zeros((self.num_slots,), jnp.int32)}
         step0 = 0
+        table_synced = -1            # device block-table version synced
         decode_s = 0.0
         # the jitted prefill compiles once per distinct prompt length;
         # classify each admission's time accordingly so mixed-length
@@ -203,8 +406,13 @@ class ServeEngine:
                 t0 = time.perf_counter()
                 _, sub = self._prefill(
                     self.params, jnp.asarray(req.prompt)[None], modality1)
-                cache = self._write(cache, jnp.asarray(slot, jnp.int32),
-                                    sub)
+                if paged:
+                    cache = self._write(
+                        cache, jnp.asarray(slot, jnp.int32), sub,
+                        jnp.asarray(sched.block_tables[slot]))
+                else:
+                    cache = self._write(cache,
+                                        jnp.asarray(slot, jnp.int32), sub)
                 tok = tok.at[slot].set(int(req.prompt[-1]))
                 active = active.at[slot].set(True)
                 flags = {k: v.at[slot].set(0) for k, v in flags.items()}
@@ -215,6 +423,20 @@ class ServeEngine:
                 else:
                     seen_prompt_lens.add(len(req.prompt))
                     compile_times.append(dt)
+
+            if paged:
+                # incremental grant: map the blocks the coming chunk can
+                # write (capped at each request's admission-time budget);
+                # re-upload the device table (tiny: slots x MB) only when
+                # something actually changed since the last chunk
+                for slot, req in sched.active():
+                    sched.grant(slot, len(req.prompt)
+                                + min(len(req.tokens) + self.chunk,
+                                      req.max_new_tokens))
+                if sched.table_version != table_synced:
+                    cache = dict(cache, block_table=jnp.asarray(
+                        sched.block_tables))
+                    table_synced = sched.table_version
 
             t0 = time.perf_counter()
             tok, cache, flags, ys = self._scan(
@@ -242,6 +464,28 @@ class ServeEngine:
 
         total_s = time.perf_counter() - t_start
         gen_tokens = sum(len(r.tokens) for r in requests)
+        # KV residency accounting: dense permanently owns num_slots
+        # strips of max_len; paged owns only the blocks actually mapped
+        # (peak over the run), which is what mixed-length traffic saves
+        kv_alloc_bytes = M.kv_bytes(cache)
+        if paged:
+            token_bytes = kv_alloc_bytes / (self.kv_blocks * self.kv_block)
+            block_bytes = kv_alloc_bytes // self.kv_blocks
+            kv_stats = {
+                "layout": "paged",
+                "block_tokens": self.kv_block,
+                "blocks_total": self.kv_blocks,
+                "blocks_peak": alloc.peak_in_use,
+                "bytes_in_use_peak": alloc.peak_in_use * block_bytes,
+                "bytes_dense_equiv": int(token_bytes * self.num_slots
+                                         * self.max_len),
+            }
+        else:
+            kv_stats = {
+                "layout": "dense",
+                "bytes_in_use_peak": kv_alloc_bytes,
+                "bytes_dense_equiv": kv_alloc_bytes,
+            }
         lat = np.array([r.latency_s for r in requests]) if requests \
             else np.zeros((1,))
         epi = sum(r.epistemic_flags for r in requests)
@@ -261,6 +505,7 @@ class ServeEngine:
             "e2e_tok_per_s": gen_tokens / max(total_s, 1e-9),
             "latency_p50_s": float(np.percentile(lat, 50)),
             "latency_p99_s": float(np.percentile(lat, 99)),
+            "kv": kv_stats,
             "epistemic_flags": int(epi),
             "aleatoric_flags": int(alea),
             "flags_per_1k_tokens": {
@@ -342,7 +587,8 @@ def serve(args) -> dict:
         max_len=args.prompt_len + args.gen_len + args.chunk,
         chunk=args.chunk, entropy=entropy,
         mi_threshold=args.mi_threshold, se_threshold=args.se_threshold,
-        eos_id=args.eos_id)
+        eos_id=args.eos_id, kv_layout=args.kv_layout,
+        kv_block=args.kv_block, kv_blocks=args.kv_blocks)
     result = engine.run(make_requests(args, cfg))
 
     # entropy HBM traffic of the head's MC draws per decoded token: the
@@ -378,6 +624,18 @@ def main():
                     help="'kernel': seed-driven head draws, generated "
                          "in-kernel on TPU (0 HBM entropy bytes); "
                          "'operand': legacy key-threaded xi tensor")
+    ap.add_argument("--kv-layout", choices=("dense", "paged"),
+                    default="dense",
+                    help="'paged': self-attention KV in a global pool of "
+                         "--kv-block-token blocks behind per-slot block "
+                         "tables (admission = enough blocks free); "
+                         "'dense': one max_len strip per slot, the "
+                         "bit-exact reference layout")
+    ap.add_argument("--kv-block", type=int, default=16,
+                    help="tokens per KV block (paged layout)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="pool size in blocks (default: full dense "
+                         "capacity, slots * ceil(max_len / kv_block))")
     args = ap.parse_args()
     r = serve(args)
     print(f"served {r['num_requests']} requests / {r['gen_tokens']} tokens "
@@ -395,6 +653,15 @@ def main():
     print(f"entropy: {r['entropy_mode']} path, "
           f"{r['entropy_hbm_bytes_per_token'] / 1e6:.2f} MB/token "
           f"of randomness over HBM")
+    kv = r["kv"]
+    if kv["layout"] == "paged":
+        print(f"kv: paged, {kv['blocks_peak']}/{kv['blocks_total']} blocks "
+              f"peak ({kv['block_tokens']} tokens each) — "
+              f"{kv['bytes_in_use_peak'] / 1e6:.2f} MB in use vs "
+              f"{kv['bytes_dense_equiv'] / 1e6:.2f} MB dense strips")
+    else:
+        print(f"kv: dense strips, {kv['bytes_in_use_peak'] / 1e6:.2f} MB "
+              f"resident for the whole run")
     print("MI per request:")
     for r_ in r["requests"]:
         print(f"  #{r_.rid} ({r_.finish_reason}): "

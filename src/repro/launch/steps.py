@@ -171,6 +171,13 @@ def build_scan_decode(cfg: ArchConfig, entropy=None, chunk: int = 8,
     older slots.  A slot's capacity is enforced by the engine at
     admission (prompt + max-new-tokens must fit ``max_len``); writes of
     an over-deep slot would be dropped by the scatter.
+
+    Paged KV: when the cache carries a ``block_table`` (the engine's
+    ``--kv-layout paged``), the (slot, logical_pos) -> (block, offset)
+    indirection rides through the scan unchanged in the carry — every
+    decode step inside the chunk reads/writes the block pool through the
+    same table, and the host refreshes the table between chunks as the
+    scheduler grants blocks.  The scan itself is layout-agnostic.
     """
     base = _decode_base_key(entropy)
 

@@ -82,11 +82,12 @@ def encode(params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
 
 
 def _dec_block(bp, cfg, x, positions, enc_out=None, cross_kv=None,
-               kv_cache=None, cache_len=None):
+               kv_cache=None, cache_len=None, block_table=None):
     h, kv = L.apply_attention(bp["self_attn"], cfg,
                               L.rms_norm(x, bp["ln1"]),
                               positions=positions, causal=True,
-                              kv_cache=kv_cache, cache_len=cache_len)
+                              kv_cache=kv_cache, cache_len=cache_len,
+                              block_table=block_table)
     x = x + h
     if cross_kv is None:
         cross_kv = L.make_cross_kv(bp["cross_attn"], cfg, enc_out)
@@ -140,14 +141,27 @@ def nll_loss(params, cfg: ArchConfig, batch: dict, key: jax.Array):
     return nll, {"accuracy": acc}
 
 
-def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None,
+               layout: str = "dense", kv_block: int = 16,
+               num_blocks: int = 0):
+    """Self-attention KV pages; the cross-attention memory stays a dense
+    per-slot strip (always exactly ENC_LEN deep — paging it would save
+    nothing)."""
     dt = dtype or L.dtype_of(cfg)
     n_dec = cfg.decoder_layers or cfg.num_layers
-    kv = (n_dec, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
     cross = (n_dec, batch, ENC_LEN, cfg.num_kv_heads, cfg.head_dim)
-    return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
-            "ck": jnp.zeros(cross, dt), "cv": jnp.zeros(cross, dt),
-            "len": jnp.zeros((batch,), jnp.int32)}
+    cache = {"ck": jnp.zeros(cross, dt), "cv": jnp.zeros(cross, dt),
+             "len": jnp.zeros((batch,), jnp.int32)}
+    if layout == "paged":
+        nb = num_blocks or batch * L.paged_table_width(max_len, kv_block)
+        kv = (n_dec, nb, kv_block, cfg.num_kv_heads, cfg.head_dim)
+        cache["block_table"] = L.init_block_table(batch, max_len,
+                                                  kv_block)
+    else:
+        kv = (n_dec, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    cache["k"] = jnp.zeros(kv, dt)
+    cache["v"] = jnp.zeros(kv, dt)
+    return cache
 
 
 def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int,
@@ -177,12 +191,14 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     x = L.apply_embed(params["embed"], token[:, None])
     x = constrain(x, "batch", None, None)
     cache_len = cache["len"]
+    block_table = cache.get("block_table")     # paged layout marker
     pos = jnp.reshape(cache_len, (-1, 1))
 
     def scan_step(x, bpkv):
         bp, k, v, ck, cv = bpkv
         y, kv, _ = _dec_block(bp, cfg, x, pos, cross_kv=(ck, cv),
-                              kv_cache=(k, v), cache_len=cache_len)
+                              kv_cache=(k, v), cache_len=cache_len,
+                              block_table=block_table)
         return y, kv
 
     x, kvs = jax.lax.scan(

@@ -103,20 +103,33 @@ def nll_loss(params, cfg: ArchConfig, batch: dict, key: jax.Array):
     return nll, {"accuracy": acc}
 
 
-def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None,
+               layout: str = "dense", kv_block: int = 16,
+               num_blocks: int = 0):
+    """Mamba states stay per-slot (O(1) in context); only the shared
+    attention's KV strips participate in the paged layout — one pool
+    plane per application depth, all indexed by the same block table."""
     d_in, H, P, N = S.dims(cfg)
     dt = dtype or L.dtype_of(cfg)
     A = n_attn_apps(cfg)
-    return {
+    cache = {
         "ssm": jnp.zeros((cfg.num_layers, batch, H, P, N), jnp.float32),
         "conv": jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv_width - 1,
                            d_in + 2 * N), dt),
-        "attn_k": jnp.zeros((A, batch, max_len, cfg.num_kv_heads,
-                             cfg.head_dim), dt),
-        "attn_v": jnp.zeros((A, batch, max_len, cfg.num_kv_heads,
-                             cfg.head_dim), dt),
         "len": jnp.zeros((batch,), jnp.int32),
     }
+    if layout == "paged":
+        nb = num_blocks or batch * L.paged_table_width(max_len, kv_block)
+        kv = (A, nb, kv_block, cfg.num_kv_heads, cfg.head_dim)
+        cache["attn_k"] = jnp.zeros(kv, dt)
+        cache["attn_v"] = jnp.zeros(kv, dt)
+        cache["block_table"] = L.init_block_table(batch, max_len,
+                                                  kv_block)
+    else:
+        kv = (A, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+        cache["attn_k"] = jnp.zeros(kv, dt)
+        cache["attn_v"] = jnp.zeros(kv, dt)
+    return cache
 
 
 def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int):
@@ -157,6 +170,7 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     x = constrain(x, "batch", None, None)
     sp = params["shared"]
     cache_len = cache["len"]
+    block_table = cache.get("block_table")     # paged layout marker
     A = n_attn_apps(cfg)
     new_k, new_v, new_h, new_c = [], [], [], []
     for a in range(A):
@@ -166,7 +180,7 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
         h_att, kv = L.apply_attention(
             sp["attn"], cfg, L.rms_norm(x, sp["ln1"]), positions=pos,
             kv_cache=(cache["attn_k"][a], cache["attn_v"][a]),
-            cache_len=cache_len)
+            cache_len=cache_len, block_table=block_table)
         x = x + h_att
         x = x + L.apply_mlp(sp["mlp"], cfg, L.rms_norm(x, sp["ln2"]))
         new_k.append(kv[0])

@@ -194,6 +194,66 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 
 # --------------------------------------------------------------------------
+# paged KV cache: (slot, logical_pos) -> (block, offset) indirection
+# --------------------------------------------------------------------------
+
+def paged_table_width(max_len: int, kv_block: int) -> int:
+    """Block-table width MB: blocks needed to span max_len tokens."""
+    return -(-max_len // kv_block)
+
+
+def init_block_table(batch: int, max_len: int, kv_block: int) -> jax.Array:
+    """Fresh all-unmapped (-1) per-slot block table."""
+    return jnp.full((batch, paged_table_width(max_len, kv_block)), -1,
+                    jnp.int32)
+
+
+def paged_scatter(pool: jax.Array, block_table: jax.Array,
+                  lens: jax.Array, new: jax.Array) -> jax.Array:
+    """Scatter per-slot KV entries into a global block pool.
+
+    pool: (NB, BS, ...) physical blocks of BS tokens each;
+    block_table: (B, MB) int32, logical block j of slot b lives in
+    physical block ``block_table[b, j]`` (-1 = unmapped);
+    lens: (B,) current logical depth per slot; new: (B, S, ...) entries
+    for logical positions ``lens[b] + [0, S)``.
+
+    Writes to unmapped (-1) or out-of-table logical positions are
+    DROPPED — the paged analog of the dense layout's out-of-bounds
+    scatter drop, and what makes post-eviction junk steps harmless (an
+    evicted slot's table row is all -1).
+    """
+    BS = pool.shape[1]
+    MB = block_table.shape[1]
+    B, S = new.shape[:2]
+    idx = lens[:, None] + jnp.arange(S)[None, :]            # (B, S) logical
+    tbl = idx // BS
+    rows = jnp.arange(B)[:, None]
+    phys = jnp.where(tbl < MB,
+                     block_table[rows, jnp.minimum(tbl, MB - 1)], -1)
+    # sentinel must be OOB-positive: jnp wraps negative indices
+    # numpy-style BEFORE the mode="drop" check, so -1 would silently hit
+    # the last physical block instead of dropping
+    phys = jnp.where(phys < 0, pool.shape[0], phys)
+    return pool.at[phys, idx % BS].set(new, mode="drop")
+
+
+def paged_gather(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Gather each slot's logical KV strip from the block pool.
+
+    pool: (NB, BS, ...); block_table: (B, MB).  Returns (B, MB*BS, ...)
+    — the dense logical view attention reads.  The gather is
+    block-granular (one index per block, not per token: logical position
+    j lives at (table[j // BS], j % BS), so whole blocks move
+    contiguously).  Unmapped entries gather block 0 (finite garbage);
+    callers mask by ``cache_len`` exactly as on the dense path, so those
+    positions never reach the softmax.
+    """
+    g = pool[jnp.maximum(block_table, 0)]          # (B, MB, BS, ...)
+    return g.reshape(g.shape[0], -1, *pool.shape[2:])
+
+
+# --------------------------------------------------------------------------
 # attention block (GQA, optional QKV bias, RoPE)
 # --------------------------------------------------------------------------
 
@@ -219,9 +279,19 @@ def apply_attention(p, cfg: ArchConfig, x: jax.Array, *,
                     positions: jax.Array, causal: bool = True,
                     kv_cache: Optional[tuple] = None,
                     cache_len: Optional[jax.Array] = None,
+                    block_table: Optional[jax.Array] = None,
                     cross_kv: Optional[tuple] = None):
     """Returns (out, new_kv) where new_kv is the updated (k, v) cache slot
-    content for decode, or the computed (k, v) for prefill, or None."""
+    content for decode, or the computed (k, v) for prefill, or None.
+
+    ``block_table`` selects the paged-KV layout: ``kv_cache`` is then a
+    pair of global block POOLS (NB, BS, Hkv, D) instead of per-slot
+    strips (B, S, Hkv, D), and reads/writes go through the
+    (slot, logical_pos) -> (block, offset) indirection of
+    ``paged_scatter`` / ``paged_gather``.  Bit-exact against the dense
+    layout when the logical span MB*BS equals the dense max_len: masked
+    positions differ only in garbage that ``decode_attention`` replaces
+    with -inf before the softmax either way."""
     B, S, d = x.shape
     H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = _mm(x, p["wq"])
@@ -253,11 +323,18 @@ def apply_attention(p, cfg: ArchConfig, x: jax.Array, *,
             # appends included); rows already at capacity land out of
             # bounds and are dropped.
             lens = jnp.broadcast_to(jnp.reshape(cache_len, (-1,)), (B,))
-            rows = jnp.arange(B)[:, None]
-            idx = lens[:, None] + jnp.arange(S)[None, :]
-            kc = kc.at[rows, idx].set(k, mode="drop")
-            vc = vc.at[rows, idx].set(v, mode="drop")
-            out = decode_attention(q, kc, vc, lens + S)
+            if block_table is not None:
+                kc = paged_scatter(kc, block_table, lens, k)
+                vc = paged_scatter(vc, block_table, lens, v)
+                out = decode_attention(q, paged_gather(kc, block_table),
+                                       paged_gather(vc, block_table),
+                                       lens + S)
+            else:
+                rows = jnp.arange(B)[:, None]
+                idx = lens[:, None] + jnp.arange(S)[None, :]
+                kc = kc.at[rows, idx].set(k, mode="drop")
+                vc = vc.at[rows, idx].set(v, mode="drop")
+                out = decode_attention(q, kc, vc, lens + S)
             new_kv = (kc, vc)
         else:
             out = flash_attention(q, k, v, causal=causal,

@@ -305,13 +305,15 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
                 key: jax.Array):
     x = L.apply_embed(params["embed"], token[:, None])
     cache_len = cache["len"]
+    block_table = cache.get("block_table")     # paged layout marker
 
     def scan_step(x, bpkv):
         bp, kv = bpkv
         pos = jnp.reshape(cache_len, (-1, 1))
         h, new_kv = L.apply_attention(
             bp["attn"], cfg, L.rms_norm(x, bp["ln1"]), positions=pos,
-            kv_cache=(kv["k"], kv["v"]), cache_len=cache_len)
+            kv_cache=(kv["k"], kv["v"]), cache_len=cache_len,
+            block_table=block_table)
         x = x + h
         y, _ = moe_ffn(bp, cfg, L.rms_norm(x, bp["ln2"]))
         return x + y, {"k": new_kv[0], "v": new_kv[1]}

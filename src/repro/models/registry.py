@@ -3,15 +3,18 @@
 Uniform API across families:
     init_params(key, cfg) -> params
     nll_loss(params, cfg, batch, key) -> (nll, aux)
-    make_cache(cfg, batch, max_len) -> cache
+    make_cache(cfg, batch, max_len, layout=..., ...) -> cache
     prefill(params, cfg, tokens, max_len, **modality) -> (hidden, cache)
     decode_step(params, cfg, token, cache, key) -> (outputs, cache)
-    write_slot(cfg, cache, slot, sub) -> cache   (slot-indexed serving)
+    write_slot(cfg, cache, slot, sub, block_row=None) -> cache
 
 Caches are slot-indexed: every leaf carries the slot (batch) axis and
 ``cache["len"]`` is a per-slot (batch,) depth vector, so a continuous-
 batching engine can admit/evict requests into individual slots while the
-others keep decoding.
+others keep decoding.  Under ``layout='paged'`` the self-attention KV
+leaves (``PAGED_KV_LEAVES``) instead live in a global pool of fixed-size
+blocks addressed through a per-slot ``block_table`` (-1 = unmapped);
+``layout='dense'`` remains the bit-exact reference layout.
 
 ``batch_spec``/``cache_spec``/modality stubs are centralized here so the
 launcher's ``input_specs`` stays arch-agnostic.
@@ -26,6 +29,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import encdec, hybrid, moe, ssm, transformer
+from repro.models.layers import (paged_scatter,  # noqa: F401 (re-export)
+                                 paged_table_width)
 
 
 def module_for(cfg: ArchConfig):
@@ -82,7 +87,29 @@ def nll_loss(params, cfg: ArchConfig, batch: dict, key):
     return module_for(cfg).nll_loss(params, cfg, batch, key)
 
 
-def make_cache(cfg: ArchConfig, batch: int, max_len: int):
+def supports_paged(cfg: ArchConfig) -> bool:
+    """Whether this family has KV strips that benefit from paging.
+
+    Pure-SSM caches are O(1) in context (recurrent state + conv tail),
+    so the paged layout is a no-op there and the engine keeps the dense
+    layout; every attention-bearing family (dense, vlm, moe, hybrid,
+    encdec, audio) pages its self-attention KV.
+    """
+    return cfg.family != "ssm"
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int,
+               layout: str = "dense", kv_block: int = 16,
+               num_blocks: int = 0):
+    """``layout='dense'``: one contiguous max_len strip per slot (the
+    reference layout).  ``layout='paged'``: self-attention KV lives in a
+    global pool of ``num_blocks`` x ``kv_block``-token blocks behind a
+    per-slot ``block_table`` (see ``launch.serve.BlockAllocator``)."""
+    if layout == "paged" and supports_paged(cfg):
+        return module_for(cfg).make_cache(cfg, batch, max_len,
+                                          layout="paged",
+                                          kv_block=kv_block,
+                                          num_blocks=num_blocks)
     return module_for(cfg).make_cache(cfg, batch, max_len)
 
 
@@ -98,10 +125,29 @@ def prefill(params, cfg: ArchConfig, tokens, max_len: int,
 
 
 def decode_step(params, cfg: ArchConfig, token, cache, key):
-    return module_for(cfg).decode_step(params, cfg, token, cache, key)
+    out, new_cache = module_for(cfg).decode_step(params, cfg, token,
+                                                 cache, key)
+    # reattach the paged block table centrally so the scan carry keeps
+    # its structure without every family hand-copying it
+    if isinstance(cache, dict) and "block_table" in cache:
+        new_cache.setdefault("block_table", cache["block_table"])
+    return out, new_cache
 
 
-def write_slot(cfg: ArchConfig, cache, slot, sub):
+# cache leaves that live in the global block pool under the paged layout
+PAGED_KV_LEAVES = ("k", "v", "attn_k", "attn_v")
+
+
+def kv_bytes(cache) -> int:
+    """Total allocated bytes of the self-attention KV leaves of a cache
+    (dense: the per-slot strips; paged: the whole block pool).  The
+    serving engine divides by the pool's block count to price one block.
+    """
+    return sum(cache[n].size * cache[n].dtype.itemsize
+               for n in PAGED_KV_LEAVES if n in cache)
+
+
+def write_slot(cfg: ArchConfig, cache, slot, sub, block_row=None):
     """Write a batch-1 request cache ``sub`` into decode slot ``slot``.
 
     Family-agnostic by layout convention: every cache leaf carries the
@@ -109,13 +155,45 @@ def write_slot(cfg: ArchConfig, cache, slot, sub):
     states, cross-attention KV -- except the per-slot ``len`` vector,
     which carries it at position 0.  ``slot`` may be traced (one compile
     serves every slot).
+
+    Paged layout (``cache`` has a ``block_table``): ``block_row`` is the
+    slot's (MB,) physical-block row from the host allocator; the
+    ``PAGED_KV_LEAVES`` of ``sub`` (dense batch-1 strips from prefill)
+    are scattered from logical position 0 through the shared
+    ``layers.paged_scatter`` indirection (vmapped over the layer axis),
+    the remaining leaves take the dense slot write, and the
+    slot's table row is installed.  Strip tokens past the mapped blocks
+    drop (mode='drop'), so a strip padded beyond the prompt is safe.
     """
+    if not isinstance(cache, dict) or "block_table" not in cache:
+        def w(c, s):
+            s = s.astype(c.dtype)
+            if c.ndim == 1:                  # the (B,) len vector
+                return jax.lax.dynamic_update_slice(c, s, (slot,))
+            start = (0, slot) + (0,) * (c.ndim - 2)
+            return jax.lax.dynamic_update_slice(c, s, start)
 
-    def w(c, s):
-        s = s.astype(c.dtype)
-        if c.ndim == 1:                      # the (B,) len vector
-            return jax.lax.dynamic_update_slice(c, s, (slot,))
-        start = (0, slot) + (0,) * (c.ndim - 2)
-        return jax.lax.dynamic_update_slice(c, s, start)
+        return jax.tree.map(w, cache, sub)
 
-    return jax.tree.map(w, cache, sub)
+    if block_row is None:
+        raise ValueError("paged cache write needs the slot's block_row")
+    out = {}
+    for name, c in cache.items():
+        if name == "block_table":
+            out[name] = jax.lax.dynamic_update_slice(
+                c, block_row[None].astype(c.dtype), (slot, jnp.int32(0)))
+        elif name in PAGED_KV_LEAVES:
+            strip = sub[name].astype(c.dtype)      # (A, 1, S, Hkv, hd)
+            table = block_row[None].astype(jnp.int32)
+            zero = jnp.zeros((1,), jnp.int32)
+            out[name] = jax.vmap(
+                lambda pool, new: paged_scatter(pool, table, zero, new)
+            )(c, strip)
+        elif c.ndim == 1:                          # the (B,) len vector
+            out[name] = jax.lax.dynamic_update_slice(
+                c, sub[name].astype(c.dtype), (slot,))
+        else:
+            s = sub[name].astype(c.dtype)
+            start = (0, slot) + (0,) * (c.ndim - 2)
+            out[name] = jax.lax.dynamic_update_slice(c, s, start)
+    return out

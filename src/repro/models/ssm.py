@@ -251,7 +251,11 @@ def nll_loss(params, cfg: ArchConfig, batch: dict, key: jax.Array):
 
 
 def make_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
-    """Recurrent cache: per-layer SSM state + conv tail (O(1) in context!)."""
+    """Recurrent cache: per-layer SSM state + conv tail (O(1) in context!).
+
+    No KV strips, so the paged layout has nothing to page — the serving
+    engine keeps ``--kv-layout dense`` semantics for this family
+    (``registry.supports_paged`` returns False)."""
     d_in, H, P, N = dims(cfg)
     dt = dtype or L.dtype_of(cfg)
     Lh = cfg.num_layers

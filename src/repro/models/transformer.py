@@ -172,10 +172,26 @@ def nll_loss(params, cfg: ArchConfig, batch: dict, key: jax.Array):
 # ---------------------------------------------------------------------------
 
 def make_cache(cfg: ArchConfig, batch: int, max_len: int,
-               dtype=None):
+               dtype=None, layout: str = "dense", kv_block: int = 16,
+               num_blocks: int = 0):
     """Slot-indexed KV cache: ``len`` is per-slot (batch,) so decode slots
-    admitted at different times sit at independent depths."""
+    admitted at different times sit at independent depths.
+
+    ``layout='dense'`` (the reference layout) gives each slot one
+    contiguous ``max_len`` strip.  ``layout='paged'`` replaces the strips
+    with a global pool of ``num_blocks`` blocks of ``kv_block`` tokens
+    each plus a (batch, MB) ``block_table`` mapping logical block j of a
+    slot to its physical block (-1 = unmapped); the host-side
+    ``launch.serve.BlockAllocator`` owns the pool."""
     dt = dtype or L.dtype_of(cfg)
+    if layout == "paged":
+        nb = num_blocks or batch * L.paged_table_width(max_len, kv_block)
+        shape = (cfg.num_layers, nb, kv_block, cfg.num_kv_heads,
+                 cfg.head_dim)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+                "len": jnp.zeros((batch,), jnp.int32),
+                "block_table": L.init_block_table(batch, max_len,
+                                                  kv_block)}
     shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
             "len": jnp.zeros((batch,), jnp.int32)}
@@ -196,15 +212,17 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int,
     return hidden[:, -1], cache
 
 
-def _decode_block(bp, cfg, x, kv, cache_len):
-    """One layer of single-token decode; kv: dict k/v (B, S, Hkv, hd).
+def _decode_block(bp, cfg, x, kv, cache_len, block_table=None):
+    """One layer of single-token decode; kv: dict k/v (B, S, Hkv, hd)
+    strips, or (NB, BS, Hkv, hd) block pools when ``block_table`` is set.
 
     cache_len () or (B,): per-slot depths give per-slot RoPE positions.
     """
     pos = jnp.reshape(cache_len, (-1, 1))
     h, new_kv = L.apply_attention(
         bp["attn"], cfg, L.rms_norm(x, bp["ln1"]), positions=pos,
-        kv_cache=(kv["k"], kv["v"]), cache_len=cache_len)
+        kv_cache=(kv["k"], kv["v"]), cache_len=cache_len,
+        block_table=block_table)
     x = x + h
     x = x + L.apply_mlp(bp["mlp"], cfg, L.rms_norm(x, bp["ln2"]))
     return x, {"k": new_kv[0], "v": new_kv[1]}
@@ -223,10 +241,11 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     x = L.apply_embed(params["embed"], token[:, None])
     x = constrain(x, "batch", None, None)
     cache_len = cache["len"]
+    block_table = cache.get("block_table")     # paged layout marker
 
     def scan_step(x, bpkv):
         bp, kv = bpkv
-        x, new_kv = _decode_block(bp, cfg, x, kv, cache_len)
+        x, new_kv = _decode_block(bp, cfg, x, kv, cache_len, block_table)
         return x, new_kv
 
     x, new_kvs = jax.lax.scan(

@@ -1,0 +1,107 @@
+"""Docs stay true or the build breaks.
+
+Three classes of grep-able anchors in ``README.md`` and ``docs/*.md``:
+
+  * relative markdown links must resolve on disk;
+  * backticked file paths (``src/repro/...py`` etc.) must exist;
+  * backticked test anchors (``tests/test_x.py::TestC::test_f``) must
+    name a real file and real ``class``/``def`` symbols in it;
+  * backticked CLI flags (``--kv-layout``) must be defined somewhere in
+    the code (argparse add_argument or equivalent literal).
+
+This is the CI docs job (see .github/workflows/ci.yml) and part of
+tier-1, so renaming a flag, moving a module, or deleting a test that a
+doc cites fails immediately instead of rotting silently.
+"""
+
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+CODE_SPAN_RE = re.compile(r"`([^`\n]+)`")
+PATH_RE = re.compile(r"^[\w./-]+\.(?:py|md|json|toml|yml|yaml)$")
+TEST_ANCHOR_RE = re.compile(r"^([\w./-]+\.py)((?:::[\w\[\]-]+)+)$")
+FLAG_RE = re.compile(r"--[a-z][a-z0-9-]*")
+
+# flags argparse provides for free
+BUILTIN_FLAGS = {"--help"}
+
+
+def _docs():
+    assert DOC_FILES, "no docs found"
+    return [(p, p.read_text()) for p in DOC_FILES]
+
+
+def _without_fences(text: str) -> str:
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+@pytest.fixture(scope="module")
+def code_text():
+    """Concatenated source of every .py in the repo (flag lookup)."""
+    chunks = []
+    for sub in ("src", "benchmarks", "examples", "tests"):
+        for p in sorted((ROOT / sub).rglob("*.py")):
+            chunks.append(p.read_text())
+    return "\n".join(chunks)
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_relative_links_resolve(doc):
+    text = _without_fences(doc.read_text())
+    for target in LINK_RE.findall(text):
+        target = target.split()[0]            # drop '... "title"' forms
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        target = target.split("#")[0]
+        if not target:
+            continue                          # same-file fragment
+        resolved = (doc.parent / target).resolve()
+        assert resolved.exists(), \
+            f"{doc.name}: dangling link -> {target}"
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_backticked_paths_exist(doc):
+    text = _without_fences(doc.read_text())
+    for span in CODE_SPAN_RE.findall(text):
+        token = span.strip().split("::")[0]
+        if "/" in token and PATH_RE.match(token):
+            assert (ROOT / token).exists(), \
+                f"{doc.name}: code path `{token}` does not exist"
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_test_anchors_point_at_real_tests(doc):
+    text = _without_fences(doc.read_text())
+    seen = 0
+    for span in CODE_SPAN_RE.findall(text):
+        m = TEST_ANCHOR_RE.match(span.strip())
+        if not m:
+            continue
+        seen += 1
+        path, parts = m.group(1), m.group(2).strip(":").split("::")
+        f = ROOT / path
+        assert f.exists(), f"{doc.name}: anchor file {path} missing"
+        src = f.read_text()
+        for name in parts:
+            name = name.split("[")[0]         # strip parametrize ids
+            assert re.search(rf"^\s*(?:class|def)\s+{re.escape(name)}\b",
+                             src, re.M), \
+                f"{doc.name}: `{span}` — no class/def {name} in {path}"
+    if doc.parent.name == "docs":
+        assert seen > 0, f"{doc.name}: every claim needs a test anchor"
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_cli_flags_exist_in_code(doc, code_text):
+    for flag in set(FLAG_RE.findall(doc.read_text())):
+        if flag in BUILTIN_FLAGS:
+            continue
+        assert f'"{flag}"' in code_text or f"'{flag}'" in code_text, \
+            f"{doc.name}: flag {flag} not defined anywhere in the code"
