@@ -18,8 +18,19 @@ paged layout, and the row reports peak KV bytes actually resident
 (mapped blocks) against the dense ``slots * max_len`` strips at the
 measured decode throughput of each.
 
+Two PREFIX-CACHE workloads drive the radix tree over the paged pool
+(``--prefix-cache on``): ``prefix_shared_prompt`` (every request opens
+with the same system-prompt tokens, diverging mid-block so hits take
+the copy-on-write path) and ``sample_fanout`` (S identical prompts —
+the Monte-Carlo fanout the paper's photonic sampling makes cheap; the
+digital side amortizes the prefill).  Each row reports prefill tokens
+saved, hit rate, CoW copies, and decode tok/s warm vs cold.
+
 Writes ``BENCH_serve.json`` (next to ``BENCH_kernels.json``, the CI
-perf-trajectory artifacts).  Fields:
+perf-trajectory artifacts).  Every workload row embeds the ``git_sha``
+and a ``config_hash`` of the engine configuration that produced it, so
+rows from different configs stay distinguishable when diffing the bench
+trajectory across commits.  Fields:
 
   shapes                 {slots, chunk, prompt_len, gen_len, num_requests}
   backend                jax backend the numbers were taken on
@@ -41,11 +52,22 @@ perf-trajectory artifacts).  Fields:
     kv_bytes_paged_peak     peak mapped paged blocks in bytes,
     kv_bytes_saved_frac     1 - paged_peak / dense_strips,
     blocks_peak / blocks_total   pool utilization high-water mark
+  prefix_shared_prompt   shared-system-prompt row (prefix cache on):
+    shared_len / unique_len / num_requests of the workload,
+    hit_rate, prefill_tokens_saved_frac (acceptance: >= 0.5),
+    cow_copies, warm_tok_per_s / cold_tok_per_s
+  sample_fanout          S-identical-prompt row: same fields, plus
+    samples (the MC fanout width)
+  git_sha, config_hash   per row + top level (bench trajectory identity)
 """
 
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import json
+import subprocess
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +77,26 @@ from repro.configs.registry import get_config, reduced
 from repro.launch import steps as S
 from repro.launch.serve import (Request, ServeEngine, decode_loop_reference)
 from repro.models import registry as M
+
+
+def git_sha() -> str:
+    """Short SHA of HEAD (or 'unknown' outside a git checkout)."""
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=Path(__file__).resolve().parent,
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        return "unknown"
+
+
+def config_hash(cfg, **extra) -> str:
+    """Stable 12-hex digest of the arch config + workload knobs, so two
+    BENCH_serve.json rows taken under different configs can never be
+    confused when diffing the bench trajectory."""
+    payload = {"cfg": dataclasses.asdict(cfg), **extra}
+    blob = json.dumps(payload, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
 
 
 def run(quick: bool = False) -> dict:
@@ -125,7 +167,82 @@ def run(quick: bool = False) -> dict:
              for layout, rs in runs.items()}
     kv_d, kv_p = mixed["dense"]["kv"], mixed["paged"]["kv"]
 
+    # --- prefix cache: shared-system-prompt + S-sample-fanout rows ---
+    sha = git_sha()
+    shared_len, unique_len, pc_gen = 20, 6, 8     # divergence mid-block
+    # 2 slots stagger the traffic: only the first two admissions run
+    # before an eviction has seeded the radix tree, so 6 of 8 requests
+    # hit (the cache fills at eviction, not at admission)
+    n_pc, pc_slots = 8, 2
+    pc_block = 8
+    pc_max_len = 40                               # kv_block multiple
+    sys_prompt = np.asarray(
+        jax.random.randint(jax.random.key(2), (shared_len,), 0,
+                           cfg.vocab_size), np.int32)
+    uniq = np.asarray(
+        jax.random.randint(jax.random.key(3), (n_pc, unique_len), 0,
+                           cfg.vocab_size), np.int32)
+
+    def prefix_row(make_reqs, **meta):
+        engines = {}
+        for on in (False, True):
+            engines[on] = ServeEngine(
+                params, cfg, num_slots=pc_slots, max_len=pc_max_len,
+                chunk=chunk, kv_layout="paged", kv_block=pc_block,
+                kv_blocks=(pc_slots + 2) * (pc_max_len // pc_block),
+                prefix_cache=on)
+            engines[on].run(make_reqs()[:pc_slots])  # warm up compile
+        cold = engines[False].run(make_reqs())
+        warm = engines[True].run(make_reqs())
+        pc = warm["prefix_cache"]
+        return {
+            **meta,
+            "num_requests": len(make_reqs()),
+            "slots": pc_slots,
+            "kv_block": pc_block,
+            "hit_rate": pc["hit_rate"],
+            "prefill_tokens": pc["prompt_tokens"],
+            "prefill_tokens_saved": pc["prompt_tokens_saved"],
+            "prefill_tokens_saved_frac": pc["saved_frac"],
+            "cow_copies": pc["cow_copies"],
+            "cache_evictions": pc["cache_evictions"],
+            "cold_tok_per_s": cold["decode_tok_per_s"],
+            "warm_tok_per_s": warm["decode_tok_per_s"],
+            "warm_vs_cold_x": warm["decode_tok_per_s"]
+            / max(cold["decode_tok_per_s"], 1e-9),
+            "git_sha": sha,
+            "config_hash": config_hash(cfg, workload=meta,
+                                       slots=pc_slots, chunk=chunk,
+                                       kv_block=pc_block,
+                                       max_len=pc_max_len),
+        }
+
+    def shared_prompt_requests():
+        return [Request(rid=i,
+                        prompt=np.concatenate([sys_prompt, uniq[i]]),
+                        max_new_tokens=pc_gen) for i in range(n_pc)]
+
+    def fanout_requests():
+        prompt = np.concatenate([sys_prompt, uniq[0]])
+        return [Request(rid=i, prompt=prompt.copy(),
+                        max_new_tokens=pc_gen) for i in range(n_pc)]
+
+    prefix_shared = prefix_row(shared_prompt_requests,
+                               workload="prefix_shared_prompt",
+                               shared_len=shared_len,
+                               unique_len=unique_len)
+    fanout = prefix_row(fanout_requests, workload="sample_fanout",
+                        samples=n_pc,
+                        prompt_len=shared_len + unique_len)
+
     return {
+        "git_sha": sha,
+        "config_hash": config_hash(cfg, slots=slots, chunk=chunk,
+                                   prompt_len=prompt_len,
+                                   gen_len=gen_len,
+                                   num_requests=num_requests),
+        "prefix_shared_prompt": prefix_shared,
+        "sample_fanout": fanout,
         "mixed": {
             "kv_block": kv_block,
             "max_len": mixed_max_len,
@@ -141,6 +258,13 @@ def run(quick: bool = False) -> dict:
             / max(kv_d["bytes_in_use_peak"], 1),
             "blocks_peak": kv_p["blocks_peak"],
             "blocks_total": kv_p["blocks_total"],
+            "git_sha": sha,
+            "config_hash": config_hash(cfg, workload="mixed",
+                                       slots=slots, chunk=chunk,
+                                       kv_block=kv_block,
+                                       max_len=mixed_max_len,
+                                       prompt_lens=prompt_lens,
+                                       gen_lens=gen_lens),
         },
         "shapes": {"slots": slots, "chunk": chunk,
                    "prompt_len": prompt_len, "gen_len": gen_len,
@@ -188,6 +312,20 @@ def main(quick: bool = False, json_path: str = "BENCH_serve.json"):
           f"{m['kv_bytes_paged_peak'] / 1e3:.1f} KB peak "
           f"({m['blocks_peak']}/{m['blocks_total']} blocks, "
           f"{m['kv_bytes_saved_frac']:.0%} saved)")
+    for name, label in (("prefix_shared_prompt", "shared system prompt"),
+                        ("sample_fanout", "S-sample fanout")):
+        p = r[name]
+        print(f"  prefix cache — {label} ({p['num_requests']} reqs):")
+        print(f"    {p['prefill_tokens_saved']}/{p['prefill_tokens']} "
+              f"prefill tokens saved "
+              f"({p['prefill_tokens_saved_frac']:.0%}), "
+              f"hit rate {p['hit_rate']:.0%}, "
+              f"{p['cow_copies']} CoW copies")
+        print(f"    warm {p['warm_tok_per_s']:.1f} tok/s vs "
+              f"cold {p['cold_tok_per_s']:.1f} "
+              f"({p['warm_vs_cold_x']:.2f}x decode)")
+    print(f"  rows stamped git {r['git_sha']}, "
+          f"config {r['config_hash']}")
     if r["timings_indicative"]:
         print(f"  [timings on {r['backend']} are indicative; the ratio is "
               f"the dispatch-overhead win, which only grows on TPU]")

@@ -36,6 +36,15 @@ exhaustion defers the queue head instead of crashing.  The paged path
 is bit-exact against dense in operand-entropy mode (tested in
 tests/test_paged_kv.py).
 
+``--prefix-cache on`` (paged only) adds the copy-on-write radix prefix
+cache (``launch.prefix_cache``): admission walks a host-side radix tree
+of cached token prefixes, maps the hit's refcounted blocks into the
+slot's table read-only, prefills only the uncached suffix (zero prefill
+compute on a full-prompt hit), and copies a shared block device-side
+when a slot would scatter into it (CoW at the divergence point).
+Prefix-hit decode is bit-exact vs the cold path in operand mode
+(tests/test_prefix_cache.py).
+
 Container-scale: reduced config, debug mesh.  Full-size serving shapes
 (prefill_32k / decode_32k / long_500k) are compile-proven by launch.dryrun.
 
@@ -91,7 +100,7 @@ class Request:
 
 
 class BlockAllocator:
-    """Free-list allocator over a global pool of fixed-size KV blocks.
+    """Refcounted free-list allocator over a global pool of KV blocks.
 
     Pure host-side (no jax).  A request's whole-lifetime block budget is
     RESERVED at admission (so a running request can never starve
@@ -100,6 +109,13 @@ class BlockAllocator:
     the sequence actually grows: prompt blocks at admission, decode
     blocks granted chunk by chunk by the scheduler.  ``available()`` is
     what admission checks: free minus outstanding reservations.
+
+    Blocks carry per-block REFCOUNTS so the prefix cache can share them:
+    ``alloc`` hands a block out at refcount 1, ``incref`` adds a holder
+    (the radix tree adopting a block, a slot mapping a cached prefix),
+    and ``free`` is a decref — the block returns to the free list only
+    when the last holder lets go.  Freeing a block whose refcount is
+    already 0 is the double-free error it always was.
     """
 
     def __init__(self, num_blocks: int, block_size: int):
@@ -109,6 +125,7 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: list[int] = list(range(num_blocks - 1, -1, -1))
+        self._ref = [0] * num_blocks
         self._reserved = 0
         self.peak_in_use = 0
 
@@ -144,15 +161,51 @@ class BlockAllocator:
                              f"({self._reserved} reserved)")
         self._reserved -= n
         ids = [self._free.pop() for _ in range(n)]
+        for i in ids:
+            self._ref[i] = 1
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return ids
 
+    def refcount(self, block: int) -> int:
+        return self._ref[block]
+
+    def incref(self, ids: list[int]) -> None:
+        """Add a holder to live blocks (prefix-cache adoption/sharing)."""
+        for i in ids:
+            if self._ref[i] < 1:
+                raise ValueError(f"incref of free block {i}")
+            self._ref[i] += 1
+
     def free(self, ids: list[int]) -> None:
-        dupes = sorted(set(ids) & set(self._free)) + sorted(
-            i for i in set(ids) if ids.count(i) > 1)
-        if dupes:
+        """Decref; a block rejoins the free list when its last holder
+        (slot or prefix-cache node) releases it.  No single holder ever
+        releases one block twice in a call, so same-call duplicates are
+        a caller bug caught here rather than a silent refcount steal."""
+        if len(set(ids)) != len(ids):
+            dupes = sorted({i for i in ids if ids.count(i) > 1})
             raise ValueError(f"double free of blocks {dupes}")
-        self._free.extend(ids)
+        for i in ids:
+            if self._ref[i] < 1:
+                raise ValueError(f"double free of blocks [{i}]")
+            self._ref[i] -= 1
+            if self._ref[i] == 0:
+                self._free.append(i)
+
+
+@dataclasses.dataclass
+class PrefixAdmit:
+    """Per-slot prefix-cache admission record the engine acts on.
+
+    ``tokens`` of the prompt are already resident in shared blocks
+    mapped read-only into the slot's table; prefill runs only on the
+    suffix.  ``cow`` is a pending ``(src, dst)`` device-side block copy:
+    the partially-matched tail block ``src`` stays referenced until the
+    engine copies it into ``dst`` (already swapped into the table) and
+    calls ``finish_cow``.
+    """
+
+    tokens: int
+    cow: Optional[tuple] = None
 
 
 class SlotScheduler:
@@ -167,14 +220,27 @@ class SlotScheduler:
     defers — FIFO, no skip-ahead — when the pool can't cover it), prompt
     blocks are allocated at admission, ``grant`` maps further blocks
     incrementally as decode deepens, and ``evict`` returns every block.
+
+    With a ``prefix_cache`` (``launch.prefix_cache.RadixPrefixCache``)
+    admission first walks the radix tree: the matched prefix's blocks
+    are mapped into the slot's table shared (incref, read-only), only
+    the uncached span reserves fresh blocks, a token-granular partial
+    match allocates one extra block for the copy-on-write of the shared
+    tail, and eviction INSERTS the request's prompt blocks into the tree
+    (ownership transfers to the cache) before the slot's decref.  Under
+    pool pressure admission asks the cache to LRU-evict unreferenced
+    blocks before deferring.
     """
 
     def __init__(self, num_slots: int,
                  allocator: Optional[BlockAllocator] = None,
-                 table_width: int = 0):
+                 table_width: int = 0, prefix_cache=None):
         self.slots: list[Optional[Request]] = [None] * num_slots
         self.queue: collections.deque[Request] = collections.deque()
         self.allocator = allocator
+        self.prefix_cache = prefix_cache
+        if prefix_cache is not None and allocator is None:
+            raise ValueError("prefix cache requires a BlockAllocator")
         if allocator is not None:
             if table_width < 1:
                 raise ValueError("paged scheduling needs table_width "
@@ -184,6 +250,9 @@ class SlotScheduler:
             self._slot_blocks: list[list[int]] = \
                 [[] for _ in range(num_slots)]
             self._slot_reserved = [0] * num_slots
+            self._slot_prefix: list[Optional[PrefixAdmit]] = \
+                [None] * num_slots
+            self._slot_cow_src: list[Optional[int]] = [None] * num_slots
             # bumped on every table mutation (admit/grant/evict) so the
             # engine only re-uploads the device table when it changed
             self.table_version = 0
@@ -191,21 +260,77 @@ class SlotScheduler:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def _try_reserve(self, need: int, protect: frozenset) -> bool:
+        """Reserve ``need`` blocks, LRU-evicting cached-but-unreferenced
+        blocks first when the pool is short (``protect`` pins the hit
+        being admitted)."""
+        alloc = self.allocator
+        if alloc.available() < need and self.prefix_cache is not None:
+            self.prefix_cache.evict_lru(need - alloc.available(),
+                                        protect=protect)
+        return alloc.reserve(need)
+
     def _admit_paged(self, slot: int) -> Optional[Request]:
         alloc = self.allocator
         req = self.queue[0]
-        need = alloc.blocks_for(len(req.prompt) + req.max_new_tokens)
-        if not alloc.reserve(need):
-            return None                  # pool exhausted: defer, FIFO
-        self.queue.popleft()
-        prompt_blocks = alloc.blocks_for(len(req.prompt))
-        ids = alloc.alloc(prompt_blocks)
+        P = len(req.prompt)
+        total = alloc.blocks_for(P + req.max_new_tokens)
+        hit = self.prefix_cache.match(req.prompt) \
+            if self.prefix_cache is not None else None
+        if hit is not None and hit.tokens:
+            # uncached span + one extra block when the shared tail needs
+            # a copy-on-write duplicate before this slot writes into it
+            need = total - len(hit.blocks) + (1 if hit.partial else 0)
+            if not self._try_reserve(need, frozenset(hit.blocks)):
+                # liveness: when no live slot will ever free a block
+                # (everything left is cache-held, pinned by this very
+                # hit), fall back to a cold admission rather than
+                # deadlocking on the hit's own protection
+                if alloc.in_use > self.prefix_cache.cached_blocks():
+                    return None           # a running slot will free some
+                hit = None
+        if hit is None or not hit.tokens:
+            if not self._try_reserve(total, frozenset()):
+                return None               # pool exhausted: defer, FIFO
+            self.queue.popleft()
+            ids = alloc.alloc(alloc.blocks_for(P))
+            self._slot_reserved[slot] = total - len(ids)
+            if self.prefix_cache is not None:
+                self._slot_prefix[slot] = PrefixAdmit(tokens=0)
+        else:
+            self.queue.popleft()
+            self.prefix_cache.lock(hit)   # slot refs on shared blocks
+            ids = list(hit.blocks)
+            cow = None
+            if hit.partial:
+                [dst] = alloc.alloc(1)
+                cow = (ids[-1], dst)      # src stays ref'd: finish_cow
+                self._slot_cow_src[slot] = ids[-1]
+                ids[-1] = dst
+            ids += alloc.alloc(alloc.blocks_for(P) - len(hit.blocks))
+            self._slot_reserved[slot] = total - alloc.blocks_for(P)
+            self._slot_prefix[slot] = PrefixAdmit(tokens=hit.tokens,
+                                                  cow=cow)
         self._slot_blocks[slot] = ids
-        self._slot_reserved[slot] = need - prompt_blocks
         self.block_tables[slot, :] = -1
-        self.block_tables[slot, :prompt_blocks] = ids
+        self.block_tables[slot, :len(ids)] = ids
         self.table_version += 1
         return req
+
+    def prefix_admit(self, slot: int) -> Optional[PrefixAdmit]:
+        """The slot's prefix-cache admission record (None when the cache
+        is off)."""
+        return self._slot_prefix[slot] if self.prefix_cache is not None \
+            else None
+
+    def finish_cow(self, slot: int) -> None:
+        """The engine copied the shared tail block device-side; release
+        this slot's reference on the source (the tree keeps its own)."""
+        src = self._slot_cow_src[slot]
+        if src is None:
+            raise ValueError(f"no pending CoW on slot {slot}")
+        self._slot_cow_src[slot] = None
+        self.allocator.free([src])
 
     def admit(self) -> list[tuple[int, Request]]:
         placed = []
@@ -246,6 +371,17 @@ class SlotScheduler:
             raise ValueError(f"evict of empty slot {slot}")
         self.slots[slot] = None
         if self.allocator is not None:
+            if self.prefix_cache is not None:
+                # adopt the prompt's blocks into the radix tree BEFORE
+                # the slot lets go: chunks already cached share the
+                # existing nodes, fresh ones transfer to the cache
+                nprompt = self.allocator.blocks_for(len(req.prompt))
+                self.prefix_cache.insert(req.prompt,
+                                         self._slot_blocks[slot][:nprompt])
+                if self._slot_cow_src[slot] is not None:
+                    self.allocator.free([self._slot_cow_src[slot]])
+                    self._slot_cow_src[slot] = None
+                self._slot_prefix[slot] = None
             self.allocator.free(self._slot_blocks[slot])
             self._slot_blocks[slot] = []
             self.allocator.unreserve(self._slot_reserved[slot])
@@ -253,6 +389,21 @@ class SlotScheduler:
             self.block_tables[slot, :] = -1
             self.table_version += 1
         return req
+
+    def pool_stats(self) -> dict:
+        """Queue depth + block-pool occupancy snapshot (free / reserved
+        / cached / in-use counts), so allocator behavior is observable
+        per chunk without a debugger."""
+        out = {"queue_depth": len(self.queue),
+               "active_slots": sum(r is not None for r in self.slots)}
+        if self.allocator is not None:
+            a = self.allocator
+            out.update(
+                blocks_free=len(a._free), blocks_reserved=a._reserved,
+                blocks_in_use=a.in_use,
+                blocks_cached=(self.prefix_cache.cached_blocks()
+                               if self.prefix_cache is not None else 0))
+        return out
 
     def active(self) -> list[tuple[int, Request]]:
         return [(i, r) for i, r in enumerate(self.slots) if r is not None]
@@ -287,17 +438,36 @@ class ServeEngine:
     bit-exact against dense when ``max_len`` is a ``kv_block`` multiple
     (equal logical spans; tested in tests/test_paged_kv.py).  Families
     without KV strips (ssm) fall back to dense.
+
+    ``prefix_cache=True`` (paged only) puts a host-side radix tree
+    (``launch.prefix_cache.RadixPrefixCache``) over the block pool:
+    admission walks the tree, maps the longest cached token prefix's
+    blocks into the slot's table read-only (refcounted sharing), and
+    prefill runs only on the uncached suffix — a full-prompt hit costs
+    zero prefill compute.  A token-granular partial match into a shared
+    block triggers copy-on-write (device-side block duplicate + table
+    swap) before the slot writes at the divergence point.  Evicted
+    requests donate their prompt blocks to the tree; cached-but-
+    unreferenced blocks are LRU-evicted under pool pressure.  Restricted
+    to families whose prompt KV is a pure function of token IDs
+    (``registry.supports_prefix_cache``); hit decode is bit-exact vs the
+    cold path under the same admission schedule (tested in
+    tests/test_prefix_cache.py).
     """
 
     def __init__(self, params, cfg, *, num_slots: int, max_len: int,
                  chunk: int = 8, entropy: Optional[KernelEntropy] = None,
                  mi_threshold: float = 0.05, se_threshold: float = 1.0,
                  eos_id: Optional[int] = None, kv_layout: str = "dense",
-                 kv_block: int = 16, kv_blocks: Optional[int] = None):
+                 kv_block: int = 16, kv_blocks: Optional[int] = None,
+                 prefix_cache: bool = False):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if kv_block < 1:
             raise ValueError(f"kv_block must be >= 1, got {kv_block}")
+        if prefix_cache and kv_layout != "paged":
+            raise ValueError("prefix cache shares blocks of the paged "
+                             "pool; run with kv_layout='paged'")
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
@@ -305,6 +475,12 @@ class ServeEngine:
         self.chunk = chunk
         self.eos_id = eos_id
         self.kv_layout = kv_layout if M.supports_paged(cfg) else "dense"
+        # prefix reuse additionally needs prompt KV that is a pure
+        # function of the token IDs (see registry.supports_prefix_cache);
+        # unsupported families silently serve cold, like the ssm
+        # dense fallback above
+        self.prefix_cache = (prefix_cache and self.kv_layout == "paged"
+                             and M.supports_prefix_cache(cfg))
         self.kv_block = kv_block
         self.table_width = M.paged_table_width(max_len, kv_block)
         # default pool = full dense capacity: no admission change, the
@@ -324,7 +500,38 @@ class ServeEngine:
                 lambda c, slot, sub, row: M.write_slot(cfg, c, slot, sub,
                                                        row),
                 donate_argnums=(0,))
-        else:
+        if self.prefix_cache:
+            # prefix-hit fast paths.  _suffix gathers the slot's cached
+            # prefix strips from the pool, prefills ONLY the uncached
+            # suffix against them (bit-exact vs the cold flash-attention
+            # path; see layers.apply_attention_suffix) and scatters the
+            # suffix KV at its logical offset.  _copy is the device-side
+            # CoW block duplicate; _set_len is all a full-prompt hit
+            # needs (the engine never uses prefill's hidden output —
+            # decode re-feeds the last prompt token).
+            def suffix_fn(p, c, slot, row, toks, plen):
+                # gather only the blocks the hit spans (plen is static),
+                # not the full table-width logical strip
+                nb = -(-plen // kv_block)
+                strips = {
+                    n: jax.vmap(lambda pool: M.paged_gather(
+                        pool, row[None, :nb]))(c[n])
+                    for n in M.PAGED_KV_LEAVES if n in c}
+                _, sub = M.prefill_suffix(p, cfg, toks, strips, plen)
+                return M.write_slot(cfg, c, slot, sub, row, offset=plen)
+
+            # plen is STATIC: bit-exactness vs the cold path needs the
+            # suffix attention to reduce over exactly prefix + suffix
+            # keys, so each (hit, suffix) length pair compiles once
+            self._suffix = jax.jit(suffix_fn, static_argnums=(5,),
+                                   donate_argnums=(1,))
+            self._copy = jax.jit(
+                lambda c, src, dst: M.copy_block(cfg, c, src, dst),
+                donate_argnums=(0,))
+            self._set_len = jax.jit(
+                lambda c, slot, n: dict(c, len=c["len"].at[slot].set(n)),
+                donate_argnums=(0,))
+        if not paged:
             self._prefill = jax.jit(
                 lambda p, t, m: M.prefill(p, cfg, t, max_len, m))
             self._write = jax.jit(
@@ -366,6 +573,7 @@ class ServeEngine:
                     f"past capacity would be dropped silently")
         paged = self.kv_layout == "paged"
         alloc = None
+        pcache = None
         if paged:
             alloc = BlockAllocator(self.kv_blocks, self.kv_block)
             for r in requests:
@@ -375,8 +583,12 @@ class ServeEngine:
                         f"request {r.rid}: needs {need} KV blocks but the "
                         f"pool only has {self.kv_blocks}; it could never "
                         f"be admitted")
+            if self.prefix_cache:
+                from repro.launch.prefix_cache import RadixPrefixCache
+                pcache = RadixPrefixCache(alloc, self.kv_block)
         sched = SlotScheduler(self.num_slots, allocator=alloc,
-                              table_width=self.table_width)
+                              table_width=self.table_width,
+                              prefix_cache=pcache)
         t_start = time.perf_counter()
         for r in requests:
             r.t_submit = time.perf_counter()
@@ -393,35 +605,72 @@ class ServeEngine:
         step0 = 0
         table_synced = -1            # device block-table version synced
         decode_s = 0.0
-        # the jitted prefill compiles once per distinct prompt length;
-        # classify each admission's time accordingly so mixed-length
-        # traffic doesn't launder recompiles into the steady-state stat
+        # the jitted prefill compiles once per distinct prompt length
+        # (suffix prefill: per distinct suffix length); classify each
+        # admission's time accordingly so mixed-length traffic doesn't
+        # launder recompiles into the steady-state stat
         compile_times: list[float] = []
         steady_times: list[float] = []
-        seen_prompt_lens: set[int] = set()
+        seen_prefill_shapes: set[tuple] = set()
         modality1 = self._modality(1)
+        # prefix-cache counters + per-chunk scheduler/pool trace
+        pc_hits = pc_misses = pc_cow = 0
+        pc_tokens = pc_saved = 0
+        sched_trace: list[dict] = []
 
         while sched.has_work():
             for slot, req in sched.admit():
                 t0 = time.perf_counter()
-                _, sub = self._prefill(
-                    self.params, jnp.asarray(req.prompt)[None], modality1)
-                if paged:
-                    cache = self._write(
-                        cache, jnp.asarray(slot, jnp.int32), sub,
-                        jnp.asarray(sched.block_tables[slot]))
+                info = sched.prefix_admit(slot) if paged else None
+                hit_len = info.tokens if info is not None else 0
+                P = len(req.prompt)
+                if info is not None and info.cow is not None:
+                    # the shared tail block is about to be written at the
+                    # divergence point: duplicate it device-side and let
+                    # the scheduler drop this slot's ref on the original
+                    src, dst = info.cow
+                    cache = self._copy(cache, jnp.asarray(src, jnp.int32),
+                                       jnp.asarray(dst, jnp.int32))
+                    sched.finish_cow(slot)
+                    pc_cow += 1
+                slot_ = jnp.asarray(slot, jnp.int32)
+                if hit_len == P:
+                    # whole prompt resident: zero prefill compute — the
+                    # decode loop only needs the slot's depth
+                    cache = self._set_len(cache, slot_,
+                                          jnp.asarray(P, jnp.int32))
+                    shape_key = ("hit",)
+                elif hit_len > 0:
+                    cache = self._suffix(
+                        self.params, cache, slot_,
+                        jnp.asarray(sched.block_tables[slot]),
+                        jnp.asarray(req.prompt[hit_len:])[None], hit_len)
+                    shape_key = ("suffix", hit_len, P - hit_len)
                 else:
-                    cache = self._write(cache,
-                                        jnp.asarray(slot, jnp.int32), sub)
+                    _, sub = self._prefill(
+                        self.params, jnp.asarray(req.prompt)[None],
+                        modality1)
+                    if paged:
+                        cache = self._write(
+                            cache, slot_, sub,
+                            jnp.asarray(sched.block_tables[slot]))
+                    else:
+                        cache = self._write(cache, slot_, sub)
+                    shape_key = ("cold", P)
+                if info is not None:
+                    pc_hits += bool(hit_len)
+                    pc_misses += not hit_len
+                    pc_tokens += P
+                    pc_saved += hit_len
                 tok = tok.at[slot].set(int(req.prompt[-1]))
                 active = active.at[slot].set(True)
                 flags = {k: v.at[slot].set(0) for k, v in flags.items()}
                 jax.block_until_ready(cache)
                 dt = time.perf_counter() - t0
-                if len(req.prompt) in seen_prompt_lens:
+                if shape_key in seen_prefill_shapes:
                     steady_times.append(dt)
                 else:
-                    seen_prompt_lens.add(len(req.prompt))
+                    seen_prefill_shapes.add(shape_key)
                     compile_times.append(dt)
 
             if paged:
@@ -438,6 +687,7 @@ class ServeEngine:
                         sched.block_tables))
                     table_synced = sched.table_version
 
+            sched_trace.append(sched.pool_stats())
             t0 = time.perf_counter()
             tok, cache, flags, ys = self._scan(
                 self.params, tok, cache, jnp.asarray(step0, jnp.int32),
@@ -464,6 +714,15 @@ class ServeEngine:
 
         total_s = time.perf_counter() - t_start
         gen_tokens = sum(len(r.tokens) for r in requests)
+        # leak check: after the drain every block is either free or held
+        # by the prefix cache (cached refcounts included), and no
+        # reservation is outstanding
+        if alloc is not None:
+            cached_end = pcache.cached_blocks() if pcache else 0
+            if alloc._reserved or alloc.in_use != cached_end:
+                raise RuntimeError(
+                    f"block leak after drain: {alloc.in_use} in use vs "
+                    f"{cached_end} cached, {alloc._reserved} reserved")
         # KV residency accounting: dense permanently owns num_slots
         # strips of max_len; paged owns only the blocks actually mapped
         # (peak over the run), which is what mixed-length traffic saves
@@ -506,6 +765,23 @@ class ServeEngine:
             "latency_p50_s": float(np.percentile(lat, 50)),
             "latency_p99_s": float(np.percentile(lat, 99)),
             "kv": kv_stats,
+            # radix prefix cache over the paged pool: zero-compute hit
+            # spans, CoW divergence copies, LRU pressure evictions
+            "prefix_cache": {
+                "enabled": self.prefix_cache,
+                "hits": pc_hits,
+                "misses": pc_misses,
+                "hit_rate": pc_hits / max(pc_hits + pc_misses, 1),
+                "prompt_tokens": pc_tokens,
+                "prompt_tokens_saved": pc_saved,
+                "saved_frac": pc_saved / max(pc_tokens, 1),
+                "cow_copies": pc_cow,
+                "cache_evictions": pcache.evictions if pcache else 0,
+                "blocks_cached_end": (pcache.cached_blocks()
+                                      if pcache else 0),
+            },
+            # per-chunk scheduler snapshot (queue depth + pool occupancy)
+            "sched_trace": sched_trace,
             "epistemic_flags": int(epi),
             "aleatoric_flags": int(alea),
             "flags_per_1k_tokens": {
@@ -568,8 +844,13 @@ def make_requests(args, cfg) -> list[Request]:
     stream = TokenStreamState(seed=args.seed, host=0, num_hosts=1)
     toks, _ = token_batch(stream, args.num_requests, args.prompt_len,
                           cfg.vocab_size)
-    return [Request(rid=i, prompt=np.asarray(toks[i], np.int32),
-                    max_new_tokens=args.gen_len)
+    toks = np.asarray(toks, np.int32).copy()
+    if args.shared_prefix:
+        # shared-system-prompt traffic: every request opens with the
+        # same template tokens (what the prefix cache amortizes)
+        n = min(args.shared_prefix, args.prompt_len)
+        toks[:, :n] = toks[0, :n]
+    return [Request(rid=i, prompt=toks[i], max_new_tokens=args.gen_len)
             for i in range(args.num_requests)]
 
 
@@ -588,7 +869,8 @@ def serve(args) -> dict:
         chunk=args.chunk, entropy=entropy,
         mi_threshold=args.mi_threshold, se_threshold=args.se_threshold,
         eos_id=args.eos_id, kv_layout=args.kv_layout,
-        kv_block=args.kv_block, kv_blocks=args.kv_blocks)
+        kv_block=args.kv_block, kv_blocks=args.kv_blocks,
+        prefix_cache=args.prefix_cache == "on")
     result = engine.run(make_requests(args, cfg))
 
     # entropy HBM traffic of the head's MC draws per decoded token: the
@@ -636,6 +918,17 @@ def main():
     ap.add_argument("--kv-blocks", type=int, default=None,
                     help="pool size in blocks (default: full dense "
                          "capacity, slots * ceil(max_len / kv_block))")
+    ap.add_argument("--prefix-cache", choices=("on", "off"),
+                    default="off",
+                    help="'on': radix prefix cache over the paged pool — "
+                         "prompts sharing a cached prefix map its blocks "
+                         "read-only (zero prefill compute for the hit "
+                         "span, copy-on-write at divergence); needs "
+                         "--kv-layout paged")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="make the first N prompt tokens identical "
+                         "across requests (shared-system-prompt traffic "
+                         "for the prefix cache)")
     args = ap.parse_args()
     r = serve(args)
     print(f"served {r['num_requests']} requests / {r['gen_tokens']} tokens "
@@ -662,6 +955,15 @@ def main():
     else:
         print(f"kv: dense strips, {kv['bytes_in_use_peak'] / 1e6:.2f} MB "
               f"resident for the whole run")
+    pc = r["prefix_cache"]
+    if pc["enabled"]:
+        print(f"prefix cache: {pc['hits']}/{pc['hits'] + pc['misses']} "
+              f"admissions hit ({pc['hit_rate']:.0%}), "
+              f"{pc['prompt_tokens_saved']}/{pc['prompt_tokens']} prefill "
+              f"tokens saved ({pc['saved_frac']:.0%}), "
+              f"{pc['cow_copies']} CoW copies, "
+              f"{pc['cache_evictions']} LRU evictions, "
+              f"{pc['blocks_cached_end']} blocks cached at exit")
     print("MI per request:")
     for r_ in r["requests"]:
         print(f"  #{r_.rid} ({r_.finish_reason}): "

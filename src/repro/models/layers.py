@@ -238,6 +238,18 @@ def paged_scatter(pool: jax.Array, block_table: jax.Array,
     return pool.at[phys, idx % BS].set(new, mode="drop")
 
 
+def copy_block(pool: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """Copy-on-write: duplicate physical block ``src`` into ``dst``.
+
+    pool: (NB, BS, ...).  The serving engine calls this (vmapped over
+    the layer axis of every paged KV leaf) when a slot is about to
+    scatter into a block it shares with the prefix cache: the slot's
+    table entry is swapped to ``dst`` host-side and the divergent write
+    lands in the copy, leaving the cached original untouched.
+    """
+    return pool.at[dst].set(pool[src])
+
+
 def paged_gather(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     """Gather each slot's logical KV strip from the block pool.
 
@@ -344,6 +356,61 @@ def apply_attention(p, cfg: ArchConfig, x: jax.Array, *,
             new_kv = (k, v)
     out = out.reshape(B, S, H * hd)
     return _mm(out, p["wo"]), new_kv
+
+
+def apply_attention_suffix(p, cfg: ArchConfig, x: jax.Array, *,
+                           prefix_kv: tuple, prefix_len: int,
+                           positions: jax.Array):
+    """Prefill continuation: attention for the UNCACHED suffix of a
+    prompt whose first ``prefix_len`` positions already live in the KV
+    cache (prefix-cache hit).
+
+    x: (B, S, d) suffix hidden states for absolute positions
+    ``prefix_len + [0, S)``; ``prefix_kv``: (k, v) logical strips
+    (B, prefix_len, Hkv, D) — exactly the cached span, sliced by the
+    caller; ``positions``: (B or 1, S) absolute RoPE positions
+    (``prefix_len + arange(S)``).  ``prefix_len`` must be a STATIC
+    Python int (one compile per hit length), not a traced value.
+
+    Returns (out, (k_suffix, v_suffix)) — the suffix K/V the caller
+    scatters into the pool at logical offset ``prefix_len``.
+
+    BIT-EXACTNESS: this runs the same ``flash_attention`` code path as
+    the cold full-prompt prefill, attending over exactly
+    ``prefix_len + S`` keys — cached prefix concatenated with the
+    suffix K/V, i.e. the identical operand values at the identical
+    indices AND the identical reduction extent as the cold path's
+    suffix rows.  Equal reduction lengths matter: XLA's lane/remainder
+    handling associates a k-axis sum differently for different key
+    counts, so attending over a longer padded-and-masked strip would
+    drift in the last ulp even though masked positions contribute
+    exact zeros.  Queries are row-independent, so the q-chunk geometry
+    differing from the cold path is irrelevant.  Tested bitwise in
+    tests/test_prefix_cache.py.
+    """
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _mm(x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, H, hd)
+    k = _mm(x, p["wk"])
+    v = _mm(x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    kc, vc = prefix_kv
+    ks = jnp.concatenate([kc.astype(k.dtype), k], axis=1)
+    vs = jnp.concatenate([vc.astype(v.dtype), v], axis=1)
+    out = flash_attention(q, ks, vs, causal=True,
+                          q_chunk=cfg.attn_q_chunk,
+                          kv_chunk=cfg.attn_kv_chunk,
+                          q_offset=prefix_len)
+    out = out.reshape(B, S, H * hd)
+    return _mm(out, p["wo"]), (k, v)
 
 
 def make_cross_kv(p, cfg: ArchConfig, enc_out: jax.Array):

@@ -29,7 +29,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import encdec, hybrid, moe, ssm, transformer
-from repro.models.layers import (paged_scatter,  # noqa: F401 (re-export)
+from repro.models.layers import (copy_block as _copy_block_1l,
+                                 paged_gather,  # noqa: F401 (re-export)
+                                 paged_scatter,
                                  paged_table_width)
 
 
@@ -98,6 +100,32 @@ def supports_paged(cfg: ArchConfig) -> bool:
     return cfg.family != "ssm"
 
 
+def supports_prefix_cache(cfg: ArchConfig) -> bool:
+    """Whether prompt KV can be shared across requests by token prefix.
+
+    Sound only when per-position prompt state is a pure function of the
+    token prefix: ``vlm``/``encdec``/``audio`` mix non-token modality
+    inputs (prefix embeds, encoder frames) into the cache, ``ssm``/
+    ``hybrid`` carry recurrent state that a KV-block prefix cannot
+    reconstruct, and ``moe`` couples tokens through the expert-capacity
+    cumsum (a suffix-only prefill sees a different contention set, so
+    capacity drops — and therefore bits — can differ).  That leaves the
+    dense token-only family.
+    """
+    return cfg.family == "dense"
+
+
+def prefill_suffix(params, cfg: ArchConfig, tokens, prefix_kv: dict,
+                   prefix_len):
+    """Prefill only the uncached suffix of a prefix-cache hit; see the
+    family implementations (``supports_prefix_cache`` gates dispatch)."""
+    if not supports_prefix_cache(cfg):
+        raise ValueError(f"family {cfg.family!r} cannot prefix-share "
+                         "prompt KV")
+    return module_for(cfg).prefill_suffix(params, cfg, tokens, prefix_kv,
+                                          prefix_len)
+
+
 def make_cache(cfg: ArchConfig, batch: int, max_len: int,
                layout: str = "dense", kv_block: int = 16,
                num_blocks: int = 0):
@@ -147,7 +175,21 @@ def kv_bytes(cache) -> int:
                for n in PAGED_KV_LEAVES if n in cache)
 
 
-def write_slot(cfg: ArchConfig, cache, slot, sub, block_row=None):
+def copy_block(cfg: ArchConfig, cache, src, dst):
+    """Copy-on-write: duplicate physical block ``src`` into ``dst``
+    across every paged KV leaf (vmapped over the layer axis).  The
+    caller swaps the slot's table entry to ``dst`` host-side before the
+    divergent write; non-pool leaves pass through untouched."""
+    out = dict(cache)
+    for name in PAGED_KV_LEAVES:
+        if name in cache:
+            out[name] = jax.vmap(
+                lambda pool: _copy_block_1l(pool, src, dst))(cache[name])
+    return out
+
+
+def write_slot(cfg: ArchConfig, cache, slot, sub, block_row=None,
+               offset=None):
     """Write a batch-1 request cache ``sub`` into decode slot ``slot``.
 
     Family-agnostic by layout convention: every cache leaf carries the
@@ -159,7 +201,9 @@ def write_slot(cfg: ArchConfig, cache, slot, sub, block_row=None):
     Paged layout (``cache`` has a ``block_table``): ``block_row`` is the
     slot's (MB,) physical-block row from the host allocator; the
     ``PAGED_KV_LEAVES`` of ``sub`` (dense batch-1 strips from prefill)
-    are scattered from logical position 0 through the shared
+    are scattered from logical position ``offset`` (default 0; a
+    prefix-cache hit passes the matched prefix length so the suffix
+    strip lands after the shared blocks) through the shared
     ``layers.paged_scatter`` indirection (vmapped over the layer axis),
     the remaining leaves take the dense slot write, and the
     slot's table row is installed.  Strip tokens past the mapped blocks
@@ -177,6 +221,8 @@ def write_slot(cfg: ArchConfig, cache, slot, sub, block_row=None):
 
     if block_row is None:
         raise ValueError("paged cache write needs the slot's block_row")
+    lens0 = jnp.zeros((1,), jnp.int32) if offset is None else \
+        jnp.reshape(jnp.asarray(offset, jnp.int32), (1,))
     out = {}
     for name, c in cache.items():
         if name == "block_table":
@@ -185,9 +231,8 @@ def write_slot(cfg: ArchConfig, cache, slot, sub, block_row=None):
         elif name in PAGED_KV_LEAVES:
             strip = sub[name].astype(c.dtype)      # (A, 1, S, Hkv, hd)
             table = block_row[None].astype(jnp.int32)
-            zero = jnp.zeros((1,), jnp.int32)
             out[name] = jax.vmap(
-                lambda pool, new: paged_scatter(pool, table, zero, new)
+                lambda pool, new: paged_scatter(pool, table, lens0, new)
             )(c, strip)
         elif c.ndim == 1:                          # the (B,) len vector
             out[name] = jax.lax.dynamic_update_slice(

@@ -212,6 +212,54 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int,
     return hidden[:, -1], cache
 
 
+def prefill_suffix(params, cfg: ArchConfig, tokens: jax.Array,
+                   prefix_kv: dict, prefix_len: int):
+    """Prefill ONLY the uncached suffix of a prefix-cache hit.
+
+    tokens: (B, S) the suffix token IDs (absolute positions
+    ``prefix_len + [0, S)``); ``prefix_kv``: {"k", "v"} logical strips
+    (L, B, W, Hkv, hd) gathered from the block pool with
+    ``W >= prefix_len``; ``prefix_len``: STATIC Python int (one compile
+    per (hit, suffix) length pair — equal attention reduction extents
+    are what make this path bit-exact, see
+    ``layers.apply_attention_suffix``).
+
+    Returns (hidden_last, sub) where sub holds the SUFFIX-ONLY K/V
+    strips (L, B, S, Hkv, hd) — the caller scatters them at logical
+    offset ``prefix_len`` (``write_slot(..., offset=prefix_len)``) —
+    and the slot's full depth ``len = prefix_len + S``.  Suffix rows
+    are bit-exact vs a cold prefill of the whole prompt (same
+    flash-attention path; tested in tests/test_prefix_cache.py).
+    """
+    prefix_len = int(prefix_len)
+    x = L.apply_embed(params["embed"], tokens)
+    x = constrain(x, "batch", None, None)
+    x = constrain_seq(x, cfg.seq_parallel)
+    S = tokens.shape[1]
+    positions = prefix_len + jnp.arange(S)[None, :]
+    strips = {n: prefix_kv[n][:, :, :prefix_len] for n in ("k", "v")}
+
+    def scan_step(x, bpkv):
+        bp, pkv = bpkv
+        h, kv = L.apply_attention_suffix(
+            bp["attn"], cfg, L.rms_norm(x, bp["ln1"]),
+            prefix_kv=(pkv["k"], pkv["v"]), prefix_len=prefix_len,
+            positions=positions)
+        x = x + constrain_seq(h, cfg.seq_parallel)
+        x = constrain_seq(x, cfg.seq_parallel)
+        x = x + constrain_seq(L.apply_mlp(bp["mlp"], cfg,
+                                          L.rms_norm(x, bp["ln2"])),
+                              cfg.seq_parallel)
+        x = constrain_seq(x, cfg.seq_parallel)
+        return x, kv
+
+    x, kvs = jax.lax.scan(scan_step, x, (params["blocks"], strips))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    k, v = kvs
+    lens = jnp.full((tokens.shape[0],), prefix_len + S, jnp.int32)
+    return x[:, -1], {"k": k, "v": v, "len": lens}
+
+
 def _decode_block(bp, cfg, x, kv, cache_len, block_table=None):
     """One layer of single-token decode; kv: dict k/v (B, S, Hkv, hd)
     strips, or (NB, BS, Hkv, hd) block pools when ``block_table`` is set.
