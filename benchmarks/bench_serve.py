@@ -40,7 +40,10 @@ trajectory across commits.  Fields:
   speedup_scan_x         engine_tok_per_s / baseline_tok_per_s (>= 2x
                          is the acceptance bar on the reduced CPU config)
   engine_e2e_tok_per_s   engine end to end: prefills + scheduling + decode
-  latency_p50_s, latency_p99_s   per-request submit->finish latency
+  latency_p50_s, latency_p99_s, latency_max_s
+                         per-request submit->finish latency; the p99 is
+                         nearest-rank (a latency some request actually
+                         experienced — no interpolated tail at small N)
   prefill_compile_s      first jitted prefill call (includes tracing+XLA)
   prefill_steady_s       mean steady-state per-request prefill
   flags_per_1k_tokens    {epistemic, aleatoric} gating rates of the run
@@ -52,6 +55,11 @@ trajectory across commits.  Fields:
     kv_bytes_paged_peak     peak mapped paged blocks in bytes,
     kv_bytes_saved_frac     1 - paged_peak / dense_strips,
     blocks_peak / blocks_total   pool utilization high-water mark
+  decode_attn            block-sparse decode-attention row (paged):
+    gather_kv_bytes_per_step    KV bytes/step of the full-span gather,
+    kernel_kv_bytes_per_step    KV bytes/step the block-sparse kernel
+                                reads (scales with tokens cached),
+    kv_bytes_saved_frac, kernel_vs_gather_x (tok/s at parity streams)
   prefix_shared_prompt   shared-system-prompt row (prefix cache on):
     shared_len / unique_len / num_requests of the workload,
     hit_rate, prefill_tokens_saved_frac (acceptance: >= 0.5),
@@ -150,22 +158,28 @@ def run(quick: bool = False) -> dict:
                         max_new_tokens=gen_lens[i])
                 for i in range(n_mixed)]
 
+    # three drives of the same workload: dense strips, paged + gather
+    # decode attention, paged + the block-sparse kernel
+    variants = {"dense": ("dense", "gather"), "paged": ("paged", "gather"),
+                "kernel": ("paged", "kernel")}
     engines = {}
-    for layout in ("dense", "paged"):
-        engines[layout] = ServeEngine(params, cfg, num_slots=slots,
-                                      max_len=mixed_max_len, chunk=chunk,
-                                      kv_layout=layout, kv_block=kv_block)
-        engines[layout].run(mixed_requests()[:slots])  # warm up compile
+    for name, (layout, attn) in variants.items():
+        engines[name] = ServeEngine(params, cfg, num_slots=slots,
+                                    max_len=mixed_max_len, chunk=chunk,
+                                    kv_layout=layout, kv_block=kv_block,
+                                    decode_attn=attn)
+        engines[name].run(mixed_requests()[:slots])    # warm up compile
     # interleaved best-of-3: CPU dispatch jitter on this tiny config is
     # ~10%, larger than the layouts' real difference, so alternate the
     # layouts run-to-run (drift hits both) and keep each one's best
-    runs = {"dense": [], "paged": []}
+    runs = {name: [] for name in engines}
     for _ in range(3):
-        for layout, eng in engines.items():
-            runs[layout].append(eng.run(mixed_requests()))
-    mixed = {layout: max(rs, key=lambda r: r["decode_tok_per_s"])
-             for layout, rs in runs.items()}
+        for name, eng in engines.items():
+            runs[name].append(eng.run(mixed_requests()))
+    mixed = {name: max(rs, key=lambda r: r["decode_tok_per_s"])
+             for name, rs in runs.items()}
     kv_d, kv_p = mixed["dense"]["kv"], mixed["paged"]["kv"]
+    da_g, da_k = mixed["paged"]["decode_attn"], mixed["kernel"]["decode_attn"]
 
     # --- prefix cache: shared-system-prompt + S-sample-fanout rows ---
     sha = git_sha()
@@ -243,6 +257,30 @@ def run(quick: bool = False) -> dict:
                                    num_requests=num_requests),
         "prefix_shared_prompt": prefix_shared,
         "sample_fanout": fanout,
+        # block-sparse decode attention: HBM KV bytes one decode step
+        # reads — the gather path always pulls the full logical span,
+        # the kernel only the blocks holding cached tokens
+        "decode_attn": {
+            "kv_block": kv_block,
+            "max_len": mixed_max_len,
+            "gather_kv_bytes_per_step": da_g["kv_bytes_read_per_step"],
+            "kernel_kv_bytes_per_step": da_k["kv_bytes_read_per_step"],
+            "logical_span_kv_bytes_per_step":
+                da_k["kv_bytes_span_per_step"],
+            "kv_bytes_saved_frac": 1.0 - da_k["kv_bytes_read_per_step"]
+            / max(da_g["kv_bytes_read_per_step"], 1e-9),
+            "gather_tok_per_s": mixed["paged"]["decode_tok_per_s"],
+            "kernel_tok_per_s": mixed["kernel"]["decode_tok_per_s"],
+            "kernel_vs_gather_x": mixed["kernel"]["decode_tok_per_s"]
+            / max(mixed["paged"]["decode_tok_per_s"], 1e-9),
+            "git_sha": sha,
+            "config_hash": config_hash(cfg, workload="decode_attn",
+                                       slots=slots, chunk=chunk,
+                                       kv_block=kv_block,
+                                       max_len=mixed_max_len,
+                                       prompt_lens=prompt_lens,
+                                       gen_lens=gen_lens),
+        },
         "mixed": {
             "kv_block": kv_block,
             "max_len": mixed_max_len,
@@ -277,6 +315,7 @@ def run(quick: bool = False) -> dict:
         "engine_e2e_tok_per_s": res["e2e_tok_per_s"],
         "latency_p50_s": res["latency_p50_s"],
         "latency_p99_s": res["latency_p99_s"],
+        "latency_max_s": res["latency_max_s"],
         "prefill_compile_s": warm["prefill_compile_s"],
         "prefill_steady_s": res["prefill_steady_s"],
         "flags_per_1k_tokens": res["flags_per_1k_tokens"],
@@ -296,7 +335,9 @@ def main(quick: bool = False, json_path: str = "BENCH_serve.json"):
     print(f"  engine e2e:       {r['engine_e2e_tok_per_s']:8.1f} tok/s "
           f"(incl. prefill + scheduling)")
     print(f"  latency p50/p99:  {r['latency_p50_s']:.3f}s / "
-          f"{r['latency_p99_s']:.3f}s per request")
+          f"{r['latency_p99_s']:.3f}s per request "
+          f"(max {r['latency_max_s']:.3f}s; p99 is nearest-rank — at "
+          f"{s['num_requests']} requests it IS the max)")
     print(f"  prefill:          compile {r['prefill_compile_s']:.2f}s, "
           f"steady {r['prefill_steady_s'] * 1e3:.1f}ms")
     f = r["flags_per_1k_tokens"]
@@ -312,6 +353,13 @@ def main(quick: bool = False, json_path: str = "BENCH_serve.json"):
           f"{m['kv_bytes_paged_peak'] / 1e3:.1f} KB peak "
           f"({m['blocks_peak']}/{m['blocks_total']} blocks, "
           f"{m['kv_bytes_saved_frac']:.0%} saved)")
+    d = r["decode_attn"]
+    print(f"  decode attention (paged, kv_block {d['kv_block']}):")
+    print(f"    gather reads:   {d['gather_kv_bytes_per_step'] / 1e3:8.1f} "
+          f"KB KV/step (the full logical span)")
+    print(f"    kernel reads:   {d['kernel_kv_bytes_per_step'] / 1e3:8.1f} "
+          f"KB KV/step ({d['kv_bytes_saved_frac']:.0%} saved, "
+          f"{d['kernel_vs_gather_x']:.2f}x tok/s)")
     for name, label in (("prefix_shared_prompt", "shared system prompt"),
                         ("sample_fanout", "S-sample fanout")):
         p = r[name]

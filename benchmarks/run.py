@@ -13,15 +13,19 @@
   bench_serve        beyond-paper     continuous-batching scan-decode
                                       engine vs per-token loop, plus a
                                       mixed-length dense-vs-paged-KV
-                                      workload and two prefix-cache
-                                      rows — shared-system-prompt and
+                                      workload, a decode_attn row
+                                      (block-sparse kernel vs gather:
+                                      KV bytes read per decode step)
+                                      and two prefix-cache rows —
+                                      shared-system-prompt and
                                       S-sample-fanout (emits
-                                      BENCH_serve.json: tok/s, p50/p99
-                                      request latency, flags/1k tokens,
-                                      peak KV bytes paged vs dense,
-                                      prefill tokens saved + hit rate +
-                                      CoW copies, each row stamped with
-                                      git SHA + config hash)
+                                      BENCH_serve.json: tok/s,
+                                      p50/p99/max request latency,
+                                      flags/1k tokens, peak KV bytes
+                                      paged vs dense, prefill tokens
+                                      saved + hit rate + CoW copies,
+                                      each row stamped with git SHA +
+                                      config hash)
   roofline           deliverable (g)  three-term roofline per dry-run cell
 """
 

@@ -66,6 +66,12 @@ class ArchConfig:
     head_entropy: str = "kernel"     # "kernel": seeded fused head (drawn
                                      # in-kernel on TPU); "operand":
                                      # key-threaded explicit xi tensor
+    decode_attn: str = "gather"      # paged decode attention: "kernel"
+                                     # reads mapped blocks straight from
+                                     # the pool (block-sparse Pallas
+                                     # kernel); "gather" materializes the
+                                     # full logical span (the bit-exact
+                                     # reference path)
 
     # --- numerics / memory ---
     param_dtype: str = "bfloat16"

@@ -30,6 +30,7 @@ from repro.kernels.bayes_matmul import (
     bayes_matmul_fused_kernel, bayes_matmul_kernel, lrt_matmul_fused_kernel,
     lrt_matmul_kernel)
 from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.paged_attention import paged_decode_attention_kernel
 from repro.kernels.photonic_conv import (
     photonic_conv_fused_kernel, photonic_conv_kernel)
 from repro.kernels.uncertainty_head import (
@@ -147,6 +148,32 @@ def flash_attention(q, k, v, impl: Impl = "auto", causal: bool = True,
         v.transpose(0, 2, 1, 3), causal=causal, q_offset=q_offset,
         bq=bq, bk=bk, interpret=interp)
     return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def paged_decode_attention(q, k_pool, v_pool, block_table, cache_len,
+                           impl: Impl = "auto"):
+    """Block-sparse decode attention over the paged KV pool.
+
+    q (B, 1, H, D); k/v pools (NB, BS, Hkv, D); block_table (B, MB);
+    cache_len () or (B,).  Unlike the other wrappers, ``impl='auto'``
+    still runs the KERNEL off-TPU (interpret mode — the CI validation
+    path): the jnp reference of this op is the gather path
+    (``layers.paged_gather`` + ``layers.decode_attention``), and the
+    serving engine selects between the two one level up
+    (``--decode-attn``), so falling back here would silently benchmark
+    the wrong HBM traffic.  ``impl='ref'`` routes to that gather
+    composition for tests.
+    """
+    if impl == "ref":
+        from repro.models.layers import (decode_attention, mapped_span,
+                                         paged_gather)
+        eff = mapped_span(block_table, k_pool.shape[1], cache_len)
+        return decode_attention(q, paged_gather(k_pool, block_table),
+                                paged_gather(v_pool, block_table), eff)
+    return paged_decode_attention_kernel(q, k_pool, v_pool, block_table,
+                                         cache_len,
+                                         interpret=not _on_tpu())
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,192 @@
+"""Pallas TPU kernel: block-sparse paged decode attention.
+
+Single-token decode attention that reads K/V **directly from the global
+block pool** through the per-slot block table — the bandwidth half of
+the paged-KV story.  The gather path (``layers.paged_gather`` followed
+by ``layers.decode_attention``) first materializes each slot's full
+logical strip — ``MB * BS`` tokens per slot per layer, mapped or not —
+so its per-step HBM traffic is identical to the dense strips the paged
+layout was built to retire.  This kernel touches exactly the blocks
+that hold cached tokens: per-step HBM reads scale with ``cache_len``,
+not with the logical span.
+
+Grid: ``(B, Hkv, MB)`` — (slot, kv-head, logical-block), the
+logical-block axis innermost and SEQUENTIAL.  Each program loads ONE
+physical K block and one V block of ``BS`` tokens through a
+scalar-prefetched ``(B, MB)`` block table (``pltpu.
+PrefetchScalarGridSpec``): the BlockSpec index map reads the table and
+returns the mapped physical block id for step ``j``.
+
+Skip rule — two kinds of logical block never cost HBM:
+
+* blocks entirely past ``cache_len[b]``: the index map clamps ``j`` to
+  the last block the slot's depth spans, so every skipped step returns
+  the SAME physical index as its predecessor and the Pallas pipeline
+  elides the copy (consecutive equal index-map results fetch nothing);
+* ``-1`` (unmapped) table entries: clamped to physical block 0 in the
+  index map (fetched once, then elided) and masked to ``-inf`` in the
+  body, so an evicted slot's junk steps — or a table whose mapped
+  prefix is shorter than its depth — contribute nothing to the softmax.
+  The same masking guards the gather path (see
+  ``layers.mapped_span``): physical block 0 may be OWNED by the prefix
+  cache (PR 4), and a masked position must never leak cached bytes
+  into another request's reduction.
+
+Reduction: flash-style with DEFERRED normalization.  Per-block score
+tiles ``q @ k_j^T / sqrt(D)`` and the V blocks stream into VMEM scratch
+(``(rep, MB*BS)`` + ``(MB*BS, D)`` f32); the last grid step runs ONE
+softmax over exactly the masked span and one ``p @ V`` contraction over
+the full span.  This is deliberate: the gather reference computes
+softmax and the value contraction at full span, and BIT-EXACTNESS
+requires matching its reduction extents and association — a
+running-rescale online softmax multiplies ``exp(s - m_j)`` by
+correction factors ``exp(m_j - m_final)`` and drifts in the last ulp
+(the same lesson as PR 4's equal-reduction-extent suffix prefill).
+HBM traffic is identical either way; what the deferral costs is VMEM
+(one f32 score row and one f32 V strip per (slot, kv-head) program,
+fine at serving block counts; tiling the span for 32k+ contexts is
+future work).  Bit-exactness vs the gather path:
+tests/test_paged_attention.py.
+
+MXU alignment at production sizes wants BS and D multiples of 128 and
+``rep`` padded to the sublane; the reduced CPU configs run the kernel
+in interpret mode, which is also the CI validation path (no TPU in the
+container — compiled-path numbers land with first TPU access, like the
+in-kernel entropy path of PR 1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _paged_decode_kernel(bt_ref, cl_ref, q_ref, k_ref, v_ref, o_ref,
+                         s_scr, v_scr, *, MB: int, BS: int, D: int,
+                         rep: int):
+    """One (slot b, kv-head h, logical block j) program.
+
+    ``bt_ref`` (B, MB) and ``cl_ref`` (B,) are the scalar-prefetch refs
+    the index maps already consumed; the body re-reads them for the
+    validity mask.  ``s_scr``/``v_scr`` persist across the sequential
+    ``j`` axis; every step writes its slice (skipped blocks write
+    ``-inf`` scores and the clamped fetch's V bytes, which the zero
+    probabilities annihilate), so the output is a deterministic
+    function of the inputs alone.
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    phys = bt_ref[b, j]                    # raw entry: -1 = unmapped
+    clen = cl_ref[b]
+    kpos = j * BS + jax.lax.broadcasted_iota(jnp.int32, (rep, BS), 1)
+    # a position is readable only if it is below the slot's depth AND
+    # its logical block is actually mapped: -inf BEFORE the reduction,
+    # exactly like the gather path's mapped_span clamp
+    valid = (kpos < clen) & (phys >= 0)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (rep, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # (BS, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / jnp.sqrt(
+        jnp.float32(D))
+    s_scr[:, pl.ds(j * BS, BS)] = jnp.where(valid, s, -jnp.inf)
+    v_scr[pl.ds(j * BS, BS), :] = v_ref[0, :, 0].astype(jnp.float32)
+
+    @pl.when(j == MB - 1)
+    def _finalize():
+        # one softmax + one value contraction over the FULL span: the
+        # reduction extents and association match decode_attention's
+        # bit for bit (masked columns hold -inf -> exact zeros)
+        sf = s_scr[...]
+        m = jnp.max(sf, axis=-1, keepdims=True)
+        p = jnp.exp(sf - jax.lax.stop_gradient(m))
+        p = p / jnp.sum(p, axis=-1, keepdims=True)
+        o_ref[0, 0] = jnp.dot(p, v_scr[...],
+                              preferred_element_type=jnp.float32)
+
+
+def paged_decode_attention_kernel(q: jax.Array, k_pool: jax.Array,
+                                  v_pool: jax.Array,
+                                  block_table: jax.Array,
+                                  cache_len: jax.Array, *,
+                                  interpret: bool = False) -> jax.Array:
+    """q (B, 1, H, D); k/v pools (NB, BS, Hkv, D); table (B, MB) int32;
+    cache_len (B,) int32 -> (B, 1, H, D) in q.dtype.
+
+    Matches ``layers.decode_attention(q, paged_gather(k), paged_gather
+    (v), mapped-span-clamped len)`` bit for bit (operand/interpret
+    mode) while reading only mapped, in-depth blocks from HBM.  A slot
+    whose span is fully masked (``cache_len == 0`` or an all ``-1``
+    table row) returns NaN, exactly like the reference's fully-masked
+    softmax — never another block's bytes.
+    """
+    NB, BS, Hkv, D = k_pool.shape
+    B, _, H, _ = q.shape
+    MB = block_table.shape[1]
+    rep = H // Hkv
+    # head h of the flat H axis is (group g = h // rep, replica h % rep)
+    qg = q.reshape(B, Hkv, rep, D)
+    if rep == 1:
+        # MHA: pad the replica axis to two rows, mirroring
+        # layers.decode_attention — a 1-row tile would take XLA's
+        # matrix-vector emitter, whose f32 association differs from the
+        # gemm the reference's padded form uses; the zero row is
+        # discarded below
+        qg = jnp.concatenate([qg, jnp.zeros_like(qg)], axis=2)
+    krep = qg.shape[2]
+    table = block_table.astype(jnp.int32)
+    lens = jnp.broadcast_to(jnp.reshape(cache_len, (-1,)),
+                            (B,)).astype(jnp.int32)
+
+    def kv_map(b, h, j, bt, cl):
+        # clamp j to the last block the slot's depth spans: every step
+        # past it returns the SAME physical index, so the pipeline
+        # skips the fetch; -1 entries clamp to block 0 (fetched once,
+        # masked in the body)
+        nb = jnp.maximum(jnp.minimum(pl.cdiv(cl[b], BS), MB), 1)
+        je = jnp.minimum(j, nb - 1)
+        return (jnp.maximum(bt[b, je], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, krep, D),
+                         lambda b, h, j, bt, cl: (b, h, 0, 0)),
+            pl.BlockSpec((1, BS, 1, D), kv_map),
+            pl.BlockSpec((1, BS, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, krep, D),
+                               lambda b, h, j, bt, cl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((krep, MB * BS), jnp.float32),
+            pltpu.VMEM((MB * BS, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, MB=MB, BS=BS, D=D,
+                          rep=krep),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, krep, D), jnp.float32),
+        interpret=interpret,
+    )(table, lens, qg, k_pool, v_pool)
+    return out[:, :, :rep].reshape(B, 1, H, D).astype(q.dtype)
+
+
+def kv_blocks_read(cache_len, mapped_blocks, block_size: int,
+                   table_width: int) -> int:
+    """Physical KV blocks one decode step reads for one slot.
+
+    The kernel's skip rule in host arithmetic: blocks spanned by the
+    slot's depth, clamped to what the table actually maps (the
+    ``-1``-clamped fetches of a junk slot collapse to one block-0
+    fetch, counted as 0 here since the pipeline elides all but the
+    first; the bench treats it as noise).  The gather path reads the
+    full ``table_width`` span regardless.
+    """
+    spanned = min(-(-int(cache_len) // block_size), table_width)
+    return max(min(spanned, int(mapped_blocks)), 0)

@@ -45,6 +45,14 @@ when a slot would scatter into it (CoW at the divergence point).
 Prefix-hit decode is bit-exact vs the cold path in operand mode
 (tests/test_prefix_cache.py).
 
+``--decode-attn kernel`` (paged only) swaps the decode-attention read
+path from gather-the-whole-logical-span to the block-sparse Pallas
+kernel (``kernels/paged_attention.py``), which reads K/V straight from
+the block pool through the per-slot table — per-step HBM reads scale
+with the tokens actually cached instead of ``MB*BS``.  Gather stays the
+bit-exact reference (tests/test_paged_attention.py), mirroring how
+dense anchors paged and ``decode_loop_reference`` anchors scan decode.
+
 Container-scale: reduced config, debug mesh.  Full-size serving shapes
 (prefill_32k / decode_32k / long_500k) are compile-proven by launch.dryrun.
 
@@ -68,6 +76,7 @@ import numpy as np
 from repro.configs.registry import get_config, reduced
 from repro.core.entropy import KernelEntropy
 from repro.data.synthetic import TokenStreamState, token_batch
+from repro.kernels.paged_attention import kv_blocks_read
 from repro.launch import steps as S
 from repro.models import registry as M
 
@@ -405,6 +414,11 @@ class SlotScheduler:
                                if self.prefix_cache is not None else 0))
         return out
 
+    def mapped_blocks(self, slot: int) -> int:
+        """Physical blocks currently mapped into the slot's table (what
+        the block-sparse decode kernel can actually read)."""
+        return len(self._slot_blocks[slot])
+
     def active(self) -> list[tuple[int, Request]]:
         return [(i, r) for i, r in enumerate(self.slots) if r is not None]
 
@@ -453,6 +467,17 @@ class ServeEngine:
     (``registry.supports_prefix_cache``); hit decode is bit-exact vs the
     cold path under the same admission schedule (tested in
     tests/test_prefix_cache.py).
+
+    ``decode_attn`` (paged only) selects the decode-attention read path:
+    ``'gather'`` — the bit-exact reference — materializes each slot's
+    full ``MB*BS`` logical strip per layer per step, so decode HBM
+    traffic is identical to dense strips; ``'kernel'`` runs the
+    block-sparse Pallas kernel (``kernels/paged_attention.py``) that
+    reads only mapped blocks under each slot's depth straight from the
+    pool, bit-exact vs gather in operand/interpret mode (tested in
+    tests/test_paged_attention.py).  ``trace_every`` downsamples the
+    per-chunk scheduler/pool snapshot (1 = every chunk) so long runs
+    don't grow host memory linearly in chunks decoded.
     """
 
     def __init__(self, params, cfg, *, num_slots: int, max_len: int,
@@ -460,7 +485,8 @@ class ServeEngine:
                  mi_threshold: float = 0.05, se_threshold: float = 1.0,
                  eos_id: Optional[int] = None, kv_layout: str = "dense",
                  kv_block: int = 16, kv_blocks: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, decode_attn: str = "gather",
+                 trace_every: int = 1):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if kv_block < 1:
@@ -468,13 +494,32 @@ class ServeEngine:
         if prefix_cache and kv_layout != "paged":
             raise ValueError("prefix cache shares blocks of the paged "
                              "pool; run with kv_layout='paged'")
+        if decode_attn not in ("gather", "kernel"):
+            raise ValueError(f"unknown decode_attn {decode_attn!r}")
+        if decode_attn == "kernel" and kv_layout != "paged":
+            raise ValueError("the block-sparse decode kernel reads "
+                             "through the paged block table; run with "
+                             "kv_layout='paged'")
+        if trace_every < 1:
+            raise ValueError(f"trace_every must be >= 1, got {trace_every}")
         self.params = params
-        self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
         self.chunk = chunk
         self.eos_id = eos_id
+        self.trace_every = trace_every
         self.kv_layout = kv_layout if M.supports_paged(cfg) else "dense"
+        # the block-sparse decode kernel reads through the block table,
+        # so it only exists on the paged layout; families that fell back
+        # to dense silently keep the gather/dense read path, mirroring
+        # the ssm dense fallback below
+        self.decode_attn = decode_attn if self.kv_layout == "paged" \
+            else "gather"
+        # decode_attn rides ArchConfig (like head_entropy) so every
+        # family's decode threads it to layers.apply_attention without
+        # signature churn; params are structure-independent of it
+        self.cfg = cfg = dataclasses.replace(cfg,
+                                             decode_attn=self.decode_attn)
         # prefix reuse additionally needs prompt KV that is a pure
         # function of the token IDs (see registry.supports_prefix_cache);
         # unsupported families silently serve cold, like the ssm
@@ -589,6 +634,9 @@ class ServeEngine:
         sched = SlotScheduler(self.num_slots, allocator=alloc,
                               table_width=self.table_width,
                               prefix_cache=pcache)
+        # observable post-mortem (tests assert the pool balances even
+        # when run() raises mid-decode)
+        self._last_alloc, self._last_pcache = alloc, pcache
         t_start = time.perf_counter()
         for r in requests:
             r.t_submit = time.perf_counter()
@@ -617,112 +665,155 @@ class ServeEngine:
         pc_hits = pc_misses = pc_cow = 0
         pc_tokens = pc_saved = 0
         sched_trace: list[dict] = []
+        chunks_run = 0
+        # decode-attention HBM accounting (paged): physical KV blocks the
+        # selected read path touches per decode step vs the full logical
+        # span the gather path materializes (kernel skip rule in host
+        # arithmetic, kernels.paged_attention.kv_blocks_read)
+        attn_blocks_read = 0
+        attn_blocks_span = 0
 
-        while sched.has_work():
-            for slot, req in sched.admit():
-                t0 = time.perf_counter()
-                info = sched.prefix_admit(slot) if paged else None
-                hit_len = info.tokens if info is not None else 0
-                P = len(req.prompt)
-                if info is not None and info.cow is not None:
-                    # the shared tail block is about to be written at the
-                    # divergence point: duplicate it device-side and let
-                    # the scheduler drop this slot's ref on the original
-                    src, dst = info.cow
-                    cache = self._copy(cache, jnp.asarray(src, jnp.int32),
-                                       jnp.asarray(dst, jnp.int32))
-                    sched.finish_cow(slot)
-                    pc_cow += 1
-                slot_ = jnp.asarray(slot, jnp.int32)
-                if hit_len == P:
-                    # whole prompt resident: zero prefill compute — the
-                    # decode loop only needs the slot's depth
-                    cache = self._set_len(cache, slot_,
-                                          jnp.asarray(P, jnp.int32))
-                    shape_key = ("hit",)
-                elif hit_len > 0:
-                    cache = self._suffix(
-                        self.params, cache, slot_,
-                        jnp.asarray(sched.block_tables[slot]),
-                        jnp.asarray(req.prompt[hit_len:])[None], hit_len)
-                    shape_key = ("suffix", hit_len, P - hit_len)
-                else:
-                    _, sub = self._prefill(
-                        self.params, jnp.asarray(req.prompt)[None],
-                        modality1)
-                    if paged:
-                        cache = self._write(
-                            cache, slot_, sub,
-                            jnp.asarray(sched.block_tables[slot]))
+        try:
+            while sched.has_work():
+                for slot, req in sched.admit():
+                    t0 = time.perf_counter()
+                    info = sched.prefix_admit(slot) if paged else None
+                    hit_len = info.tokens if info is not None else 0
+                    P = len(req.prompt)
+                    if info is not None and info.cow is not None:
+                        # the shared tail block is about to be written at the
+                        # divergence point: duplicate it device-side and let
+                        # the scheduler drop this slot's ref on the original
+                        src, dst = info.cow
+                        cache = self._copy(cache, jnp.asarray(src, jnp.int32),
+                                           jnp.asarray(dst, jnp.int32))
+                        sched.finish_cow(slot)
+                        pc_cow += 1
+                    slot_ = jnp.asarray(slot, jnp.int32)
+                    if hit_len == P:
+                        # whole prompt resident: zero prefill compute — the
+                        # decode loop only needs the slot's depth
+                        cache = self._set_len(cache, slot_,
+                                              jnp.asarray(P, jnp.int32))
+                        shape_key = ("hit",)
+                    elif hit_len > 0:
+                        cache = self._suffix(
+                            self.params, cache, slot_,
+                            jnp.asarray(sched.block_tables[slot]),
+                            jnp.asarray(req.prompt[hit_len:])[None], hit_len)
+                        shape_key = ("suffix", hit_len, P - hit_len)
                     else:
-                        cache = self._write(cache, slot_, sub)
-                    shape_key = ("cold", P)
-                if info is not None:
-                    pc_hits += bool(hit_len)
-                    pc_misses += not hit_len
-                    pc_tokens += P
-                    pc_saved += hit_len
-                tok = tok.at[slot].set(int(req.prompt[-1]))
-                active = active.at[slot].set(True)
-                flags = {k: v.at[slot].set(0) for k, v in flags.items()}
-                jax.block_until_ready(cache)
-                dt = time.perf_counter() - t0
-                if shape_key in seen_prefill_shapes:
-                    steady_times.append(dt)
-                else:
-                    seen_prefill_shapes.add(shape_key)
-                    compile_times.append(dt)
+                        _, sub = self._prefill(
+                            self.params, jnp.asarray(req.prompt)[None],
+                            modality1)
+                        if paged:
+                            cache = self._write(
+                                cache, slot_, sub,
+                                jnp.asarray(sched.block_tables[slot]))
+                        else:
+                            cache = self._write(cache, slot_, sub)
+                        shape_key = ("cold", P)
+                    if info is not None:
+                        pc_hits += bool(hit_len)
+                        pc_misses += not hit_len
+                        pc_tokens += P
+                        pc_saved += hit_len
+                    tok = tok.at[slot].set(int(req.prompt[-1]))
+                    active = active.at[slot].set(True)
+                    flags = {k: v.at[slot].set(0) for k, v in flags.items()}
+                    jax.block_until_ready(cache)
+                    dt = time.perf_counter() - t0
+                    if shape_key in seen_prefill_shapes:
+                        steady_times.append(dt)
+                    else:
+                        seen_prefill_shapes.add(shape_key)
+                        compile_times.append(dt)
 
-            if paged:
-                # incremental grant: map the blocks the coming chunk can
-                # write (capped at each request's admission-time budget);
-                # re-upload the device table (tiny: slots x MB) only when
-                # something actually changed since the last chunk
+                if paged:
+                    # incremental grant: map the blocks the coming chunk can
+                    # write (capped at each request's admission-time budget);
+                    # re-upload the device table (tiny: slots x MB) only when
+                    # something actually changed since the last chunk
+                    for slot, req in sched.active():
+                        sched.grant(slot, len(req.prompt)
+                                    + min(len(req.tokens) + self.chunk,
+                                          req.max_new_tokens))
+                    if sched.table_version != table_synced:
+                        cache = dict(cache, block_table=jnp.asarray(
+                            sched.block_tables))
+                        table_synced = sched.table_version
+
+                if chunks_run % self.trace_every == 0:
+                    # downsampled pool/queue snapshot: a long run would
+                    # otherwise grow host memory (and the results
+                    # payload) by one dict per chunk, unbounded
+                    sched_trace.append(sched.pool_stats())
+                if paged:
+                    MB = self.table_width
+                    # the gather path materializes every slot's full
+                    # logical span each step, occupied or not
+                    attn_blocks_span += self.num_slots * MB * self.chunk
+                    if self.decode_attn == "kernel":
+                        # the kernel reads only mapped blocks under
+                        # each occupied slot's depth
+                        for slot, occupant in sched.active():
+                            len0 = len(occupant.prompt) \
+                                + len(occupant.tokens)
+                            mapped = sched.mapped_blocks(slot)
+                            attn_blocks_read += sum(
+                                kv_blocks_read(len0 + t + 1, mapped,
+                                               self.kv_block, MB)
+                                for t in range(self.chunk))
+                chunks_run += 1
+                t0 = time.perf_counter()
+                tok, cache, flags, ys = self._scan(
+                    self.params, tok, cache, jnp.asarray(step0, jnp.int32),
+                    active, flags)
+                ys = jax.device_get(ys)            # the chunk's single sync
+                decode_s += time.perf_counter() - t0
+                step0 += self.chunk
+
                 for slot, req in sched.active():
-                    sched.grant(slot, len(req.prompt)
-                                + min(len(req.tokens) + self.chunk,
-                                      req.max_new_tokens))
-                if sched.table_version != table_synced:
-                    cache = dict(cache, block_table=jnp.asarray(
-                        sched.block_tables))
-                    table_synced = sched.table_version
+                    for t in range(self.chunk):
+                        tk = int(ys["token"][t, slot])
+                        req.tokens.append(tk)
+                        for name in ("H", "SE", "MI", "p_max"):
+                            getattr(req, name).append(float(ys[name][t, slot]))
+                        req.epistemic_flags += int(ys["epistemic"][t, slot])
+                        req.aleatoric_flags += int(ys["aleatoric"][t, slot])
+                        done_eos = self.eos_id is not None and tk == self.eos_id
+                        if done_eos or len(req.tokens) >= req.max_new_tokens:
+                            req.t_finish = time.perf_counter()
+                            req.finish_reason = "eos" if done_eos else "length"
+                            sched.evict(slot)
+                            active = active.at[slot].set(False)
+                            break
 
-            sched_trace.append(sched.pool_stats())
-            t0 = time.perf_counter()
-            tok, cache, flags, ys = self._scan(
-                self.params, tok, cache, jnp.asarray(step0, jnp.int32),
-                active, flags)
-            ys = jax.device_get(ys)            # the chunk's single sync
-            decode_s += time.perf_counter() - t0
-            step0 += self.chunk
-
-            for slot, req in sched.active():
-                for t in range(self.chunk):
-                    tk = int(ys["token"][t, slot])
-                    req.tokens.append(tk)
-                    for name in ("H", "SE", "MI", "p_max"):
-                        getattr(req, name).append(float(ys[name][t, slot]))
-                    req.epistemic_flags += int(ys["epistemic"][t, slot])
-                    req.aleatoric_flags += int(ys["aleatoric"][t, slot])
-                    done_eos = self.eos_id is not None and tk == self.eos_id
-                    if done_eos or len(req.tokens) >= req.max_new_tokens:
-                        req.t_finish = time.perf_counter()
-                        req.finish_reason = "eos" if done_eos else "length"
-                        sched.evict(slot)
-                        active = active.at[slot].set(False)
-                        break
+        except BaseException:
+            # eviction / exception / early-exit path: slots mid-decode
+            # still hold blocks — release them so the pool balances even
+            # when the run dies (evict also settles any pending CoW ref
+            # and donates prompt blocks to the prefix tree, exactly like
+            # a clean eviction would have)
+            for slot, _ in list(sched.active()):
+                sched.evict(slot)
+            raise
+        finally:
+            # leak check on EVERY exit path, clean drain or not: each
+            # block is either free or held by the prefix cache (cached
+            # refcounts included) and no reservation is outstanding
+            # (tests/test_paged_attention.py::TestEngineRobustness::
+            # test_mid_run_exception_releases_blocks)
+            if alloc is not None:
+                cached_end = pcache.cached_blocks() if pcache else 0
+                if alloc._reserved or alloc.in_use != cached_end:
+                    raise RuntimeError(
+                        f"block leak after drain: {alloc.in_use} in use "
+                        f"vs {cached_end} cached, {alloc._reserved} "
+                        "reserved")
 
         total_s = time.perf_counter() - t_start
         gen_tokens = sum(len(r.tokens) for r in requests)
-        # leak check: after the drain every block is either free or held
-        # by the prefix cache (cached refcounts included), and no
-        # reservation is outstanding
-        if alloc is not None:
-            cached_end = pcache.cached_blocks() if pcache else 0
-            if alloc._reserved or alloc.in_use != cached_end:
-                raise RuntimeError(
-                    f"block leak after drain: {alloc.in_use} in use vs "
-                    f"{cached_end} cached, {alloc._reserved} reserved")
         # KV residency accounting: dense permanently owns num_slots
         # strips of max_len; paged owns only the blocks actually mapped
         # (peak over the run), which is what mixed-length traffic saves
@@ -745,6 +836,24 @@ class ServeEngine:
                 "bytes_in_use_peak": kv_alloc_bytes,
                 "bytes_dense_equiv": kv_alloc_bytes,
             }
+        # block-sparse decode attention accounting: KV bytes the selected
+        # read path pulls from HBM per decode step vs the full logical
+        # span (what gather materializes regardless of residency)
+        steps_run = chunks_run * self.chunk
+        if paged:
+            read_blocks = attn_blocks_read if self.decode_attn == "kernel" \
+                else attn_blocks_span
+            decode_attn_stats = {
+                "mode": self.decode_attn,
+                "kv_bytes_read_per_step": read_blocks * block_bytes
+                / max(steps_run, 1),
+                "kv_bytes_span_per_step": attn_blocks_span * block_bytes
+                / max(steps_run, 1),
+                "kv_blocks_read": read_blocks,
+                "kv_blocks_span": attn_blocks_span,
+            }
+        else:
+            decode_attn_stats = {"mode": "gather"}
         lat = np.array([r.latency_s for r in requests]) if requests \
             else np.zeros((1,))
         epi = sum(r.epistemic_flags for r in requests)
@@ -763,8 +872,16 @@ class ServeEngine:
             "decode_tok_per_s": gen_tokens / max(decode_s, 1e-9),
             "e2e_tok_per_s": gen_tokens / max(total_s, 1e-9),
             "latency_p50_s": float(np.percentile(lat, 50)),
-            "latency_p99_s": float(np.percentile(lat, 99)),
+            # nearest-rank (no interpolation): at small N a linear-
+            # interpolated p99 fabricates a tail latency no request
+            # experienced; "higher" reports a latency that actually
+            # happened (= max below 100 requests)
+            "latency_p99_s": float(np.percentile(lat, 99,
+                                                 method="higher")),
+            "latency_max_s": float(lat.max()),
             "kv": kv_stats,
+            # block-sparse decode kernel vs gather HBM traffic
+            "decode_attn": decode_attn_stats,
             # radix prefix cache over the paged pool: zero-compute hit
             # spans, CoW divergence copies, LRU pressure evictions
             "prefix_cache": {
@@ -780,8 +897,12 @@ class ServeEngine:
                 "blocks_cached_end": (pcache.cached_blocks()
                                       if pcache else 0),
             },
-            # per-chunk scheduler snapshot (queue depth + pool occupancy)
+            # scheduler snapshot (queue depth + pool occupancy) every
+            # trace_every chunks — downsampled so long runs don't grow
+            # host memory linearly in chunks decoded
             "sched_trace": sched_trace,
+            "sched_trace_every": self.trace_every,
+            "chunks_run": chunks_run,
             "epistemic_flags": int(epi),
             "aleatoric_flags": int(alea),
             "flags_per_1k_tokens": {
@@ -870,7 +991,8 @@ def serve(args) -> dict:
         mi_threshold=args.mi_threshold, se_threshold=args.se_threshold,
         eos_id=args.eos_id, kv_layout=args.kv_layout,
         kv_block=args.kv_block, kv_blocks=args.kv_blocks,
-        prefix_cache=args.prefix_cache == "on")
+        prefix_cache=args.prefix_cache == "on",
+        decode_attn=args.decode_attn, trace_every=args.trace_every)
     result = engine.run(make_requests(args, cfg))
 
     # entropy HBM traffic of the head's MC draws per decoded token: the
@@ -918,6 +1040,17 @@ def main():
     ap.add_argument("--kv-blocks", type=int, default=None,
                     help="pool size in blocks (default: full dense "
                          "capacity, slots * ceil(max_len / kv_block))")
+    ap.add_argument("--decode-attn", choices=("kernel", "gather"),
+                    default="gather",
+                    help="paged decode attention read path: 'kernel' "
+                         "runs the block-sparse Pallas kernel straight "
+                         "over the block pool (HBM reads scale with "
+                         "tokens cached); 'gather' materializes the full "
+                         "logical span, the bit-exact reference")
+    ap.add_argument("--trace-every", type=int, default=1,
+                    help="record the scheduler/pool snapshot every N "
+                         "chunks (1 = every chunk, the CI default; "
+                         "raise it on long runs to bound host memory)")
     ap.add_argument("--prefix-cache", choices=("on", "off"),
                     default="off",
                     help="'on': radix prefix cache over the paged pool — "
@@ -938,7 +1071,8 @@ def main():
     print(f"decode {r['decode_tok_per_s']:.1f} tok/s "
           f"(e2e {r['e2e_tok_per_s']:.1f})  "
           f"latency p50 {r['latency_p50_s']:.2f}s "
-          f"p99 {r['latency_p99_s']:.2f}s")
+          f"p99 {r['latency_p99_s']:.2f}s "
+          f"max {r['latency_max_s']:.2f}s")
     print(f"epistemic flags {r['epistemic_flags']}  "
           f"aleatoric flags {r['aleatoric_flags']}  "
           f"(per 1k tokens: {r['flags_per_1k_tokens']['epistemic']:.1f} / "
@@ -952,6 +1086,11 @@ def main():
               f"peak ({kv['block_tokens']} tokens each) — "
               f"{kv['bytes_in_use_peak'] / 1e6:.2f} MB in use vs "
               f"{kv['bytes_dense_equiv'] / 1e6:.2f} MB dense strips")
+        da = r["decode_attn"]
+        print(f"decode attn: {da['mode']} — "
+              f"{da['kv_bytes_read_per_step'] / 1e3:.1f} KB KV read/step "
+              f"vs {da['kv_bytes_span_per_step'] / 1e3:.1f} KB full "
+              f"logical span")
     else:
         print(f"kv: dense strips, {kv['bytes_in_use_peak'] / 1e6:.2f} MB "
               f"resident for the whole run")

@@ -177,7 +177,12 @@ def build_scan_decode(cfg: ArchConfig, entropy=None, chunk: int = 8,
     indirection rides through the scan unchanged in the carry — every
     decode step inside the chunk reads/writes the block pool through the
     same table, and the host refreshes the table between chunks as the
-    scheduler grants blocks.  The scan itself is layout-agnostic.
+    scheduler grants blocks.  The scan itself is layout-agnostic, and
+    that includes the read path ``cfg.decode_attn`` selects: the
+    block-sparse decode kernel (``--decode-attn kernel``) consumes the
+    same carried table and pool leaves per step, so it needs no carry
+    change — only the per-step HBM traffic differs (mapped blocks vs
+    the full logical span; see kernels/paged_attention.py).
     """
     base = _decode_base_key(entropy)
 

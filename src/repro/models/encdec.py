@@ -192,6 +192,7 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     x = constrain(x, "batch", None, None)
     cache_len = cache["len"]
     block_table = cache.get("block_table")     # paged layout marker
+    # (read path per cfg.decode_attn: gather or block-sparse kernel)
     pos = jnp.reshape(cache_len, (-1, 1))
 
     def scan_step(x, bpkv):

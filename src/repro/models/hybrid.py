@@ -171,6 +171,7 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     sp = params["shared"]
     cache_len = cache["len"]
     block_table = cache.get("block_table")     # paged layout marker
+    # (read path per cfg.decode_attn: gather or block-sparse kernel)
     A = n_attn_apps(cfg)
     new_k, new_v, new_h, new_c = [], [], [], []
     for a in range(A):

@@ -176,11 +176,22 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     q: (B, 1, H, D); cache_len: () or (B,) number of valid cache slots.
     GQA via grouped einsum — NOT jnp.repeat, which would materialize the
     KV cache rep x (H/Hkv-fold HBM read amplification at decode).
+
+    MHA (rep == 1) pads the replica axis to two rows (one zero row,
+    discarded after): XLA lowers a 1-row contraction through a
+    matrix-vector emitter whose f32 association differs from the >= 2
+    row gemm, and the block-sparse decode kernel — which reduces per
+    (slot, kv-head) tile and is bit-exact against this function — can
+    only reproduce the gemm form.  Padding keeps BOTH paths on one
+    canonical association for every head layout; rep >= 2 bits are
+    untouched (tests/test_paged_attention.py).
     """
     B, S, Hkv, D = k_cache.shape
     H = q.shape[2]
     rep = H // Hkv
     qg = q.reshape(B, 1, Hkv, rep, D)
+    if rep == 1:
+        qg = jnp.concatenate([qg, jnp.zeros_like(qg)], axis=3)
     s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k_cache,
                    preferred_element_type=jnp.float32) / jnp.sqrt(
                        jnp.float32(D))
@@ -190,6 +201,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v_cache,
                      preferred_element_type=jnp.float32)
+    if rep == 1:
+        out = out[:, :, :, :1]
     return out.reshape(B, 1, H, D).astype(q.dtype)
 
 
@@ -257,12 +270,37 @@ def paged_gather(pool: jax.Array, block_table: jax.Array) -> jax.Array:
     — the dense logical view attention reads.  The gather is
     block-granular (one index per block, not per token: logical position
     j lives at (table[j // BS], j % BS), so whole blocks move
-    contiguously).  Unmapped entries gather block 0 (finite garbage);
-    callers mask by ``cache_len`` exactly as on the dense path, so those
-    positions never reach the softmax.
+    contiguously).  Unmapped entries gather block 0 — which may be a
+    prefix-cache-OWNED block holding another request's tokens — so
+    callers must mask by ``mapped_span``, not raw ``cache_len``: a
+    slot whose depth outruns its mapped prefix (an evicted slot's junk
+    steps) would otherwise feed cached bytes into its softmax
+    (tests/test_paged_attention.py::TestUnmappedMasking).
     """
     g = pool[jnp.maximum(block_table, 0)]          # (B, MB, BS, ...)
     return g.reshape(g.shape[0], -1, *pool.shape[2:])
+
+
+def mapped_span(block_table: jax.Array, block_size: int,
+                cache_len: jax.Array) -> jax.Array:
+    """Readable depth per slot: ``cache_len`` clamped to the tokens the
+    table's leading mapped blocks actually span.
+
+    block_table: (B, MB); cache_len: () or (B,).  Mapped entries always
+    form a PREFIX of a row (admission and grants fill left to right,
+    CoW swaps in place, eviction wipes the whole row), so the clamp
+    ``min(cache_len, leading_mapped * block_size)`` masks exactly the
+    positions whose logical block is unmapped.  For live slots the
+    grant covers the depth and this is the identity; it only bites on
+    junk slots (all ``-1`` after eviction, depth still advancing) whose
+    ``paged_gather`` fallback would otherwise read physical block 0 —
+    potentially prefix-cache-owned bytes — below ``cache_len``.
+    """
+    mapped = (block_table >= 0).astype(jnp.int32)
+    leading = jnp.cumprod(mapped, axis=1).sum(axis=1)
+    return jnp.minimum(jnp.broadcast_to(jnp.reshape(cache_len, (-1,)),
+                                        (block_table.shape[0],)),
+                       leading * block_size)
 
 
 # --------------------------------------------------------------------------
@@ -303,7 +341,15 @@ def apply_attention(p, cfg: ArchConfig, x: jax.Array, *,
     ``paged_scatter`` / ``paged_gather``.  Bit-exact against the dense
     layout when the logical span MB*BS equals the dense max_len: masked
     positions differ only in garbage that ``decode_attention`` replaces
-    with -inf before the softmax either way."""
+    with -inf before the softmax either way (positions past the mapped
+    prefix included — ``mapped_span`` clamps the readable depth).
+
+    ``cfg.decode_attn`` picks the paged decode read path:
+    ``'gather'`` (the bit-exact reference) materializes the full
+    logical strip; ``'kernel'`` runs the block-sparse Pallas kernel
+    (``kernels/paged_attention.py``) that reads only mapped, in-depth
+    blocks straight from the pool — same bits, HBM reads scaling with
+    ``cache_len`` (tests/test_paged_attention.py)."""
     B, S, d = x.shape
     H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = _mm(x, p["wq"])
@@ -338,9 +384,24 @@ def apply_attention(p, cfg: ArchConfig, x: jax.Array, *,
             if block_table is not None:
                 kc = paged_scatter(kc, block_table, lens, k)
                 vc = paged_scatter(vc, block_table, lens, v)
-                out = decode_attention(q, paged_gather(kc, block_table),
-                                       paged_gather(vc, block_table),
-                                       lens + S)
+                if cfg.decode_attn == "kernel" and S == 1:
+                    # block-sparse Pallas kernel: reads only mapped,
+                    # in-depth blocks from the pool — HBM traffic
+                    # scales with cache_len, not the MB*BS span; the
+                    # gather path below stays the bit-exact reference
+                    from repro.kernels.ops import paged_decode_attention
+                    out = paged_decode_attention(q, kc, vc, block_table,
+                                                 lens + S)
+                else:
+                    # readable depth clamped to the mapped prefix so an
+                    # unmapped entry's block-0 gather fallback never
+                    # reaches the softmax (block 0 may be owned by the
+                    # prefix cache)
+                    eff = mapped_span(block_table, kc.shape[1], lens + S)
+                    out = decode_attention(q,
+                                           paged_gather(kc, block_table),
+                                           paged_gather(vc, block_table),
+                                           eff)
             else:
                 rows = jnp.arange(B)[:, None]
                 idx = lens[:, None] + jnp.arange(S)[None, :]

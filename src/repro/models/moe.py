@@ -306,6 +306,7 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     x = L.apply_embed(params["embed"], token[:, None])
     cache_len = cache["len"]
     block_table = cache.get("block_table")     # paged layout marker
+    # (read path per cfg.decode_attn: gather or block-sparse kernel)
 
     def scan_step(x, bpkv):
         bp, kv = bpkv

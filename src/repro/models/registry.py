@@ -16,6 +16,12 @@ leaves (``PAGED_KV_LEAVES``) instead live in a global pool of fixed-size
 blocks addressed through a per-slot ``block_table`` (-1 = unmapped);
 ``layout='dense'`` remains the bit-exact reference layout.
 
+Paged decode reads are selected by ``cfg.decode_attn``, which every
+family threads to ``layers.apply_attention`` untouched: ``'gather'``
+(reference) materializes the logical span, ``'kernel'`` runs the
+block-sparse Pallas kernel over the pool (kernels/paged_attention.py)
+— no per-family code, the dispatch lives in the shared attention.
+
 ``batch_spec``/``cache_spec``/modality stubs are centralized here so the
 launcher's ``input_specs`` stays arch-agnostic.
 """
@@ -30,6 +36,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.models import encdec, hybrid, moe, ssm, transformer
 from repro.models.layers import (copy_block as _copy_block_1l,
+                                 mapped_span,  # noqa: F401 (re-export)
                                  paged_gather,  # noqa: F401 (re-export)
                                  paged_scatter,
                                  paged_table_width)

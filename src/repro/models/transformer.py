@@ -262,7 +262,8 @@ def prefill_suffix(params, cfg: ArchConfig, tokens: jax.Array,
 
 def _decode_block(bp, cfg, x, kv, cache_len, block_table=None):
     """One layer of single-token decode; kv: dict k/v (B, S, Hkv, hd)
-    strips, or (NB, BS, Hkv, hd) block pools when ``block_table`` is set.
+    strips, or (NB, BS, Hkv, hd) block pools when ``block_table`` is set
+    (read via gather or the block-sparse kernel per ``cfg.decode_attn``).
 
     cache_len () or (B,): per-slot depths give per-slot RoPE positions.
     """

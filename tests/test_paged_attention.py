@@ -1,0 +1,326 @@
+"""Block-sparse paged decode attention kernel + serving-stats fixes.
+
+The acceptance contract of ISSUE 5:
+
+  * the block-sparse kernel (``--decode-attn kernel``) is BIT-EXACT
+    against the gather reference (``--decode-attn gather``) in
+    operand/interpret mode — at the raw-op level over shuffled
+    staggered tables, and through the engine on mixed-length traffic
+    with ``--prefix-cache on`` including post-CoW tables;
+  * per-step KV reads scale with the tokens actually cached, not the
+    ``MB*BS`` logical span;
+  * ``paged_gather``'s unmapped-entry fallback (physical block 0 —
+    potentially a prefix-cache-OWNED block) never leaks cached bytes
+    into a softmax: masked positions are ``-inf`` before the reduction
+    on BOTH read paths;
+  * seeded decode is chunk-size invariant (``--chunk 4`` == ``16``);
+  * a mid-run exception releases every slot's blocks — the leak check
+    runs in a ``finally``, not only after a clean drain;
+  * ``sched_trace`` is downsampled by ``--trace-every``, and the
+    latency tail stats are nearest-rank (a percentile some request
+    actually experienced), with ``latency_max_s`` alongside.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, reduced
+from repro.kernels import ops
+from repro.launch.serve import Request, ServeEngine
+from repro.models import layers as L
+from repro.models import registry as M
+
+
+def _req(rid, prompt, n):
+    return Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                   max_new_tokens=n)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(reduced(get_config("qwen2_1_5b")),
+                              head_entropy="operand")
+    key = jax.random.key(0)
+    params = M.init_params(key, cfg)
+    prompts = np.asarray(
+        jax.random.randint(key, (8, 12), 0, cfg.vocab_size), np.int32)
+    return cfg, params, prompts
+
+
+def _pools(key, NB=12, BS=8, Hkv=2, D=32, H=4, B=3):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, 1, H, D), jnp.float32)
+    kp = jax.random.normal(k2, (NB, BS, Hkv, D), jnp.float32)
+    vp = jax.random.normal(k3, (NB, BS, Hkv, D), jnp.float32)
+    return q, kp, vp
+
+
+# ---------------------------------------------------------------------------
+# raw-op parity: kernel vs gather over shuffled, staggered tables
+# ---------------------------------------------------------------------------
+
+class TestKernelParity:
+    def test_kernel_bitwise_vs_gather_shuffled_tables(self):
+        """Staggered depths, shuffled physical placement, a granted-
+        ahead tail block and a junk (evicted) slot: the kernel's output
+        must equal the gather+mask reference bit for bit on every slot
+        whose span is readable."""
+        q, kp, vp = _pools(jax.random.key(1))
+        BS, MB = 8, 5
+        bt = np.full((3, MB), -1, np.int32)
+        bt[0, :4] = [5, 1, 9, 3]          # 27 tokens over 4 blocks
+        bt[1, :3] = [0, 7, 2]             # 18 tokens, granted ahead
+        cl = np.array([27, 18, 6], np.int32)
+        bt[2, :] = -1                     # evicted slot, depth still > 0
+        bt, cl = jnp.asarray(bt), jnp.asarray(cl)
+        ref = ops.paged_decode_attention(q, kp, vp, bt, cl, impl="ref")
+        got = ops.paged_decode_attention(q, kp, vp, bt, cl)
+        np.testing.assert_array_equal(np.asarray(ref)[:2],
+                                      np.asarray(got)[:2])
+        # the junk slot is fully masked on both paths: NaN, never a
+        # finite readout of some other request's block
+        assert np.isnan(np.asarray(ref)[2]).all()
+        assert np.isnan(np.asarray(got)[2]).all()
+
+    def test_kernel_invariant_to_physical_placement(self):
+        """Post-CoW tables differ only in physical ids: relocating a
+        block (same logical content) must not change a single bit."""
+        q, kp, vp = _pools(jax.random.key(2))
+        BS, MB = 8, 5
+        bt1 = jnp.asarray([[5, 1, 9, -1, -1]] * 3, jnp.int32)
+        # copy block 9 into free block 4 and swap the table entry — the
+        # device-side CoW sequence the engine runs at divergence
+        kp2 = L.copy_block(kp, 9, 4)
+        vp2 = L.copy_block(vp, 9, 4)
+        bt2 = jnp.asarray([[5, 1, 4, -1, -1]] * 3, jnp.int32)
+        cl = jnp.asarray([21, 17, 24], jnp.int32)
+        a = ops.paged_decode_attention(q, kp, vp, bt1, cl)
+        b = ops.paged_decode_attention(q, kp2, vp2, bt2, cl)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_engine_kernel_matches_gather_staggered(self, setup):
+        """Mixed prompt/gen lengths through 2 slots: every request's
+        token and uncertainty streams must match bit for bit between
+        the two read paths, and the kernel's accounted reads must
+        undercut the logical span."""
+        cfg, params, prompts = setup
+        gens = (8, 4, 8, 6, 8, 5)
+
+        def reqs():
+            return [_req(i, prompts[i][:(12 if i % 2 == 0 else 8)],
+                         gens[i]) for i in range(6)]
+
+        res = {}
+        for mode in ("gather", "kernel"):
+            eng = ServeEngine(params, cfg, num_slots=2, max_len=32,
+                              chunk=4, kv_layout="paged", kv_block=8,
+                              decode_attn=mode)
+            res[mode] = eng.run(reqs())
+        for a, b in zip(res["gather"]["requests"],
+                        res["kernel"]["requests"]):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            for name in ("MI", "H", "SE"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(a, name), np.float32),
+                    np.asarray(getattr(b, name), np.float32))
+        da = res["kernel"]["decode_attn"]
+        assert da["mode"] == "kernel"
+        assert da["kv_blocks_read"] < da["kv_blocks_span"]
+        assert da["kv_bytes_read_per_step"] < da["kv_bytes_span_per_step"]
+        dg = res["gather"]["decode_attn"]
+        assert dg["kv_blocks_read"] == dg["kv_blocks_span"]
+
+    @pytest.mark.parametrize("arch", ["deepseek_moe_16b", "zamba2_7b",
+                                      "seamless_m4t_medium"])
+    def test_engine_kernel_parity_other_attention_families(self, arch):
+        """moe / hybrid / encdec thread cfg.decode_attn through the same
+        shared attention — and their reduced configs are MHA (rep 1),
+        the head layout whose 1-row contraction XLA lowers through a
+        different-association emitter; decode_attention pads the
+        replica axis to two rows on both paths so the streams still
+        match bit for bit."""
+        cfg = dataclasses.replace(reduced(get_config(arch)),
+                                  head_entropy="operand")
+        assert cfg.num_heads // cfg.num_kv_heads == 1    # MHA regression
+        params = M.init_params(jax.random.key(0), cfg)
+        prompts = np.asarray(
+            jax.random.randint(jax.random.key(1), (4, 10), 0,
+                               cfg.vocab_size), np.int32)
+
+        def reqs():
+            return [_req(i, prompts[i][:(10 if i % 2 == 0 else 7)],
+                         (6, 4)[i % 2]) for i in range(4)]
+
+        res = {}
+        for mode in ("gather", "kernel"):
+            eng = ServeEngine(params, cfg, num_slots=2, max_len=24,
+                              chunk=4, kv_layout="paged", kv_block=8,
+                              decode_attn=mode)
+            res[mode] = eng.run(reqs())
+        for a, b in zip(res["gather"]["requests"],
+                        res["kernel"]["requests"]):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            np.testing.assert_array_equal(np.asarray(a.MI, np.float32),
+                                          np.asarray(b.MI, np.float32))
+
+    def test_engine_kernel_matches_gather_prefix_cache_cow(self, setup):
+        """Shared-system-prompt traffic with --prefix-cache on: hits map
+        read-only blocks, partial tails copy-on-write — the kernel must
+        reproduce the gather streams bit for bit through all of it."""
+        cfg, params, _ = setup
+        sysp = np.asarray(jax.random.randint(jax.random.key(2), (20,), 0,
+                                             cfg.vocab_size), np.int32)
+        uniq = np.asarray(jax.random.randint(jax.random.key(3), (8, 6), 0,
+                                             cfg.vocab_size), np.int32)
+
+        def reqs():
+            return [_req(i, np.concatenate([sysp, uniq[i]]), 8)
+                    for i in range(8)]
+
+        res = {}
+        for mode in ("gather", "kernel"):
+            eng = ServeEngine(params, cfg, num_slots=2, max_len=40,
+                              chunk=4, kv_layout="paged", kv_block=8,
+                              kv_blocks=20, prefix_cache=True,
+                              decode_attn=mode)
+            res[mode] = eng.run(reqs())
+        pc = res["kernel"]["prefix_cache"]
+        assert pc["hits"] > 0 and pc["cow_copies"] > 0  # CoW exercised
+        for a, b in zip(res["gather"]["requests"],
+                        res["kernel"]["requests"]):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            np.testing.assert_array_equal(np.asarray(a.MI, np.float32),
+                                          np.asarray(b.MI, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# unmapped-entry fallback: masked means masked, on both read paths
+# ---------------------------------------------------------------------------
+
+class TestUnmappedMasking:
+    def test_mapped_span_clamps_depth_to_leading_mapped_blocks(self):
+        bt = jnp.asarray([[2, 5, -1, 7],      # mapped prefix = 2 blocks
+                          [-1, -1, -1, -1],   # junk row
+                          [1, 3, 6, -1]], jnp.int32)
+        eff = L.mapped_span(bt, 4, jnp.asarray([14, 9, 10]))
+        np.testing.assert_array_equal(np.asarray(eff), [8, 0, 10])
+
+    def test_unmapped_fallback_never_leaks_block0(self):
+        """Physical block 0 may be OWNED by the prefix cache.  A slot
+        whose depth outruns its mapped prefix (evicted: all -1) gathers
+        block 0 as a fallback — poisoning block 0 must not move a
+        single bit of any live slot, and the junk slot must come out
+        fully masked (NaN), on BOTH read paths."""
+        q, kp, vp = _pools(jax.random.key(3))
+        bt = np.full((3, 5), -1, np.int32)
+        bt[0, :4] = [5, 1, 9, 3]
+        bt[1, :3] = [7, 2, 6]             # no block 0 anywhere mapped
+        bt = jnp.asarray(bt)
+        cl = jnp.asarray([27, 18, 6], jnp.int32)  # slot 2: junk depth
+        kp_bad = kp.at[0].set(1e4)        # "cached bytes" of another user
+        vp_bad = vp.at[0].set(-1e4)
+        for impl in ("ref", "auto"):
+            clean = ops.paged_decode_attention(q, kp, vp, bt, cl,
+                                               impl=impl)
+            poisoned = ops.paged_decode_attention(q, kp_bad, vp_bad, bt,
+                                                  cl, impl=impl)
+            np.testing.assert_array_equal(np.asarray(clean)[:2],
+                                          np.asarray(poisoned)[:2])
+            assert np.isnan(np.asarray(poisoned)[2]).all()
+
+
+# ---------------------------------------------------------------------------
+# chunk-size invariance of seeded decode
+# ---------------------------------------------------------------------------
+
+class TestChunkInvariance:
+    @pytest.mark.parametrize("mode", ["gather", "kernel"])
+    def test_chunk_4_vs_16_same_tokens(self, setup, mode):
+        """The per-step key folds the GLOBAL step index, so requests
+        admitted together decode the same stream no matter how many
+        steps share a device call; junk steps a finished request runs
+        to its chunk boundary land past the mapped span and change
+        nothing."""
+        cfg, params, prompts = setup
+
+        def reqs():
+            return [_req(i, prompts[i], 8) for i in range(4)]
+
+        streams = []
+        for chunk in (4, 16):
+            eng = ServeEngine(params, cfg, num_slots=4, max_len=24,
+                              chunk=chunk, kv_layout="paged", kv_block=8,
+                              decode_attn=mode)
+            streams.append([r.tokens for r in eng.run(reqs())["requests"]])
+        assert streams[0] == streams[1]
+
+
+# ---------------------------------------------------------------------------
+# engine robustness + stats honesty
+# ---------------------------------------------------------------------------
+
+class TestEngineRobustness:
+    def test_kernel_mode_requires_paged_layout(self, setup):
+        """An explicit kernel request on the dense layout is a config
+        contradiction, not a silent downgrade (the family fallback —
+        e.g. ssm — still degrades quietly, like its dense fallback)."""
+        cfg, params, _ = setup
+        with pytest.raises(ValueError, match="paged"):
+            ServeEngine(params, cfg, num_slots=2, max_len=32, chunk=4,
+                        kv_layout="dense", decode_attn="kernel")
+
+    def test_mid_run_exception_releases_blocks(self, setup):
+        """A crash mid-decode must not strand blocks: the except path
+        evicts live slots and the finally leak check still balances —
+        in_use equals exactly the prefix cache's refcounted holdings."""
+        cfg, params, prompts = setup
+        eng = ServeEngine(params, cfg, num_slots=2, max_len=32, chunk=4,
+                          kv_layout="paged", kv_block=8,
+                          prefix_cache=True, decode_attn="kernel")
+        orig, calls = eng._scan, []
+
+        def boom(*args):
+            calls.append(1)
+            if len(calls) == 2:
+                raise RuntimeError("injected failure")
+            return orig(*args)
+
+        eng._scan = boom
+        with pytest.raises(RuntimeError, match="injected failure"):
+            eng.run([_req(i, prompts[i], 8) for i in range(6)])
+        alloc, pcache = eng._last_alloc, eng._last_pcache
+        assert alloc._reserved == 0
+        assert alloc.in_use == pcache.cached_blocks()
+        assert alloc.in_use > 0           # evictions donated to the tree
+
+    def test_sched_trace_downsampled_by_trace_every(self, setup):
+        cfg, params, prompts = setup
+
+        def run(trace_every):
+            eng = ServeEngine(params, cfg, num_slots=2, max_len=32,
+                              chunk=4, kv_layout="paged", kv_block=8,
+                              trace_every=trace_every)
+            return eng.run([_req(i, prompts[i], 8) for i in range(6)])
+
+        full = run(1)
+        sparse = run(3)
+        assert len(full["sched_trace"]) == full["chunks_run"]
+        assert len(sparse["sched_trace"]) == -(-sparse["chunks_run"] // 3)
+        assert sparse["sched_trace_every"] == 3
+
+    def test_latency_tail_is_nearest_rank_plus_max(self, setup):
+        """At 6 requests a linear-interpolated p99 is a fabricated
+        number between the two slowest requests; nearest-rank reports a
+        latency someone actually experienced (= the max below 100
+        requests), and the max rides along explicitly."""
+        cfg, params, prompts = setup
+        eng = ServeEngine(params, cfg, num_slots=2, max_len=32, chunk=4)
+        res = eng.run([_req(i, prompts[i], 8) for i in range(6)])
+        lats = [r.latency_s for r in res["requests"]]
+        assert res["latency_max_s"] == max(lats)
+        assert res["latency_p99_s"] in lats
+        assert res["latency_p99_s"] == max(lats)
