@@ -26,11 +26,20 @@ the Monte-Carlo fanout the paper's photonic sampling makes cheap; the
 digital side amortizes the prefill).  Each row reports prefill tokens
 saved, hit rate, CoW copies, and decode tok/s warm vs cold.
 
+A LONG-PROMPT workload (``long_prompt`` row) staggers one outlier
+request with a prompt ~10x the steady traffic into a stream of short
+decoders: under ``--prefill batch`` its monolithic prefill stalls every
+running stream for the whole prompt; under ``--prefill chunked`` the
+prefill interleaves with decode in ``--prefill-chunk`` slices, bounding
+the worst decode-token inter-arrival gap near one chunk's compute.  The
+outlier's prompt + gen also exceeds the admission-time table span, so
+finishing it exercises on-demand block-table growth.
+
 Writes ``BENCH_serve.json`` (next to ``BENCH_kernels.json``, the CI
-perf-trajectory artifacts).  Every workload row embeds the ``git_sha``
-and a ``config_hash`` of the engine configuration that produced it, so
-rows from different configs stay distinguishable when diffing the bench
-trajectory across commits.  Fields:
+perf-trajectory artifacts).  The file is stamped ONCE, at the top
+level, with the ``git_sha`` and a ``config_hash`` over the arch config
+plus every workload's knobs (the knobs themselves live in each row, so
+rows stay distinguishable without per-row re-stamping).  Fields:
 
   shapes                 {slots, chunk, prompt_len, gen_len, num_requests}
   backend                jax backend the numbers were taken on
@@ -66,7 +75,14 @@ trajectory across commits.  Fields:
     cow_copies, warm_tok_per_s / cold_tok_per_s
   sample_fanout          S-identical-prompt row: same fields, plus
     samples (the MC fanout width)
-  git_sha, config_hash   per row + top level (bench trajectory identity)
+  long_prompt            chunked-vs-batch prefill interleaving row:
+    long_len / short_len / gen_len / prefill_chunk of the workload,
+    batch_interarrival_p99_s / chunked_interarrival_p99_s   worst gap
+        between decode-serving scans under each prefill mode,
+    interarrival_improvement_x   batch p99 / chunked p99 (acceptance:
+        >= 2x at parity decode tok/s),
+    batch_tok_per_s / chunked_tok_per_s, table_growths, prefill_chunks
+  git_sha, config_hash   top level ONLY — stamped once per file
 """
 
 from __future__ import annotations
@@ -182,7 +198,6 @@ def run(quick: bool = False) -> dict:
     da_g, da_k = mixed["paged"]["decode_attn"], mixed["kernel"]["decode_attn"]
 
     # --- prefix cache: shared-system-prompt + S-sample-fanout rows ---
-    sha = git_sha()
     shared_len, unique_len, pc_gen = 20, 6, 8     # divergence mid-block
     # 2 slots stagger the traffic: only the first two admissions run
     # before an eviction has seeded the radix tree, so 6 of 8 requests
@@ -224,11 +239,6 @@ def run(quick: bool = False) -> dict:
             "warm_tok_per_s": warm["decode_tok_per_s"],
             "warm_vs_cold_x": warm["decode_tok_per_s"]
             / max(cold["decode_tok_per_s"], 1e-9),
-            "git_sha": sha,
-            "config_hash": config_hash(cfg, workload=meta,
-                                       slots=pc_slots, chunk=chunk,
-                                       kv_block=pc_block,
-                                       max_len=pc_max_len),
         }
 
     def shared_prompt_requests():
@@ -249,12 +259,74 @@ def run(quick: bool = False) -> dict:
                         samples=n_pc,
                         prompt_len=shared_len + unique_len)
 
+    # --- long-prompt outlier: chunked vs batch prefill interleaving ---
+    # gen is sized so decode traffic outlives the outlier's chunk walk
+    # (gen/chunk scans > prompt/prefill_chunk chunks): once the last
+    # short finishes, chunk-only iterations emit no tokens and the
+    # whole tail would land in one giant inter-arrival gap
+    lp_short, lp_long, lp_gen, lp_block = 16, 384, 96, 8
+    lp_max_len = lp_short + lp_gen + chunk            # sized for SHORTS
+    lp_width = -(-lp_max_len // lp_block)             # admission span
+    lp_blocks = slots * lp_width + -(-(lp_long + lp_gen + chunk)
+                                     // lp_block)
+    lp_prompts = np.asarray(
+        jax.random.randint(jax.random.key(4), (8, lp_long), 0,
+                           cfg.vocab_size), np.int32)
+
+    def long_prompt_requests():
+        # the outlier arrives LAST: it admits while other slots are
+        # mid-decode, which is exactly when a monolithic prefill stalls
+        reqs = [Request(rid=i, prompt=lp_prompts[i, :lp_short],
+                        max_new_tokens=lp_gen) for i in range(7)]
+        reqs.append(Request(rid=7, prompt=lp_prompts[7],
+                            max_new_tokens=lp_gen))
+        return reqs
+
+    lp = {}
+    for mode in ("batch", "chunked"):
+        eng = ServeEngine(params, cfg, num_slots=slots,
+                          max_len=lp_max_len, chunk=chunk,
+                          kv_layout="paged", kv_block=lp_block,
+                          kv_blocks=lp_blocks, prefill_mode=mode,
+                          prefill_chunk=32)
+        eng.run(long_prompt_requests())       # warm: compiles + growths
+        lp[mode] = eng.run(long_prompt_requests())
+        assert lp[mode]["table_growths"] > 0  # the outlier outgrew the
+        #                                       admission-time span
+    long_prompt = {
+        "short_len": lp_short, "long_len": lp_long, "gen_len": lp_gen,
+        "kv_block": lp_block, "max_len": lp_max_len,
+        "num_requests": 8, "slots": slots, "prefill_chunk": 32,
+        "batch_interarrival_p99_s": lp["batch"][
+            "decode_interarrival_p99_s"],
+        "chunked_interarrival_p99_s": lp["chunked"][
+            "decode_interarrival_p99_s"],
+        "interarrival_improvement_x":
+            lp["batch"]["decode_interarrival_p99_s"]
+            / max(lp["chunked"]["decode_interarrival_p99_s"], 1e-9),
+        "batch_tok_per_s": lp["batch"]["decode_tok_per_s"],
+        "chunked_tok_per_s": lp["chunked"]["decode_tok_per_s"],
+        "table_growths": lp["chunked"]["table_growths"],
+        "prefill_chunks": lp["chunked"]["prefill_chunks"],
+        "prefill_compiles": lp["chunked"]["prefill_compiles"],
+    }
+
     return {
-        "git_sha": sha,
-        "config_hash": config_hash(cfg, slots=slots, chunk=chunk,
-                                   prompt_len=prompt_len,
-                                   gen_len=gen_len,
-                                   num_requests=num_requests),
+        "git_sha": git_sha(),
+        # ONE stamp for the whole file: the hash covers the arch config
+        # plus every workload's knobs (each row carries its own knobs)
+        "config_hash": config_hash(
+            cfg, slots=slots, chunk=chunk, prompt_len=prompt_len,
+            gen_len=gen_len, num_requests=num_requests,
+            kv_block=kv_block, max_len=mixed_max_len,
+            prompt_lens=prompt_lens, gen_lens=gen_lens,
+            pc=dict(slots=pc_slots, kv_block=pc_block,
+                    max_len=pc_max_len, shared_len=shared_len,
+                    unique_len=unique_len, fanout=n_pc),
+            long_prompt=dict(short_len=lp_short, long_len=lp_long,
+                             gen_len=lp_gen, kv_block=lp_block,
+                             max_len=lp_max_len, prefill_chunk=32)),
+        "long_prompt": long_prompt,
         "prefix_shared_prompt": prefix_shared,
         "sample_fanout": fanout,
         # block-sparse decode attention: HBM KV bytes one decode step
@@ -273,13 +345,6 @@ def run(quick: bool = False) -> dict:
             "kernel_tok_per_s": mixed["kernel"]["decode_tok_per_s"],
             "kernel_vs_gather_x": mixed["kernel"]["decode_tok_per_s"]
             / max(mixed["paged"]["decode_tok_per_s"], 1e-9),
-            "git_sha": sha,
-            "config_hash": config_hash(cfg, workload="decode_attn",
-                                       slots=slots, chunk=chunk,
-                                       kv_block=kv_block,
-                                       max_len=mixed_max_len,
-                                       prompt_lens=prompt_lens,
-                                       gen_lens=gen_lens),
         },
         "mixed": {
             "kv_block": kv_block,
@@ -296,13 +361,6 @@ def run(quick: bool = False) -> dict:
             / max(kv_d["bytes_in_use_peak"], 1),
             "blocks_peak": kv_p["blocks_peak"],
             "blocks_total": kv_p["blocks_total"],
-            "git_sha": sha,
-            "config_hash": config_hash(cfg, workload="mixed",
-                                       slots=slots, chunk=chunk,
-                                       kv_block=kv_block,
-                                       max_len=mixed_max_len,
-                                       prompt_lens=prompt_lens,
-                                       gen_lens=gen_lens),
         },
         "shapes": {"slots": slots, "chunk": chunk,
                    "prompt_len": prompt_len, "gen_len": gen_len,
@@ -372,7 +430,19 @@ def main(quick: bool = False, json_path: str = "BENCH_serve.json"):
         print(f"    warm {p['warm_tok_per_s']:.1f} tok/s vs "
               f"cold {p['cold_tok_per_s']:.1f} "
               f"({p['warm_vs_cold_x']:.2f}x decode)")
-    print(f"  rows stamped git {r['git_sha']}, "
+    lp = r["long_prompt"]
+    print(f"  long-prompt outlier ({lp['long_len']} tokens into "
+          f"{lp['short_len']}-token traffic, prefill chunk "
+          f"{lp['prefill_chunk']}):")
+    print(f"    decode inter-arrival p99: batch "
+          f"{lp['batch_interarrival_p99_s'] * 1e3:.1f}ms vs chunked "
+          f"{lp['chunked_interarrival_p99_s'] * 1e3:.1f}ms "
+          f"({lp['interarrival_improvement_x']:.1f}x better)")
+    print(f"    decode tok/s: batch {lp['batch_tok_per_s']:.1f} vs "
+          f"chunked {lp['chunked_tok_per_s']:.1f}; "
+          f"{lp['table_growths']} table growths, "
+          f"{lp['prefill_chunks']} prefill chunks")
+    print(f"  file stamped git {r['git_sha']}, "
           f"config {r['config_hash']}")
     if r["timings_indicative"]:
         print(f"  [timings on {r['backend']} are indicative; the ratio is "

@@ -16,15 +16,20 @@
                                       workload, a decode_attn row
                                       (block-sparse kernel vs gather:
                                       KV bytes read per decode step)
-                                      and two prefix-cache rows —
+                                      two prefix-cache rows —
                                       shared-system-prompt and
-                                      S-sample-fanout (emits
-                                      BENCH_serve.json: tok/s,
+                                      S-sample-fanout — and a
+                                      long_prompt row (chunked vs
+                                      batch prefill interleaving:
+                                      decode-token inter-arrival p99
+                                      with a prompt outlier, plus
+                                      on-demand block-table growth)
+                                      (emits BENCH_serve.json: tok/s,
                                       p50/p99/max request latency,
                                       flags/1k tokens, peak KV bytes
                                       paged vs dense, prefill tokens
                                       saved + hit rate + CoW copies,
-                                      each row stamped with git SHA +
+                                      stamped once with git SHA +
                                       config hash)
   roofline           deliverable (g)  three-term roofline per dry-run cell
 """

@@ -30,7 +30,8 @@ from repro.kernels.bayes_matmul import (
     bayes_matmul_fused_kernel, bayes_matmul_kernel, lrt_matmul_fused_kernel,
     lrt_matmul_kernel)
 from repro.kernels.flash_attention import flash_attention_kernel
-from repro.kernels.paged_attention import paged_decode_attention_kernel
+from repro.kernels.paged_attention import (paged_decode_attention_kernel,
+                                           paged_prefill_attention_kernel)
 from repro.kernels.photonic_conv import (
     photonic_conv_fused_kernel, photonic_conv_kernel)
 from repro.kernels.uncertainty_head import (
@@ -174,6 +175,32 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, cache_len,
     return paged_decode_attention_kernel(q, k_pool, v_pool, block_table,
                                          cache_len,
                                          interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("span", "kv_chunk", "impl"))
+def paged_prefill_attention(q, k_pool, v_pool, block_row, offset,
+                            span: int, kv_chunk: int = 1024,
+                            impl: Impl = "auto"):
+    """Multi-query block-sparse attention for one slot's prompt chunk.
+
+    q (1, S, H, D) at absolute positions ``offset + [0, S)``; k/v pools
+    (NB, BS, Hkv, D); ``block_row`` (1, NBLK) the slot's leading mapped
+    table entries covering ``span`` tokens.  Same ``impl`` policy as
+    :func:`paged_decode_attention` — 'auto' still runs the kernel
+    off-TPU (interpret), 'ref' routes to the gather composition
+    (``layers.paged_gather`` + causal ``layers.flash_attention`` with
+    ``q_offset``), which the kernel matches bitwise.
+    """
+    if impl == "ref":
+        from repro.models.layers import flash_attention, paged_gather
+        ks = paged_gather(k_pool, block_row)[:, :span]
+        vs = paged_gather(v_pool, block_row)[:, :span]
+        return flash_attention(q, ks, vs, causal=True, kv_chunk=kv_chunk,
+                               q_offset=offset)
+    return paged_prefill_attention_kernel(q, k_pool, v_pool, block_row,
+                                          offset, span=span,
+                                          kv_chunk=kv_chunk,
+                                          interpret=not _on_tpu())
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,13 @@
-"""Pallas TPU kernel: block-sparse paged decode attention.
+"""Pallas TPU kernels: block-sparse paged attention (decode + prefill).
+
+Two kernels share the paged-pool layout: the single-token DECODE kernel
+below, and the multi-query PREFILL kernel (``_paged_prefill_kernel``)
+that chunked prefill (PR 6) uses to attend a whole prompt chunk against
+one slot's mapped blocks — same query-span tiling idea, but its
+finalize replays ``layers.flash_attention``'s online per-kv-chunk
+recurrence instead of the decode reference's deferred softmax, because
+each kernel must be bit-exact against ITS OWN gather reference and the
+two references associate differently.
 
 Single-token decode attention that reads K/V **directly from the global
 block pool** through the per-slot block table — the bandwidth half of
@@ -175,6 +184,125 @@ def paged_decode_attention_kernel(q: jax.Array, k_pool: jax.Array,
         interpret=interpret,
     )(table, lens, qg, k_pool, v_pool)
     return out[:, :, :rep].reshape(B, 1, H, D).astype(q.dtype)
+
+
+def _paged_prefill_kernel(bt_ref, off_ref, q_ref, k_ref, v_ref, o_ref,
+                          s_scr, v_scr, *, NBLK: int, BS: int, D: int,
+                          S: int, kc: int, NK: int, span: int):
+    """One (kv-head h, logical block j) program of the multi-query
+    (chunked-prefill) kernel.
+
+    Scores for the whole q tile against block j stream into scratch;
+    the last step replays ``layers.flash_attention``'s per-``kc``-group
+    ONLINE softmax recurrence over the buffered span — group extents,
+    masking, correction factors and the final ``acc / max(l, 1e-20)``
+    all mirror the jnp reference op for op, which is what makes the
+    kernel bit-exact against the gather+flash composition (the decode
+    kernel's reference instead normalizes before the value contraction;
+    the two associate differently, hence two kernels).
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_scr[...] = jnp.full_like(s_scr[...], -jnp.inf)
+        v_scr[...] = jnp.zeros_like(v_scr[...])
+
+    off = off_ref[0]
+    QR = s_scr.shape[0]
+    q = q_ref[0].astype(jnp.float32)                       # (QR, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)                 # (BS, D)
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    kpos = j * BS + jax.lax.broadcasted_iota(jnp.int32, (QR, BS), 1)
+    qpos = off + jax.lax.broadcasted_iota(jnp.int32, (QR, BS), 0) % S
+    mask = (kpos < span) & (kpos <= qpos)
+    s_scr[:, pl.ds(j * BS, BS)] = jnp.where(mask, s, -jnp.inf)
+    v_scr[pl.ds(j * BS, BS), :] = v_ref[0, :, 0].astype(jnp.float32)
+
+    @pl.when(j == NBLK - 1)
+    def _finalize():
+        m = jnp.full((QR,), -jnp.inf, jnp.float32)
+        l = jnp.zeros((QR,), jnp.float32)
+        acc = jnp.zeros((QR, D), jnp.float32)
+        for g in range(NK):                     # flash's kv-chunk scan
+            sl = s_scr[:, g * kc:(g + 1) * kc]
+            m2 = jnp.maximum(m, sl.max(axis=-1))
+            m2s = jnp.where(jnp.isinf(m2), 0.0, m2)
+            p = jnp.exp(sl - m2s[..., None])
+            p = jnp.where(jnp.isinf(sl), 0.0, p)
+            corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m2s))
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.dot(
+                p, v_scr[g * kc:(g + 1) * kc, :],
+                preferred_element_type=jnp.float32)
+            m = m2
+        o_ref[0] = acc / jnp.maximum(l, 1e-20)[..., None]
+
+
+def paged_prefill_attention_kernel(q: jax.Array, k_pool: jax.Array,
+                                   v_pool: jax.Array,
+                                   block_row: jax.Array,
+                                   offset: jax.Array, *, span: int,
+                                   kv_chunk: int = 1024,
+                                   interpret: bool = False) -> jax.Array:
+    """Multi-query block-sparse attention for ONE slot's prompt chunk.
+
+    q (1, S, H, D) chunk queries at absolute positions
+    ``offset + [0, S)``; k/v pools (NB, BS, Hkv, D); ``block_row``
+    (1, NBLK) the leading mapped entries of the slot's table row
+    (exactly the blocks spanning ``span`` tokens — query-span tiling:
+    HBM reads scale with the prompt span, not the table width);
+    ``offset`` traced int32; ``span`` STATIC reduction extent.
+
+    Bit-exact vs ``paged_gather`` + ``layers.flash_attention(causal,
+    kv_chunk, q_offset=offset)`` over the same span
+    (tests/test_chunked_prefill.py), unmapped-entry block-0 fallback
+    included.  Grid (Hkv, NBLK), block axis sequential.
+    """
+    NB, BS, Hkv, D = k_pool.shape
+    _, S, H, _ = q.shape
+    NBLK = block_row.shape[1]
+    rep = H // Hkv
+    kc = min(kv_chunk, span)
+    NK = -(-span // kc)
+    SW = max(NBLK * BS, NK * kc)            # scratch span (cols >= both)
+    # rows flatten (replica, query) -> r * S + q; pad to >= 2 rows so the
+    # score contraction stays on the gemm path (see the decode kernel)
+    qg = q.reshape(S, Hkv, rep, D).transpose(1, 2, 0, 3)
+    qg = qg.reshape(Hkv, rep * S, D)
+    QR = max(rep * S, 2)
+    if qg.shape[1] < QR:
+        qg = jnp.pad(qg, ((0, 0), (0, QR - qg.shape[1]), (0, 0)))
+    table = jnp.maximum(block_row.astype(jnp.int32), 0)[0]     # (NBLK,)
+    off = jnp.reshape(jnp.asarray(offset, jnp.int32), (1,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Hkv, NBLK),
+        in_specs=[
+            pl.BlockSpec((1, QR, D), lambda h, j, bt, off: (h, 0, 0)),
+            pl.BlockSpec((1, BS, 1, D),
+                         lambda h, j, bt, off: (bt[j], 0, h, 0)),
+            pl.BlockSpec((1, BS, 1, D),
+                         lambda h, j, bt, off: (bt[j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, QR, D),
+                               lambda h, j, bt, off: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((QR, SW), jnp.float32),
+            pltpu.VMEM((SW, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_prefill_kernel, NBLK=NBLK, BS=BS, D=D,
+                          S=S, kc=kc, NK=NK, span=span),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Hkv, QR, D), jnp.float32),
+        interpret=interpret,
+    )(table, off, qg, k_pool, v_pool)
+    out = out[:, :rep * S].reshape(Hkv, rep, S, D)
+    return out.transpose(2, 0, 1, 3).reshape(1, S, H, D).astype(q.dtype)
 
 
 def kv_blocks_read(cache_len, mapped_blocks, block_size: int,

@@ -53,6 +53,29 @@ with the tokens actually cached instead of ``MB*BS``.  Gather stays the
 bit-exact reference (tests/test_paged_attention.py), mirroring how
 dense anchors paged and ``decode_loop_reference`` anchors scan decode.
 
+``--prefill chunked`` (paged only) merges prefill into the decode loop
+(Sarathi/vLLM-style): each engine iteration runs at most ONE prompt
+chunk of ``--prefill-chunk`` tokens from the head admitting request
+(``models.*.prefill_chunk`` scatters it straight into the slot's pool
+blocks) plus the usual decode scan for already-active slots — a long
+prompt no longer stalls every in-flight decode stream for its whole
+prefill, which is what ``decode_interarrival_p99_s`` measures.  The
+batch path survives as the bit-exactness reference: every chunk reduces
+over the same static span the batch prefill uses, so the decoded
+streams are identical token-for-token in operand-entropy mode
+(tests/test_chunked_prefill.py, including prefix-cache hits chunking
+only the post-CoW suffix).
+
+Block tables are GROWABLE: admission maps only the prompt's blocks
+(plus a watermark of free headroom for running decoders), decode blocks
+are granted on demand, and when a grant outruns the table width the
+host table widens (device side re-uploads and the scan retraces once
+per growth) — so ``prompt + gen`` may exceed the admission-time span,
+and ``max_len`` no longer bounds paged requests.  A grant the pool
+cannot cover first LRU-evicts cached-but-unreferenced prefix blocks,
+then PREEMPTS the slot (tokens cleared, requeued at the queue front —
+depth-keyed decode noise makes the replay bit-identical).
+
 Container-scale: reduced config, debug mesh.  Full-size serving shapes
 (prefill_32k / decode_32k / long_500k) are compile-proven by launch.dryrun.
 
@@ -111,13 +134,14 @@ class Request:
 class BlockAllocator:
     """Refcounted free-list allocator over a global pool of KV blocks.
 
-    Pure host-side (no jax).  A request's whole-lifetime block budget is
-    RESERVED at admission (so a running request can never starve
-    mid-decode and need preemption) but blocks are only ALLOCATED —
-    pulled off the free list and mapped into the slot's block table — as
-    the sequence actually grows: prompt blocks at admission, decode
-    blocks granted chunk by chunk by the scheduler.  ``available()`` is
-    what admission checks: free minus outstanding reservations.
+    Pure host-side (no jax).  Reservations are TRANSIENT: the scheduler
+    reserves exactly the blocks an admission or grant is about to
+    ``alloc`` (the reserve/alloc pair keeps the accounting honest), not
+    a request's whole-lifetime budget — decode blocks are granted on
+    demand as the sequence grows, and a grant the pool can't cover is
+    the scheduler's problem (LRU-evict cached blocks, else preempt the
+    slot), not an up-front admission tax.  ``available()`` is free minus
+    outstanding reservations.
 
     Blocks carry per-block REFCOUNTS so the prefix cache can share them:
     ``alloc`` hands a block out at refcount 1, ``incref`` adds a holder
@@ -225,10 +249,16 @@ class SlotScheduler:
 
     With a ``BlockAllocator`` the scheduler also owns the paged-KV block
     tables: admission switches from "is a slot free" to "are enough
-    blocks free" (whole-request budget reserved up front; the queue head
-    defers — FIFO, no skip-ahead — when the pool can't cover it), prompt
-    blocks are allocated at admission, ``grant`` maps further blocks
-    incrementally as decode deepens, and ``evict`` returns every block.
+    blocks free" — the PROMPT's blocks plus a WATERMARK of free headroom
+    (``num_slots`` blocks by default, waived when no slot is running) so
+    in-flight decoders keep growing while the queue head defers (FIFO,
+    no skip-ahead).  ``grant`` maps decode blocks on demand as slots
+    deepen, capped at each request's ``prompt + max_new_tokens`` budget,
+    WIDENING the block tables when a grant outruns them (the table
+    width is a floor, not a ceiling); a grant the pool cannot cover
+    even after LRU-evicting unreferenced cached blocks returns None and
+    the engine preempts the slot (``preempt``: blocks released, request
+    requeued at the queue front).  ``evict`` returns every block.
 
     With a ``prefix_cache`` (``launch.prefix_cache.RadixPrefixCache``)
     admission first walks the radix tree: the matched prefix's blocks
@@ -243,53 +273,88 @@ class SlotScheduler:
 
     def __init__(self, num_slots: int,
                  allocator: Optional[BlockAllocator] = None,
-                 table_width: int = 0, prefix_cache=None):
+                 table_width: int = 0, prefix_cache=None,
+                 watermark: Optional[int] = None):
         self.slots: list[Optional[Request]] = [None] * num_slots
         self.queue: collections.deque[Request] = collections.deque()
         self.allocator = allocator
         self.prefix_cache = prefix_cache
+        # free-block headroom admission must leave for running decoders'
+        # on-demand grants (now that their budgets are no longer
+        # reserved up front); waived when nothing is running, so an
+        # empty engine admits exactly what fits
+        self.watermark = num_slots if watermark is None else watermark
+        self.table_growths = 0
         if prefix_cache is not None and allocator is None:
             raise ValueError("prefix cache requires a BlockAllocator")
         if allocator is not None:
             if table_width < 1:
                 raise ValueError("paged scheduling needs table_width "
-                                 "(max blocks per slot)")
+                                 "(initial blocks per slot)")
             self.block_tables = np.full((num_slots, table_width), -1,
                                         np.int32)
             self._slot_blocks: list[list[int]] = \
                 [[] for _ in range(num_slots)]
-            self._slot_reserved = [0] * num_slots
+            # decode blocks still grantable per slot (budget, NOT an
+            # allocator reservation): blocks_for(prompt + max_new) minus
+            # what the slot already holds
+            self._slot_budget = [0] * num_slots
             self._slot_prefix: list[Optional[PrefixAdmit]] = \
                 [None] * num_slots
             self._slot_cow_src: list[Optional[int]] = [None] * num_slots
             # bumped on every table mutation (admit/grant/evict) so the
             # engine only re-uploads the device table when it changed
             self.table_version = 0
+            self.table_growths = 0
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def _ensure_width(self, want: int) -> None:
+        """Widen the host block tables to hold ``want`` blocks per slot
+        (doubling, -1-padded).  The engine notices via table_version:
+        the device table re-uploads at the new shape and the decode
+        scan retraces once per growth."""
+        w = self.block_tables.shape[1]
+        if want <= w:
+            return
+        grown = np.full((len(self.slots), max(want, 2 * w)), -1, np.int32)
+        grown[:, :w] = self.block_tables
+        self.block_tables = grown
+        self.table_growths += 1
+        self.table_version += 1
+
     def _try_reserve(self, need: int, protect: frozenset) -> bool:
-        """Reserve ``need`` blocks, LRU-evicting cached-but-unreferenced
-        blocks first when the pool is short (``protect`` pins the hit
-        being admitted)."""
+        """Reserve ``need`` blocks for an admission, LRU-evicting
+        cached-but-unreferenced blocks first when the pool is short
+        (``protect`` pins the hit being admitted).  On top of ``need``
+        the pool must keep ``watermark`` blocks free for running slots'
+        decode grants — waived when no slot is running (nothing to
+        starve, and the head request could otherwise never admit)."""
         alloc = self.allocator
-        if alloc.available() < need and self.prefix_cache is not None:
-            self.prefix_cache.evict_lru(need - alloc.available(),
-                                        protect=protect)
+        wm = self.watermark if any(r is not None for r in self.slots) \
+            else 0
+        short = need + wm - alloc.available()
+        if short > 0 and self.prefix_cache is not None:
+            self.prefix_cache.evict_lru(short, protect=protect)
+        if alloc.available() < need + wm:
+            return False
         return alloc.reserve(need)
 
     def _admit_paged(self, slot: int) -> Optional[Request]:
         alloc = self.allocator
         req = self.queue[0]
         P = len(req.prompt)
+        nprompt = alloc.blocks_for(P)
+        # grant cap, NOT a reservation: decode blocks are drawn from the
+        # pool on demand, so admission only needs the prompt's blocks
         total = alloc.blocks_for(P + req.max_new_tokens)
         hit = self.prefix_cache.match(req.prompt) \
             if self.prefix_cache is not None else None
         if hit is not None and hit.tokens:
             # uncached span + one extra block when the shared tail needs
             # a copy-on-write duplicate before this slot writes into it
-            need = total - len(hit.blocks) + (1 if hit.partial else 0)
+            need = nprompt - len(hit.blocks) + (1 if hit.partial else 0)
             if not self._try_reserve(need, frozenset(hit.blocks)):
                 # liveness: when no live slot will ever free a block
                 # (everything left is cache-held, pinned by this very
@@ -299,11 +364,10 @@ class SlotScheduler:
                     return None           # a running slot will free some
                 hit = None
         if hit is None or not hit.tokens:
-            if not self._try_reserve(total, frozenset()):
+            if not self._try_reserve(nprompt, frozenset()):
                 return None               # pool exhausted: defer, FIFO
             self.queue.popleft()
-            ids = alloc.alloc(alloc.blocks_for(P))
-            self._slot_reserved[slot] = total - len(ids)
+            ids = alloc.alloc(nprompt)
             if self.prefix_cache is not None:
                 self._slot_prefix[slot] = PrefixAdmit(tokens=0)
         else:
@@ -316,11 +380,12 @@ class SlotScheduler:
                 cow = (ids[-1], dst)      # src stays ref'd: finish_cow
                 self._slot_cow_src[slot] = ids[-1]
                 ids[-1] = dst
-            ids += alloc.alloc(alloc.blocks_for(P) - len(hit.blocks))
-            self._slot_reserved[slot] = total - alloc.blocks_for(P)
+            ids += alloc.alloc(nprompt - len(hit.blocks))
             self._slot_prefix[slot] = PrefixAdmit(tokens=hit.tokens,
                                                   cow=cow)
+        self._slot_budget[slot] = total - nprompt
         self._slot_blocks[slot] = ids
+        self._ensure_width(len(ids))
         self.block_tables[slot, :] = -1
         self.block_tables[slot, :len(ids)] = ids
         self.table_version += 1
@@ -355,24 +420,50 @@ class SlotScheduler:
                 placed.append((i, req))
         return placed
 
-    def grant(self, slot: int, target_len: int) -> list[int]:
+    def grant(self, slot: int, target_len: int) -> Optional[list[int]]:
         """Map blocks so slot ``slot`` can hold ``target_len`` tokens.
 
-        Draws from the request's admission-time reservation, so it
-        cannot fail; the grant is capped at that budget (junk steps a
-        finished request runs until its chunk boundary drop against the
-        unmapped tail instead of consuming pool)."""
+        Draws from the pool on demand, capped at the request's
+        ``prompt + max_new_tokens`` budget (junk steps a finished
+        request runs until its chunk boundary drop against the unmapped
+        tail instead of consuming pool) and widening the block tables
+        when the target outruns them.  Returns the granted ids ([] when
+        nothing is needed) or None when the pool cannot cover the
+        shortfall even after LRU-evicting cached-but-unreferenced
+        prefix blocks — the engine preempts the slot."""
+        alloc = self.allocator
         have = len(self._slot_blocks[slot])
-        want = min(self.allocator.blocks_for(target_len),
-                   have + self._slot_reserved[slot])
+        want = min(alloc.blocks_for(target_len),
+                   have + self._slot_budget[slot])
         if want <= have:
             return []
-        ids = self.allocator.alloc(want - have)
-        self._slot_reserved[slot] -= len(ids)
+        n = want - have
+        if alloc.available() < n and self.prefix_cache is not None:
+            # a cached-but-unreferenced prefix must never starve a
+            # running decoder (or livelock a deferred admission behind
+            # it): reclaim before giving up
+            self.prefix_cache.evict_lru(n - alloc.available(),
+                                        protect=frozenset())
+        if not alloc.reserve(n):
+            return None
+        ids = alloc.alloc(n)
+        self._slot_budget[slot] -= n
+        self._ensure_width(want)
         self.block_tables[slot, have:want] = ids
         self._slot_blocks[slot].extend(ids)
         self.table_version += 1
         return ids
+
+    def preempt(self, slot: int) -> Request:
+        """Evict a slot whose growth grant failed and requeue its
+        request at the queue FRONT (FIFO order preserved).  The caller
+        clears the request's accumulated output first — on readmission
+        it restarts from its prompt (depth-keyed decode noise replays
+        the aborted stream bit-exactly when it lands in the same
+        slot)."""
+        req = self.evict(slot)
+        self.queue.appendleft(req)
+        return req
 
     def evict(self, slot: int) -> Request:
         req = self.slots[slot]
@@ -393,8 +484,7 @@ class SlotScheduler:
                 self._slot_prefix[slot] = None
             self.allocator.free(self._slot_blocks[slot])
             self._slot_blocks[slot] = []
-            self.allocator.unreserve(self._slot_reserved[slot])
-            self._slot_reserved[slot] = 0
+            self._slot_budget[slot] = 0
             self.block_tables[slot, :] = -1
             self.table_version += 1
         return req
@@ -486,6 +576,7 @@ class ServeEngine:
                  eos_id: Optional[int] = None, kv_layout: str = "dense",
                  kv_block: int = 16, kv_blocks: Optional[int] = None,
                  prefix_cache: bool = False, decode_attn: str = "gather",
+                 prefill_mode: str = "batch", prefill_chunk: int = 32,
                  trace_every: int = 1):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
@@ -500,6 +591,15 @@ class ServeEngine:
             raise ValueError("the block-sparse decode kernel reads "
                              "through the paged block table; run with "
                              "kv_layout='paged'")
+        if prefill_mode not in ("batch", "chunked"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if prefill_mode == "chunked" and kv_layout != "paged":
+            raise ValueError("chunked prefill scatters prompt chunks "
+                             "into pool blocks; run with "
+                             "kv_layout='paged'")
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got "
+                             f"{prefill_chunk}")
         if trace_every < 1:
             raise ValueError(f"trace_every must be >= 1, got {trace_every}")
         self.params = params
@@ -535,6 +635,23 @@ class ServeEngine:
         if self.kv_blocks < 1:
             raise ValueError(f"kv_blocks must be >= 1, got {kv_blocks}")
         paged = self.kv_layout == "paged"
+        # prompt-length bucketing: padding-safe families right-pad cold
+        # prompts to the next kv_block multiple, so the jitted batch
+        # prefill compiles once per BUCKET instead of once per distinct
+        # prompt length (prefill_compiles in the run stats); recurrent
+        # families keep exact lengths
+        self.pad_prompts = M.supports_prompt_padding(cfg)
+        # chunked prefill needs the per-family prefill_chunk walker and
+        # the paged layout; others fall back to batch silently, like the
+        # ssm dense fallback above
+        self.prefill_mode = prefill_mode if paged \
+            and M.supports_chunked_prefill(cfg) else "batch"
+        self.prefill_chunk = prefill_chunk
+        if self.prefill_mode == "chunked" and cfg.family == "hybrid":
+            # hybrid chunks walk the SSM in ssm_chunk segments; round
+            # the knob up so every full chunk is a clean multiple
+            sc = cfg.ssm_chunk
+            self.prefill_chunk = -(-prefill_chunk // sc) * sc
         if paged:
             # paged prefill builds a minimal prompt-length strip (the
             # scatter pages it out token by token); dense keeps the
@@ -545,15 +662,43 @@ class ServeEngine:
                 lambda c, slot, sub, row: M.write_slot(cfg, c, slot, sub,
                                                        row),
                 donate_argnums=(0,))
+        if self.prefill_mode == "chunked":
+            # one jitted walker per family kwarg shape; span (the whole
+            # prompt's static attention-reduction extent) is static, so
+            # compiles scale with distinct (chunk, span) pairs — bucketed
+            # prompts collapse most of those (see prefill_compiles)
+            if cfg.family == "moe":
+                self._chunk_fn = jax.jit(
+                    lambda p, t, c, s, o, n, off, span: M.prefill_chunk(
+                        p, cfg, t, c, s, o, n, span, expert_offsets=off),
+                    static_argnums=(7,), donate_argnums=(2,))
+            elif cfg.family == "hybrid":
+                self._chunk_fn = jax.jit(
+                    lambda p, t, c, s, o, n, st, span, fin:
+                    M.prefill_chunk(p, cfg, t, c, s, o, n, span,
+                                    state=st, finalize=fin),
+                    static_argnums=(7, 8), donate_argnums=(2,))
+            elif cfg.family == "encdec":
+                self._chunk_first = jax.jit(
+                    lambda p, t, c, s, o, n, fr, span: M.prefill_chunk(
+                        p, cfg, t, c, s, o, n, span, frames=fr),
+                    static_argnums=(7,), donate_argnums=(2,))
+                self._chunk_fn = jax.jit(
+                    lambda p, t, c, s, o, n, span: M.prefill_chunk(
+                        p, cfg, t, c, s, o, n, span),
+                    static_argnums=(6,), donate_argnums=(2,))
+            else:
+                self._chunk_fn = jax.jit(
+                    lambda p, t, c, s, o, n, span: M.prefill_chunk(
+                        p, cfg, t, c, s, o, n, span),
+                    static_argnums=(6,), donate_argnums=(2,))
         if self.prefix_cache:
             # prefix-hit fast paths.  _suffix gathers the slot's cached
             # prefix strips from the pool, prefills ONLY the uncached
             # suffix against them (bit-exact vs the cold flash-attention
             # path; see layers.apply_attention_suffix) and scatters the
             # suffix KV at its logical offset.  _copy is the device-side
-            # CoW block duplicate; _set_len is all a full-prompt hit
-            # needs (the engine never uses prefill's hidden output —
-            # decode re-feeds the last prompt token).
+            # CoW block duplicate.
             def suffix_fn(p, c, slot, row, toks, plen):
                 # gather only the blocks the hit spans (plen is static),
                 # not the full table-width logical strip
@@ -573,20 +718,98 @@ class ServeEngine:
             self._copy = jax.jit(
                 lambda c, src, dst: M.copy_block(cfg, c, src, dst),
                 donate_argnums=(0,))
-            self._set_len = jax.jit(
-                lambda c, slot, n: dict(c, len=c["len"].at[slot].set(n)),
-                donate_argnums=(0,))
         if not paged:
             self._prefill = jax.jit(
                 lambda p, t, m: M.prefill(p, cfg, t, max_len, m))
             self._write = jax.jit(
                 lambda c, slot, sub: M.write_slot(cfg, c, slot, sub),
                 donate_argnums=(0,))
+        # depth pinning: bucketed/suffix/chunked prefill all write
+        # strips wider than the true prompt, then fix the slot's len to
+        # the real token count (full-prompt prefix hits need nothing
+        # else at all)
+        self._set_len = jax.jit(
+            lambda c, slot, n: dict(c, len=c["len"].at[slot].set(n)),
+            donate_argnums=(0,))
         self._scan = jax.jit(
             S.build_scan_decode(cfg, entropy=entropy, chunk=chunk,
                                 mi_threshold=mi_threshold,
                                 se_threshold=se_threshold),
             donate_argnums=(2,))
+
+    def _bucket(self, n: int) -> int:
+        """Prompt-length bucket: next kv_block multiple (dense strips
+        additionally clamp to max_len).  The static attention span every
+        prefill path of a bucketed prompt reduces over."""
+        if not self.pad_prompts:
+            return n
+        w = -(-n // self.kv_block) * self.kv_block
+        return min(w, self.max_len) if self.kv_layout == "dense" else w
+
+    def _start_job(self, req: Request, hit_len: int, span: int,
+                   cache) -> dict:
+        """Open a chunked-prefill walk over ``req``'s prompt.
+
+        The job carries the walk offset plus whatever state the family's
+        ``prefill_chunk`` threads between chunks: running expert load for
+        MoE capacity splits, SSM/conv recurrent state for hybrid, and the
+        encoder-frames-pending flag for encdec.
+        """
+        job = {"req": req, "P": len(req.prompt), "span": span,
+               "off": hit_len, "first": True}
+        cfg = self.cfg
+        if cfg.family == "moe":
+            job["ex_off"] = jnp.zeros((cfg.num_layers, cfg.num_experts),
+                                      jnp.float32)
+        elif cfg.family == "hybrid":
+            from repro.models.ssm import dims
+            d_in, H, Pd, N = dims(cfg)
+            job["state"] = {
+                "ssm": jnp.zeros((cfg.num_layers, 1, H, Pd, N),
+                                 jnp.float32),
+                "conv": jnp.zeros((cfg.num_layers, 1,
+                                   cfg.ssm_conv_width - 1, d_in + 2 * N),
+                                  cache["conv"].dtype)}
+        return job
+
+    def _run_chunk(self, cache, slot: int, job: dict):
+        """Advance ``job`` by one prompt chunk; returns
+        ``(cache, done, shape_key)``.
+
+        Padding-safe families pad every chunk to exactly prefill_chunk
+        tokens (one compile per (chunk, span) pair; trailing junk either
+        scatters into the in-bucket pad region the batch path also
+        writes, or drops at unmapped blocks).  Hybrid walks exact
+        ssm_chunk-multiple segments instead — its recurrence is not
+        padding-safe.
+        """
+        off, P, W = job["off"], job["P"], job["span"]
+        pc = self.prefill_chunk
+        real = min(pc, P - off)
+        S_len = pc if self.pad_prompts else real
+        toks = np.zeros((S_len,), np.int32)
+        toks[:real] = job["req"].prompt[off:off + real]
+        new_len = off + real
+        done = new_len >= P
+        args = (self.params, jnp.asarray(toks)[None], cache,
+                jnp.asarray(slot, jnp.int32), jnp.asarray(off, jnp.int32),
+                jnp.asarray(new_len, jnp.int32))
+        fam = self.cfg.family
+        variant = ""
+        if fam == "moe":
+            cache, job["ex_off"] = self._chunk_fn(*args, job["ex_off"], W)
+        elif fam == "hybrid":
+            cache, job["state"] = self._chunk_fn(*args, job["state"], W,
+                                                 done)
+            variant = "final" if done else ""
+        elif fam == "encdec" and job["first"]:
+            cache = self._chunk_first(*args, self._modality(1), W)
+            variant = "first"
+        else:
+            cache = self._chunk_fn(*args, W)
+        job["first"] = False
+        job["off"] = new_len
+        return cache, done, ("chunk", S_len, W, variant)
 
     def _modality(self, batch: int):
         cfg = self.cfg
@@ -604,19 +827,23 @@ class ServeEngine:
         One host sync per admission (prefill) and one per decoded chunk
         (the stacked (chunk, B) outputs) -- never per token.
         """
+        paged = self.kv_layout == "paged"
         for r in requests:
             if len(r.prompt) == 0:
                 raise ValueError(f"request {r.rid}: empty prompt")
             if r.max_new_tokens < 1:
                 raise ValueError(
                     f"request {r.rid}: max_new_tokens must be >= 1")
-            if len(r.prompt) + r.max_new_tokens > self.max_len:
+            # paged tables GROW on demand (grant widens them past the
+            # admission-time span), so only dense strips — whose depth
+            # is baked into the cache shape — bound prompt + gen
+            if not paged and len(r.prompt) + r.max_new_tokens \
+                    > self.max_len:
                 raise ValueError(
                     f"request {r.rid}: prompt {len(r.prompt)} + "
                     f"max_new_tokens {r.max_new_tokens} exceeds the "
                     f"slot capacity max_len={self.max_len}; cache writes "
                     f"past capacity would be dropped silently")
-        paged = self.kv_layout == "paged"
         alloc = None
         pcache = None
         if paged:
@@ -672,14 +899,60 @@ class ServeEngine:
         # arithmetic, kernels.paged_attention.kv_blocks_read)
         attn_blocks_read = 0
         attn_blocks_span = 0
+        # chunked-prefill bookkeeping: slot -> in-flight prompt walk
+        # (offset + family carry), FIFO order of pending walks, and the
+        # slots currently DECODING (mid-prefill slots sit in the scan
+        # batch inactive; their junk steps are overwritten by the next
+        # chunk's scatter, see models.layers.apply_attention_chunk)
+        prefilling: dict[int, dict] = {}
+        jobs: collections.deque[int] = collections.deque()
+        decoding: set[int] = set()
+        prefill_chunks = 0
+        preemptions = 0
+        # decode-token inter-arrival: one timestamp per scan that served
+        # at least one decoding slot — the stall a long batch prefill
+        # injects between consecutive chunks is exactly what chunked
+        # prefill bounds (decode_interarrival_p99_s)
+        arrivals: list[float] = []
+
+        def activate(slot, req):
+            nonlocal tok, active, flags
+            tok = tok.at[slot].set(int(req.prompt[-1]))
+            active = active.at[slot].set(True)
+            flags = {k: v.at[slot].set(0) for k, v in flags.items()}
+            decoding.add(slot)
+
+        def classify(shape_key, dt):
+            if shape_key in seen_prefill_shapes:
+                steady_times.append(dt)
+            else:
+                seen_prefill_shapes.add(shape_key)
+                compile_times.append(dt)
+
+        def sync_table():
+            # re-upload the device block table (tiny: slots x MB) only
+            # when the host copy changed; a width change alters the
+            # cache shape, so downstream jits retrace once per growth
+            nonlocal cache, table_synced
+            if sched.table_version != table_synced:
+                cache = dict(cache, block_table=jnp.asarray(
+                    sched.block_tables))
+                table_synced = sched.table_version
 
         try:
             while sched.has_work():
-                for slot, req in sched.admit():
+                admitted = sched.admit()
+                if paged:
+                    # admissions mutate the host tables (and may WIDEN
+                    # them); the device copy must match before any
+                    # prefill write installs a row at the new width
+                    sync_table()
+                for slot, req in admitted:
                     t0 = time.perf_counter()
                     info = sched.prefix_admit(slot) if paged else None
                     hit_len = info.tokens if info is not None else 0
                     P = len(req.prompt)
+                    W = self._bucket(P)
                     if info is not None and info.cow is not None:
                         # the shared tail block is about to be written at the
                         # divergence point: duplicate it device-side and let
@@ -690,21 +963,46 @@ class ServeEngine:
                         sched.finish_cow(slot)
                         pc_cow += 1
                     slot_ = jnp.asarray(slot, jnp.int32)
+                    shape_key: Optional[tuple] = None
                     if hit_len == P:
                         # whole prompt resident: zero prefill compute — the
                         # decode loop only needs the slot's depth
                         cache = self._set_len(cache, slot_,
                                               jnp.asarray(P, jnp.int32))
                         shape_key = ("hit",)
+                        activate(slot, req)
+                    elif self.prefill_mode == "chunked":
+                        # enqueue an incremental prompt walk (suffix-only
+                        # on a partial prefix hit — CoW already settled
+                        # above) and pin the slot's depth to the resident
+                        # span NOW: interleaved scans write junk at
+                        # [len, len+chunk) for every slot, and a stale
+                        # len would point into shared prefix blocks
+                        cache = self._set_len(
+                            cache, slot_, jnp.asarray(hit_len, jnp.int32))
+                        prefilling[slot] = self._start_job(req, hit_len, W,
+                                                           cache)
+                        jobs.append(slot)
                     elif hit_len > 0:
+                        # suffix padded to the same bucketed span the
+                        # cold path reduces over (W - hit junk tokens):
+                        # equal extents keep hit and cold bit-identical
+                        stoks = np.zeros((W - hit_len,), np.int32)
+                        stoks[:P - hit_len] = req.prompt[hit_len:]
                         cache = self._suffix(
                             self.params, cache, slot_,
                             jnp.asarray(sched.block_tables[slot]),
-                            jnp.asarray(req.prompt[hit_len:])[None], hit_len)
-                        shape_key = ("suffix", hit_len, P - hit_len)
+                            jnp.asarray(stoks)[None], hit_len)
+                        if W > P:
+                            cache = self._set_len(
+                                cache, slot_, jnp.asarray(P, jnp.int32))
+                        shape_key = ("suffix", hit_len, W - hit_len)
+                        activate(slot, req)
                     else:
+                        toks = np.zeros((W,), np.int32)
+                        toks[:P] = req.prompt
                         _, sub = self._prefill(
-                            self.params, jnp.asarray(req.prompt)[None],
+                            self.params, jnp.asarray(toks)[None],
                             modality1)
                         if paged:
                             cache = self._write(
@@ -712,44 +1010,84 @@ class ServeEngine:
                                 jnp.asarray(sched.block_tables[slot]))
                         else:
                             cache = self._write(cache, slot_, sub)
-                        shape_key = ("cold", P)
+                        if W > P:
+                            # junk pad KV stays masked above the true len
+                            cache = self._set_len(
+                                cache, slot_, jnp.asarray(P, jnp.int32))
+                        shape_key = ("cold", W)
+                        activate(slot, req)
                     if info is not None:
                         pc_hits += bool(hit_len)
                         pc_misses += not hit_len
                         pc_tokens += P
                         pc_saved += hit_len
-                    tok = tok.at[slot].set(int(req.prompt[-1]))
-                    active = active.at[slot].set(True)
-                    flags = {k: v.at[slot].set(0) for k, v in flags.items()}
+                    if shape_key is not None:
+                        jax.block_until_ready(cache)
+                        classify(shape_key, time.perf_counter() - t0)
+
+                if jobs:
+                    # at most ONE prompt chunk per engine iteration
+                    # (Sarathi-style): the head walk advances by
+                    # prefill_chunk tokens, then the decode scan below
+                    # still runs for every active slot
+                    slot = jobs[0]
+                    job = prefilling[slot]
+                    req = job["req"]
+                    t0 = time.perf_counter()
+                    cache, done, shape_key = self._run_chunk(cache, slot,
+                                                             job)
+                    prefill_chunks += 1
                     jax.block_until_ready(cache)
-                    dt = time.perf_counter() - t0
-                    if shape_key in seen_prefill_shapes:
-                        steady_times.append(dt)
-                    else:
-                        seen_prefill_shapes.add(shape_key)
-                        compile_times.append(dt)
+                    classify(shape_key, time.perf_counter() - t0)
+                    if done:
+                        jobs.popleft()
+                        del prefilling[slot]
+                        # activate BEFORE this iteration's scan: the
+                        # slot's first real decode tokens come from it
+                        # (no junk window between prefill and decode)
+                        activate(slot, req)
 
                 if paged:
-                    # incremental grant: map the blocks the coming chunk can
-                    # write (capped at each request's admission-time budget);
-                    # re-upload the device table (tiny: slots x MB) only when
+                    # incremental grant: map the blocks the coming chunk
+                    # can write, on demand from the pool (capped at each
+                    # request's prompt+max_new budget); re-upload the
+                    # device table (tiny: slots x MB) only when
                     # something actually changed since the last chunk
                     for slot, req in sched.active():
-                        sched.grant(slot, len(req.prompt)
-                                    + min(len(req.tokens) + self.chunk,
-                                          req.max_new_tokens))
-                    if sched.table_version != table_synced:
-                        cache = dict(cache, block_table=jnp.asarray(
-                            sched.block_tables))
-                        table_synced = sched.table_version
+                        if slot in prefilling:
+                            continue     # prompt blocks mapped at admission
+                        ids = sched.grant(slot, len(req.prompt)
+                                          + min(len(req.tokens) + self.chunk,
+                                                req.max_new_tokens))
+                        if ids is None:
+                            # the pool cannot grow this slot even after
+                            # LRU-evicting cached blocks: preempt — blocks
+                            # release, output clears, the request restarts
+                            # from the queue FRONT
+                            sched.preempt(slot)
+                            req.tokens.clear()
+                            for name in ("H", "SE", "MI", "p_max"):
+                                getattr(req, name).clear()
+                            req.epistemic_flags = 0
+                            req.aleatoric_flags = 0
+                            decoding.discard(slot)
+                            active = active.at[slot].set(False)
+                            preemptions += 1
+                    sync_table()
 
                 if chunks_run % self.trace_every == 0:
                     # downsampled pool/queue snapshot: a long run would
                     # otherwise grow host memory (and the results
                     # payload) by one dict per chunk, unbounded
                     sched_trace.append(sched.pool_stats())
+                if not decoding:
+                    if not jobs and not admitted:
+                        raise RuntimeError(
+                            "scheduler stalled: queued requests, no "
+                            "admission, nothing prefilling or decoding")
+                    continue             # prefill-only iteration: no scan
                 if paged:
-                    MB = self.table_width
+                    MB = sched.block_tables.shape[1]
                     # the gather path materializes every slot's full
                     # logical span each step, occupied or not
                     attn_blocks_span += self.num_slots * MB * self.chunk
@@ -757,6 +1095,8 @@ class ServeEngine:
                         # the kernel reads only mapped blocks under
                         # each occupied slot's depth
                         for slot, occupant in sched.active():
+                            if slot in prefilling:
+                                continue
                             len0 = len(occupant.prompt) \
                                 + len(occupant.tokens)
                             mapped = sched.mapped_blocks(slot)
@@ -770,10 +1110,13 @@ class ServeEngine:
                     self.params, tok, cache, jnp.asarray(step0, jnp.int32),
                     active, flags)
                 ys = jax.device_get(ys)            # the chunk's single sync
+                arrivals.append(time.perf_counter())
                 decode_s += time.perf_counter() - t0
                 step0 += self.chunk
 
                 for slot, req in sched.active():
+                    if slot in prefilling:
+                        continue         # mid-prefill: junk steps, no harvest
                     for t in range(self.chunk):
                         tk = int(ys["token"][t, slot])
                         req.tokens.append(tk)
@@ -786,6 +1129,7 @@ class ServeEngine:
                             req.t_finish = time.perf_counter()
                             req.finish_reason = "eos" if done_eos else "length"
                             sched.evict(slot)
+                            decoding.discard(slot)
                             active = active.at[slot].set(False)
                             break
 
@@ -903,6 +1247,21 @@ class ServeEngine:
             "sched_trace": sched_trace,
             "sched_trace_every": self.trace_every,
             "chunks_run": chunks_run,
+            # chunked-prefill / growable-table telemetry
+            "prefill_mode": self.prefill_mode,
+            "prefill_chunk": self.prefill_chunk,
+            "prefill_chunks": prefill_chunks,
+            # distinct prefill/chunk shapes traced (bucketing collapses
+            # per-prompt-length recompiles to one per kv_block bucket)
+            "prefill_compiles": len(seen_prefill_shapes),
+            "table_growths": sched.table_growths,
+            "preemptions": preemptions,
+            # worst gap between consecutive decode-serving scans: the
+            # stall a monolithic batch prefill injects mid-stream, which
+            # interleaved chunked prefill bounds at ~one chunk's compute
+            "decode_interarrival_p99_s": float(np.percentile(
+                np.diff(arrivals), 99, method="higher"))
+            if len(arrivals) >= 2 else 0.0,
             "epistemic_flags": int(epi),
             "aleatoric_flags": int(alea),
             "flags_per_1k_tokens": {
@@ -971,8 +1330,20 @@ def make_requests(args, cfg) -> list[Request]:
         # same template tokens (what the prefix cache amortizes)
         n = min(args.shared_prefix, args.prompt_len)
         toks[:, :n] = toks[0, :n]
-    return [Request(rid=i, prompt=toks[i], max_new_tokens=args.gen_len)
+    reqs = [Request(rid=i, prompt=toks[i], max_new_tokens=args.gen_len)
             for i in range(args.num_requests)]
+    if getattr(args, "long_prompt", 0):
+        # one outlier request whose prompt (and so prompt + gen) can
+        # exceed the admission-time table span: exercises on-demand
+        # block-table growth and, in batch-prefill mode, the decode
+        # stall a monolithic long prefill injects
+        long_toks, _ = token_batch(TokenStreamState(seed=args.seed + 1,
+                                                    host=0, num_hosts=1),
+                                   1, args.long_prompt, cfg.vocab_size)
+        reqs[0] = Request(rid=0,
+                          prompt=np.asarray(long_toks, np.int32)[0],
+                          max_new_tokens=args.gen_len)
+    return reqs
 
 
 def serve(args) -> dict:
@@ -984,15 +1355,25 @@ def serve(args) -> dict:
 
     entropy = KernelEntropy(seed=args.seed) \
         if args.entropy == "kernel" else None
+    max_len = args.prompt_len + args.gen_len + args.chunk
+    kv_blocks = args.kv_blocks
+    long_prompt = getattr(args, "long_prompt", 0)
+    if long_prompt and kv_blocks is None and args.kv_layout == "paged":
+        # the admission-time table span stays sized for the SHORT
+        # prompts (that is what the long request outgrows); the pool
+        # just needs enough blocks for the outlier to finish
+        bf = -(-(long_prompt + args.gen_len + args.chunk) // args.kv_block)
+        kv_blocks = args.slots * -(-max_len // args.kv_block) + bf
     engine = ServeEngine(
-        params, cfg, num_slots=args.slots,
-        max_len=args.prompt_len + args.gen_len + args.chunk,
+        params, cfg, num_slots=args.slots, max_len=max_len,
         chunk=args.chunk, entropy=entropy,
         mi_threshold=args.mi_threshold, se_threshold=args.se_threshold,
         eos_id=args.eos_id, kv_layout=args.kv_layout,
-        kv_block=args.kv_block, kv_blocks=args.kv_blocks,
+        kv_block=args.kv_block, kv_blocks=kv_blocks,
         prefix_cache=args.prefix_cache == "on",
-        decode_attn=args.decode_attn, trace_every=args.trace_every)
+        decode_attn=args.decode_attn,
+        prefill_mode=args.prefill, prefill_chunk=args.prefill_chunk,
+        trace_every=args.trace_every)
     result = engine.run(make_requests(args, cfg))
 
     # entropy HBM traffic of the head's MC draws per decoded token: the
@@ -1047,6 +1428,22 @@ def main():
                          "over the block pool (HBM reads scale with "
                          "tokens cached); 'gather' materializes the full "
                          "logical span, the bit-exact reference")
+    ap.add_argument("--prefill", choices=("batch", "chunked"),
+                    default="batch",
+                    help="'chunked': interleave up to --prefill-chunk "
+                         "prompt tokens of ONE admitting request with "
+                         "every decode chunk (Sarathi-style) so running "
+                         "streams never stall behind a long prefill; "
+                         "'batch': whole-prompt prefill at admission, "
+                         "the bit-exact reference (needs --kv-layout "
+                         "paged for 'chunked')")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens per interleaved prefill chunk "
+                         "(rounded up to ssm_chunk on hybrid)")
+    ap.add_argument("--long-prompt", type=int, default=0,
+                    help="give request 0 a prompt of N tokens (its "
+                         "prompt + gen may exceed the admission-time "
+                         "table span — block tables grow on demand)")
     ap.add_argument("--trace-every", type=int, default=1,
                     help="record the scheduler/pool snapshot every N "
                          "chunks (1 = every chunk, the CI default; "
@@ -1067,7 +1464,16 @@ def main():
     print(f"served {r['num_requests']} requests / {r['gen_tokens']} tokens "
           f"in {r['total_s']:.2f}s")
     print(f"prefill compile {r['prefill_compile_s']:.2f}s  "
-          f"steady {r['prefill_steady_s'] * 1e3:.1f}ms")
+          f"steady {r['prefill_steady_s'] * 1e3:.1f}ms  "
+          f"({r['prefill_compiles']} shapes)")
+    print(f"prefill: {r['prefill_mode']} mode"
+          + (f", {r['prefill_chunks']} chunks of {r['prefill_chunk']}"
+             if r['prefill_mode'] == "chunked" else "")
+          + f"  decode inter-arrival p99 "
+            f"{r['decode_interarrival_p99_s'] * 1e3:.1f}ms")
+    if r["kv"]["layout"] == "paged":
+        print(f"tables: {r['table_growths']} growths, "
+              f"{r['preemptions']} preemptions")
     print(f"decode {r['decode_tok_per_s']:.1f} tok/s "
           f"(e2e {r['e2e_tok_per_s']:.1f})  "
           f"latency p50 {r['latency_p50_s']:.2f}s "

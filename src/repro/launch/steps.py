@@ -122,15 +122,32 @@ def _decode_base_key(entropy):
     return entropy.key() if entropy is not None else jax.random.PRNGKey(17)
 
 
+def _folds_step_key(cfg: ArchConfig, entropy) -> bool:
+    """Whether the per-step key folds in the global step index.
+
+    The seeded kernel path derives its in-kernel stream from the folded
+    key, so it keeps the global-step convention.  Operand mode instead
+    passes the UNFOLDED base key down to the models, whose
+    ``layers.decode_head_noise`` folds (slot, depth) — making each
+    slot's noise a function of its own token position, independent of
+    the engine's scheduling (chunked prefill interleavings, pauses,
+    chunk sizes).
+    """
+    return entropy is not None or cfg.head_entropy == "kernel"
+
+
 def build_decode_step(cfg: ArchConfig, entropy=None):
     """Single uncertain decode step: (params, token, cache, step) ->
-    (outputs, cache).  The per-step key is fold_in(base, step) -- the
-    same convention ``build_scan_decode`` uses, so the two paths draw
-    identical noise at identical global step indices."""
+    (outputs, cache).  Keys follow the same convention
+    ``build_scan_decode`` uses — fold_in(base, step) on the seeded
+    kernel path, the raw base key in operand mode (the models fold
+    (slot, depth) themselves; see ``_folds_step_key``) — so the two
+    paths draw identical noise at identical (slot, depth) sites."""
     base = _decode_base_key(entropy)
+    fold = _folds_step_key(cfg, entropy)
 
     def decode_step(params, token, cache, step):
-        key = jax.random.fold_in(base, step)
+        key = jax.random.fold_in(base, step) if fold else base
         return M.decode_step(params, cfg, token, cache, key)
 
     return decode_step
@@ -155,16 +172,18 @@ def build_scan_decode(cfg: ArchConfig, entropy=None, chunk: int = 8,
     (the host can't evict inside the scan), so they upper-bound the
     exact per-request host accounting done from ``ys``.
 
-    Noise stream under scan: step t of the chunk uses key
-    fold_in(base, step0 + t) -- the same global-step convention as
-    ``build_decode_step``, so scan decode replays the per-step loop's
-    stream bit-for-bit in operand mode *at equal global step indices*
-    (a request admitted mid-stream replays only against a loop driven
-    from the same step offset).  On the seeded kernel path the
-    folded key reaches the uncertainty-head kernel as an int32 seed and
-    the in-kernel PRNG re-mixes it with the grid coordinates, so every
-    (slot, step) site owns a distinct replayable stream with zero HBM
-    entropy traffic.
+    Noise stream under scan: in operand mode the UNFOLDED base key is
+    passed down every step and the models fold (slot, depth) into it
+    (``layers.decode_head_noise``), so a slot's draws depend only on
+    its own token position — scan decode replays the per-step loop's
+    stream bit-for-bit at equal (slot, depth) sites regardless of how
+    the engine interleaves admissions, chunked prefill, or pauses
+    around it.  On the seeded kernel path step t of the chunk uses key
+    fold_in(base, step0 + t) -- the global-step convention of
+    ``build_decode_step`` -- and the folded key reaches the
+    uncertainty-head kernel as an int32 seed whose in-kernel PRNG
+    re-mixes it with the grid coordinates, so every (slot, step) site
+    owns a distinct replayable stream with zero HBM entropy traffic.
 
     Per-slot cache depths (``cache['len']``) give per-slot RoPE
     positions, so slots admitted mid-stream decode correctly alongside
@@ -185,11 +204,12 @@ def build_scan_decode(cfg: ArchConfig, entropy=None, chunk: int = 8,
     the full logical span; see kernels/paged_attention.py).
     """
     base = _decode_base_key(entropy)
+    fold = _folds_step_key(cfg, entropy)
 
     def scan_decode(params, token, cache, step0, active, flags):
         def body(carry, t):
             tok, cache, epi, alea = carry
-            key = jax.random.fold_in(base, step0 + t)
+            key = jax.random.fold_in(base, step0 + t) if fold else base
             out, cache = M.decode_step(params, cfg, tok, cache, key)
             is_epi = out["MI"] > mi_threshold
             is_alea = (out["SE"] > se_threshold) & ~is_epi

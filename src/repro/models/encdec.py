@@ -186,6 +186,62 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int,
     return x[:, -1], cache
 
 
+def prefill_chunk(params, cfg: ArchConfig, tokens: jax.Array, cache: dict,
+                  slot: jax.Array, offset: jax.Array, new_len: jax.Array,
+                  span: int, frames: Optional[jax.Array] = None):
+    """Chunked encoder-decoder prefill step (see
+    transformer.prefill_chunk).
+
+    The FIRST chunk passes ``frames``: it runs the encoder and writes
+    the per-layer cross-attention K/V into the slot's dense ``ck``/
+    ``cv`` strips (a separate jit variant).  Later chunks read those
+    strips back — cross attention is non-causal over a fixed ENC_LEN
+    extent and row-independent, so per-chunk decoder rows reproduce the
+    batch path bit for bit.  Decoder self-attention pages through the
+    block pool like the dense family."""
+    row = jax.lax.dynamic_slice_in_dim(cache["block_table"], slot, 1, 0)
+    x = L.apply_embed(params["embed"], tokens)
+    pos = offset + jnp.arange(tokens.shape[1])[None, :]
+    first = frames is not None
+    if first:
+        enc_out = encode(params, cfg, frames)
+        xs_extra = ()
+    else:
+        ck_s = jax.lax.dynamic_slice_in_dim(cache["ck"], slot, 1, 1)
+        cv_s = jax.lax.dynamic_slice_in_dim(cache["cv"], slot, 1, 1)
+        xs_extra = (ck_s, cv_s)
+
+    def scan_step(x, bpkv):
+        bp, kp, vp = bpkv[:3]
+        h, (kp, vp) = L.apply_attention_chunk(
+            bp["self_attn"], cfg, L.rms_norm(x, bp["ln1"]),
+            kv_pools=(kp, vp), block_row=row, offset=offset, span=span)
+        x = x + h
+        ckv = L.make_cross_kv(bp["cross_attn"], cfg, enc_out) if first \
+            else (bpkv[3], bpkv[4])
+        hc, _ = L.apply_attention(bp["cross_attn"], cfg,
+                                  L.rms_norm(x, bp["ln_x"]),
+                                  positions=pos, cross_kv=ckv)
+        x = x + hc
+        x = x + L.apply_mlp(bp["mlp"], cfg, L.rms_norm(x, bp["ln2"]))
+        ys = (kp, vp, ckv[0], ckv[1]) if first else (kp, vp)
+        return x, ys
+
+    _, ys = jax.lax.scan(
+        scan_step, x,
+        (params["decoder"], cache["k"], cache["v"]) + xs_extra)
+    cache = dict(cache, k=ys[0], v=ys[1],
+                 len=cache["len"].at[slot].set(new_len))
+    if first:
+        cache["ck"] = jax.lax.dynamic_update_slice(
+            cache["ck"], ys[2].astype(cache["ck"].dtype),
+            (0, slot, 0, 0, 0))
+        cache["cv"] = jax.lax.dynamic_update_slice(
+            cache["cv"], ys[3].astype(cache["cv"].dtype),
+            (0, slot, 0, 0, 0))
+    return cache
+
+
 def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
                 key: jax.Array):
     x = L.apply_embed(params["embed"], token[:, None])
@@ -210,9 +266,8 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     hidden = x[:, 0]
     head = params["head"]
     if "q" in head:
-        xi = jax.random.normal(
-            key, (cfg.mc_samples, hidden.shape[0], cfg.vocab_size),
-            jnp.float32)
+        xi = L.decode_head_noise(key, cache_len, cfg.mc_samples,
+                                 cfg.vocab_size)
         logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
     else:
         logits = L.head_logits_mean(head, hidden, cfg)[None]

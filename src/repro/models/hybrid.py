@@ -164,6 +164,65 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int):
     return x[:, -1], cache
 
 
+def prefill_chunk(params, cfg: ArchConfig, tokens: jax.Array, cache: dict,
+                  slot: jax.Array, offset: jax.Array, new_len: jax.Array,
+                  span: int, state: dict, finalize: bool):
+    """Chunked hybrid prefill step (see transformer.prefill_chunk).
+
+    Mamba state is NOT positional, so the per-layer (ssm, conv) states
+    of the in-flight prompt ride ENGINE-side in ``state`` (batch-1
+    leaves, zeros before the first chunk — a zero conv tail reproduces
+    the fresh path's left zero-pad exactly) and are written into the
+    cache only on the ``finalize`` chunk.  Chunks must be multiples of
+    ``cfg.ssm_chunk`` (exact tail allowed): the SSD block decomposition
+    then matches batch prefill block for block, and ``force_chunked``
+    keeps even a 1-token tail on the chunked form.  ``span`` is the
+    EXACT prompt length — hybrid prompts are never padded (junk tokens
+    would pollute the recurrent state)."""
+    A = n_attn_apps(cfg)
+    sp = params["shared"]
+    row = jax.lax.dynamic_slice_in_dim(cache["block_table"], slot, 1, 0)
+    x = L.apply_embed(params["embed"], tokens)
+    new_k, new_v, new_h, new_c = [], [], [], []
+    for a in range(A):
+        lo = a * cfg.attn_every
+        hi = min(lo + cfg.attn_every, cfg.num_layers)
+        h_att, (kp, vp) = L.apply_attention_chunk(
+            sp["attn"], cfg, L.rms_norm(x, sp["ln1"]),
+            kv_pools=(cache["attn_k"][a], cache["attn_v"][a]),
+            block_row=row, offset=offset, span=span)
+        x = x + h_att
+        x = x + L.apply_mlp(sp["mlp"], cfg, L.rms_norm(x, sp["ln2"]))
+        new_k.append(kp)
+        new_v.append(vp)
+        grp = jax.tree.map(lambda p: p[lo:hi], params["blocks"])
+        hgrp = state["ssm"][lo:hi]
+        cgrp = state["conv"][lo:hi]
+
+        def scan_step(x, bpstate):
+            bp, h, c = bpstate
+            y, h2, c2 = S.apply_block(bp, cfg, x, ssm_state=h,
+                                      conv_state=c, force_chunked=True)
+            return y, (h2, c2)
+
+        x, (h2, c2) = jax.lax.scan(scan_step, x, (grp, hgrp, cgrp))
+        new_h.append(h2)
+        new_c.append(c2)
+    state = {"ssm": jnp.concatenate(new_h, 0),
+             "conv": jnp.concatenate(new_c, 0)}
+    cache = dict(cache, attn_k=jnp.stack(new_k),
+                 attn_v=jnp.stack(new_v),
+                 len=cache["len"].at[slot].set(new_len))
+    if finalize:
+        cache["ssm"] = jax.lax.dynamic_update_slice(
+            cache["ssm"], state["ssm"].astype(cache["ssm"].dtype),
+            (0, slot, 0, 0, 0))
+        cache["conv"] = jax.lax.dynamic_update_slice(
+            cache["conv"], state["conv"].astype(cache["conv"].dtype),
+            (0, slot, 0, 0))
+    return cache, state
+
+
 def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
                 key: jax.Array):
     x = L.apply_embed(params["embed"], token[:, None])
@@ -202,9 +261,8 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     hidden = x[:, 0]
     head = params["head"]
     if "q" in head:
-        xi = jax.random.normal(
-            key, (cfg.mc_samples, hidden.shape[0], cfg.vocab_size),
-            jnp.float32)
+        xi = L.decode_head_noise(key, cache_len, cfg.mc_samples,
+                                 cfg.vocab_size)
         logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
     else:
         logits = L.head_logits_mean(head, hidden, cfg)[None]

@@ -474,6 +474,70 @@ def apply_attention_suffix(p, cfg: ArchConfig, x: jax.Array, *,
     return _mm(out, p["wo"]), (k, v)
 
 
+def apply_attention_chunk(p, cfg: ArchConfig, x: jax.Array, *,
+                          kv_pools: tuple, block_row: jax.Array,
+                          offset: jax.Array, span: int):
+    """Chunked-prefill attention for ONE slot against its paged KV pool.
+
+    x: (1, S, d) hidden states of a prompt chunk occupying absolute
+    positions ``offset + [0, S)``; ``kv_pools``: (k, v) block pools
+    (NB, BS, Hkv, D); ``block_row``: (1, MB) the slot's table row;
+    ``offset``: TRACED int32 scalar (chunk progress is data, not shape);
+    ``span``: STATIC token extent of the whole prompt's attention
+    reduction — the bucketed width W for padding-safe families, the
+    exact prompt length for exact-extent ones.
+
+    The chunk's K/V are scattered into the pool FIRST, then the strip is
+    read back over ``span`` tokens and attended with the same
+    ``flash_attention`` (or the multi-query block-sparse kernel when
+    ``cfg.decode_attn == 'kernel'``) the batch prefill uses.
+
+    BIT-EXACTNESS vs batch prefill: every chunk reduces over the SAME
+    static extent ``span`` that the batch path uses for the whole
+    prompt, with not-yet-written positions causally masked — masked
+    positions contribute exact zeros regardless of the junk they hold,
+    and equal reduction extents keep XLA's k-axis sum association
+    identical (see ``apply_attention_suffix``).  Q rows are independent,
+    so splitting them across chunks is free.  Tested bitwise in
+    tests/test_chunked_prefill.py.
+    """
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _mm(x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, S, H, hd)
+    k = _mm(x, p["wk"])
+    v = _mm(x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    positions = offset + jnp.arange(S)[None, :]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    kc, vc = kv_pools
+    lens = jnp.broadcast_to(jnp.reshape(offset, (-1,)), (B,))
+    kc = paged_scatter(kc, block_row, lens, k)
+    vc = paged_scatter(vc, block_row, lens, v)
+    BS = kc.shape[1]
+    nb = -(-span // BS)
+    if cfg.decode_attn == "kernel":
+        from repro.kernels.ops import paged_prefill_attention
+        out = paged_prefill_attention(q, kc, vc, block_row[:, :nb],
+                                      offset, span=span,
+                                      kv_chunk=cfg.attn_kv_chunk)
+    else:
+        ks = paged_gather(kc, block_row[:, :nb])[:, :span]
+        vs = paged_gather(vc, block_row[:, :nb])[:, :span]
+        out = flash_attention(q, ks, vs, causal=True,
+                              q_chunk=cfg.attn_q_chunk,
+                              kv_chunk=cfg.attn_kv_chunk,
+                              q_offset=offset)
+    out = out.reshape(B, S, H * hd)
+    return _mm(out, p["wo"]), (kc, vc)
+
+
 def make_cross_kv(p, cfg: ArchConfig, enc_out: jax.Array):
     """Precompute cross-attention K/V from encoder output (no RoPE)."""
     B, S, _ = enc_out.shape
@@ -547,6 +611,32 @@ def head_logits_mean(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
         c = cfg.logits_softcap
         logits = c * jnp.tanh(logits / c)
     return logits
+
+
+def decode_head_noise(key: jax.Array, cache_len: jax.Array,
+                      num_samples: int, vocab: int) -> jax.Array:
+    """Per-(slot, depth) operand noise for the Bayesian decode head.
+
+    Returns an (S, B, V) f32 xi tensor where column b is drawn from
+    ``fold_in(fold_in(key, b), cache_len[b])`` — slot index and the
+    slot's own token depth, NOT the engine's global step.  A slot's
+    noise stream is therefore a function of its position alone: two
+    schedules that reach the same (slot, depth) through different
+    global interleavings (batch vs chunked prefill, a slot paused on a
+    block-grant shortfall, different ``--chunk`` sizes) draw identical
+    variates, which is what keeps the engine's decode streams bit-exact
+    across scheduling policies (tests/test_serve.py,
+    tests/test_chunked_prefill.py).
+    """
+    depths = jnp.broadcast_to(jnp.reshape(cache_len, (-1,)).astype(
+        jnp.int32), (cache_len.shape[0] if cache_len.ndim else 1,))
+    slots = jnp.arange(depths.shape[0], dtype=jnp.int32)
+
+    def one(slot, depth):
+        kb = jax.random.fold_in(jax.random.fold_in(key, slot), depth)
+        return jax.random.normal(kb, (num_samples, vocab), jnp.float32)
+
+    return jax.vmap(one, in_axes=(0, 0), out_axes=1)(slots, depths)
 
 
 def head_logits_sampled(p, x: jax.Array, cfg: ArchConfig,

@@ -120,7 +120,9 @@ def _dispatch_groups(cfg: ArchConfig, total_tokens: int) -> int:
     return max(g, 1)
 
 
-def moe_ffn(bp, cfg: ArchConfig, x: jax.Array):
+def moe_ffn(bp, cfg: ArchConfig, x: jax.Array,
+            expert_offsets: Optional[jax.Array] = None,
+            capacity: Optional[int] = None):
     """x: (B, S, d) -> (y, aux_loss). Top-k capacity dispatch.
 
     Grouped dispatch (perf iteration 1, EXPERIMENTS.md §Perf/grok):
@@ -128,13 +130,23 @@ def moe_ffn(bp, cfg: ArchConfig, x: jax.Array):
     aligns with the DP sharding of the batch, so the scatter/gather is
     LOCAL to each data shard (the naive global (E, C, d) buffer forced
     GSPMD to all-reduce a replicated 32 GB scatter per layer).
+
+    ``expert_offsets`` (E,) f32 + ``capacity`` enable CHUNKED prefill:
+    the caller threads each expert's running assignment count across
+    chunks and fixes C to the value the full prompt would compute, so a
+    token's keep/drop decision is made against its GLOBAL queue position
+    — identical to the one batch dispatch over the whole prompt (counts
+    are small integers, exact in f32).  When set, the return gains a
+    third element: the updated offsets (counts include dropped
+    assignments, matching the batch cumsum).  G must be 1 in this mode.
     """
     B, S, d = x.shape
     Tn = B * S
     E, K = cfg.num_experts, cfg.top_k
-    G = _dispatch_groups(cfg, Tn)
+    G = _dispatch_groups(cfg, Tn) if expert_offsets is None else 1
     Tg = Tn // G
-    C = max(int(Tg * K / E * cfg.capacity_factor), 8)
+    C = capacity if capacity is not None else \
+        max(int(Tg * K / E * cfg.capacity_factor), 8)
     xg = x.reshape(G, Tg, d)                                   # B-major
     xg = constrain(xg, "batch", None, None)
 
@@ -154,7 +166,13 @@ def moe_ffn(bp, cfg: ArchConfig, x: jax.Array):
     oh_flat = onehot.reshape(G, Tg * K, E)
     pos = jnp.sum((jnp.cumsum(oh_flat, axis=1) - 1.0) * oh_flat,
                   axis=-1).reshape(G, Tg, K)
-    keep = pos < C                                             # capacity
+    if expert_offsets is None:
+        keep = pos < C                                         # capacity
+    else:
+        # global queue position = carried count + local position; the
+        # local position still indexes the scatter buffer (it is < C
+        # whenever keep, since offsets >= 0)
+        keep = (pos + expert_offsets[topi]) < C
     eid = topi.reshape(G, Tg * K)
     cid = jnp.where(keep, pos, C).reshape(G, Tg * K).astype(jnp.int32)
 
@@ -189,6 +207,9 @@ def moe_ffn(bp, cfg: ArchConfig, x: jax.Array):
                              xg.reshape(1, Tn, d),
                              (cfg.num_shared_experts, Tn, d)))
         y = y + sh.sum(0).reshape(G, Tg, d)
+    if expert_offsets is not None:
+        return (y.reshape(B, S, d), aux,
+                expert_offsets + oh_flat[0].sum(axis=0))
     return y.reshape(B, S, d), aux
 
 
@@ -301,6 +322,39 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int):
                       "len": jnp.full((tokens.shape[0],), S, jnp.int32)}
 
 
+def prefill_chunk(params, cfg: ArchConfig, tokens: jax.Array, cache: dict,
+                  slot: jax.Array, offset: jax.Array, new_len: jax.Array,
+                  span: int, expert_offsets: jax.Array):
+    """Chunked MoE prefill step (see transformer.prefill_chunk).
+
+    ``expert_offsets``: (L, E) f32 per-layer running expert assignment
+    counts, threaded by the engine across chunks so capacity drops match
+    the single batch dispatch bit for bit; the capacity itself is pinned
+    to what the full ``span``-token prompt computes.  Returns
+    (cache, new_expert_offsets)."""
+    E, K = cfg.num_experts, cfg.top_k
+    C = max(int(span * K / E * cfg.capacity_factor), 8)
+    row = jax.lax.dynamic_slice_in_dim(cache["block_table"], slot, 1, 0)
+    x = L.apply_embed(params["embed"], tokens)
+
+    def scan_step(x, bpkv):
+        bp, kp, vp, off = bpkv
+        h, (kp, vp) = L.apply_attention_chunk(
+            bp["attn"], cfg, L.rms_norm(x, bp["ln1"]),
+            kv_pools=(kp, vp), block_row=row, offset=offset, span=span)
+        x = x + h
+        y, _, off2 = moe_ffn(bp, cfg, L.rms_norm(x, bp["ln2"]),
+                             expert_offsets=off, capacity=C)
+        return x + y, (kp, vp, off2)
+
+    _, (kps, vps, offs) = jax.lax.scan(
+        scan_step, x,
+        (params["blocks"], cache["k"], cache["v"], expert_offsets))
+    cache = dict(cache, k=kps, v=vps,
+                 len=cache["len"].at[slot].set(new_len))
+    return cache, offs
+
+
 def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
                 key: jax.Array):
     x = L.apply_embed(params["embed"], token[:, None])
@@ -325,9 +379,8 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     hidden = x[:, 0]
     head = params["head"]
     if "q" in head:
-        xi = jax.random.normal(
-            key, (cfg.mc_samples, hidden.shape[0], cfg.vocab_size),
-            jnp.float32)
+        xi = L.decode_head_noise(key, cache_len, cfg.mc_samples,
+                                 cfg.vocab_size)
         logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
     else:
         logits = L.head_logits_mean(head, hidden, cfg)[None]

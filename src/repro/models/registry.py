@@ -107,6 +107,49 @@ def supports_paged(cfg: ArchConfig) -> bool:
     return cfg.family != "ssm"
 
 
+def supports_prompt_padding(cfg: ArchConfig) -> bool:
+    """Whether a prompt may be right-padded with junk tokens at prefill.
+
+    Attention-only prompt state is positional: junk rows past the true
+    prompt end are causally invisible to real rows, masked below
+    ``len`` at decode, and overwritten by the first decode writes — so
+    the engine can bucket prompt lengths to ``kv_block`` multiples and
+    bound prefill recompiles.  Recurrent families (``ssm``, ``hybrid``)
+    would fold the junk tokens into their SSM/conv state, so they keep
+    exact-length prefill.
+    """
+    return cfg.family in ("dense", "vlm", "moe", "encdec", "audio")
+
+
+def supports_chunked_prefill(cfg: ArchConfig) -> bool:
+    """Whether the family implements ``prefill_chunk`` (incremental
+    prompt processing against the paged pool).  Requires the paged
+    layout — chunks scatter straight into pool blocks.  ``vlm``/
+    ``audio`` prompts splice modality embeddings into mid-prompt
+    positions, which the chunk walker does not slice yet; they fall
+    back to batch prefill.
+    """
+    return supports_paged(cfg) and cfg.family in ("dense", "moe",
+                                                  "hybrid", "encdec")
+
+
+def prefill_chunk(params, cfg: ArchConfig, tokens, cache, slot, offset,
+                  new_len, span: int, **kw):
+    """One incremental prefill chunk for ``slot`` (paged layout only).
+
+    tokens: (1, S) chunk at absolute positions ``offset + [0, S)``;
+    ``span``: static attention-reduction extent of the whole prompt.
+    Family-specific keywords: ``expert_offsets`` (moe, returns
+    ``(cache, new_offsets)``), ``state``/``finalize`` (hybrid, returns
+    ``(cache, new_state)``), ``frames`` (encdec first chunk).  See
+    ``supports_chunked_prefill`` for the dispatch gate."""
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(f"family {cfg.family!r} has no chunked prefill")
+    return module_for(cfg).prefill_chunk(params, cfg, tokens, cache,
+                                         slot, offset, new_len, span,
+                                         **kw)
+
+
 def supports_prefix_cache(cfg: ArchConfig) -> bool:
     """Whether prompt KV can be shared across requests by token prefix.
 

@@ -82,7 +82,13 @@ def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int,
     """
     Bsz, S, H, P = x.shape
     N = Bm.shape[-1]
-    Q = min(chunk, S)
+    # Q is ALWAYS the configured chunk (not min(chunk, S)): a sequence
+    # shorter than one chunk pads up exactly like the tail block of a
+    # longer sequence, so any S decomposes into the same per-block
+    # reductions — what lets chunked prefill (pc % ssm_chunk == 0)
+    # thread h0 through and reproduce batch prefill bit for bit.
+    # Padded positions carry dt == 0 and contribute exact zeros.
+    Q = chunk
     pad = (-S) % Q
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
@@ -167,8 +173,16 @@ def _causal_conv(u, w, b):
 
 
 def apply_block(bp, cfg: ArchConfig, x: jax.Array,
-                ssm_state=None, conv_state=None):
-    """x: (B, S, d). If states given, runs recurrent single/few-step mode."""
+                ssm_state=None, conv_state=None,
+                force_chunked: bool = False):
+    """x: (B, S, d). If states given, runs recurrent single/few-step mode.
+
+    ``force_chunked`` keeps S == 1 inputs on the ``ssd_chunked`` path
+    instead of the one-token recurrence: the two associate their f32
+    reductions differently, so chunked prefill (whose tail chunk can be
+    a single token) forces the chunked form to stay bit-exact against
+    the batch prefill's block decomposition.  Decode proper keeps the
+    O(1) ``ssd_step``."""
     d_in, H, P, N = dims(cfg)
     u = L.rms_norm(x, bp["ln"], cfg.norm_eps)
     proj = L._mm(u, bp["in_proj"])
@@ -193,7 +207,7 @@ def apply_block(bp, cfg: ArchConfig, x: jax.Array,
 
     if ssm_state is None:
         y, h_last = ssd_chunked(xh, dt, A, B_, C_, bp["D"], cfg.ssm_chunk)
-    elif S == 1:
+    elif S == 1 and not force_chunked:
         h_last, y1 = ssd_step(ssm_state, xh[:, 0], dt[:, 0], A,
                               B_[:, 0].astype(jnp.float32),
                               C_[:, 0].astype(jnp.float32), bp["D"])
@@ -299,9 +313,8 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     hidden = x[:, 0]
     head = params["head"]
     if "q" in head:
-        xi = jax.random.normal(
-            key, (cfg.mc_samples, hidden.shape[0], cfg.vocab_size),
-            jnp.float32)
+        xi = L.decode_head_noise(key, cache["len"], cfg.mc_samples,
+                                 cfg.vocab_size)
         logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
     else:
         logits = L.head_logits_mean(head, hidden, cfg)[None]

@@ -260,6 +260,41 @@ def prefill_suffix(params, cfg: ArchConfig, tokens: jax.Array,
     return x[:, -1], {"k": k, "v": v, "len": lens}
 
 
+def prefill_chunk(params, cfg: ArchConfig, tokens: jax.Array, cache: dict,
+                  slot: jax.Array, offset: jax.Array, new_len: jax.Array,
+                  span: int):
+    """One chunk of an incremental (Sarathi-style) prompt prefill.
+
+    tokens: (1, S) chunk token IDs for absolute positions
+    ``offset + [0, S)`` of the slot's prompt (final chunks of
+    padding-safe families carry junk pads past the true prompt end —
+    causally masked, then overwritten by decode writes).  ``span``:
+    STATIC attention extent = the prompt's bucketed width W.  Writes the
+    chunk's per-layer K/V into the slot's pool blocks and pins the
+    slot's ``len`` to ``new_len`` (the true prefilled depth — this also
+    heals the +1/step drift that interleaved decode scans inflict on a
+    mid-prefill slot's len).  Hidden outputs are discarded: the engine
+    re-feeds the prompt's last token at activation, same as batch
+    prefill.  Bit-exact vs ``prefill`` on the same bucketed prompt
+    (tests/test_chunked_prefill.py)."""
+    row = jax.lax.dynamic_slice_in_dim(cache["block_table"], slot, 1, 0)
+    x = L.apply_embed(params["embed"], tokens)
+
+    def scan_step(x, bpkv):
+        bp, kp, vp = bpkv
+        h, (kp, vp) = L.apply_attention_chunk(
+            bp["attn"], cfg, L.rms_norm(x, bp["ln1"]),
+            kv_pools=(kp, vp), block_row=row, offset=offset, span=span)
+        x = x + h
+        x = x + L.apply_mlp(bp["mlp"], cfg, L.rms_norm(x, bp["ln2"]))
+        return x, (kp, vp)
+
+    _, (kps, vps) = jax.lax.scan(
+        scan_step, x, (params["blocks"], cache["k"], cache["v"]))
+    return dict(cache, k=kps, v=vps,
+                len=cache["len"].at[slot].set(new_len))
+
+
 def _decode_block(bp, cfg, x, kv, cache_len, block_table=None):
     """One layer of single-token decode; kv: dict k/v (B, S, Hkv, hd)
     strips, or (NB, BS, Hkv, hd) block pools when ``block_table`` is set
@@ -324,7 +359,7 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
                      "len": cache_len + 1}
         return outputs, new_cache
     if "q" in head:
-        xi = jax.random.normal(key, (S, B, cfg.vocab_size), jnp.float32)
+        xi = L.decode_head_noise(key, cache_len, S, cfg.vocab_size)
         logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
     else:
         logits = L.head_logits_mean(head, hidden, cfg)[None]

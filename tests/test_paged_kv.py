@@ -109,8 +109,9 @@ class TestPagedScheduler:
         row = s.block_tables[0]
         assert (row >= 0).sum() == 2         # ceil(6/4) mapped
         assert s.allocator.in_use == 2
-        # budget (ceil(14/4)=4) minus mapped is still reserved
-        assert s.allocator.available() == 8 - 4
+        # decode blocks are NOT reserved up front: only the prompt's two
+        # blocks leave the pool (the rest is a grant-time budget)
+        assert s.allocator.available() == 8 - 2
 
     def test_grant_is_incremental_and_budget_capped(self):
         s = _paged_sched()
