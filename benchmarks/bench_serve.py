@@ -75,6 +75,17 @@ rows stay distinguishable without per-row re-stamping).  Fields:
     cow_copies, warm_tok_per_s / cold_tok_per_s
   sample_fanout          S-identical-prompt row: same fields, plus
     samples (the MC fanout width)
+  mesh_scaling           sharded-runner row (subprocess: the forced
+                         4-device CPU mesh must be pinned before jax
+                         initializes):
+    mesh, devices          the --mesh shape and forced device count,
+    bitwise_equal          sharded stream == unsharded stream (operand
+                           mode; the serve-TP acceptance gate),
+    tok_per_s_1dev / tok_per_s_mesh / mesh_speedup
+                           steady-state decode rate unsharded vs
+                           sharded (indicative on CPU: forced host
+                           devices share the same cores, so the ratio
+                           measures collective overhead, not scaling)
   long_prompt            chunked-vs-batch prefill interleaving row:
     long_len / short_len / gen_len / prefill_chunk of the workload,
     batch_interarrival_p99_s / chunked_interarrival_p99_s   worst gap
@@ -90,7 +101,9 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
 import subprocess
+import sys
 from pathlib import Path
 
 import jax
@@ -121,6 +134,40 @@ def config_hash(cfg, **extra) -> str:
     payload = {"cfg": dataclasses.asdict(cfg), **extra}
     blob = json.dumps(payload, sort_keys=True, default=str)
     return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def mesh_scaling_row() -> dict:
+    """Sharded-runner decode rate + bit-exactness, via a SUBPROCESS.
+
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` must be set
+    before jax initializes and this process already holds a 1-device
+    jax, so the row is produced by ``launch.engine.mesh_check --bench``
+    in a fresh interpreter.  A parity failure fails the bench run: a
+    mesh that drifts from the unsharded stream must never publish a
+    throughput number.
+    """
+    repo = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(repo / "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.engine.mesh_check",
+         "--families", "dense", "--bench", "--json"],
+        capture_output=True, text=True, env=env, timeout=540, cwd=repo)
+    assert out.returncode == 0, \
+        f"mesh parity/bench failed:\n{out.stdout}{out.stderr}"
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    dense = rec["families"]["dense"]
+    return {
+        "mesh": rec["mesh"],
+        "devices": rec["mesh_devices"],
+        "arch": dense["arch"],
+        "bitwise_equal": dense["bitwise_equal"],
+        "gen_tokens": dense["gen_tokens"],
+        "tok_per_s_1dev": rec["tok_per_s_1dev"],
+        "tok_per_s_mesh": rec["tok_per_s_mesh"],
+        "mesh_speedup": rec["mesh_speedup"],
+    }
 
 
 def run(quick: bool = False) -> dict:
@@ -326,6 +373,7 @@ def run(quick: bool = False) -> dict:
             long_prompt=dict(short_len=lp_short, long_len=lp_long,
                              gen_len=lp_gen, kv_block=lp_block,
                              max_len=lp_max_len, prefill_chunk=32)),
+        "mesh_scaling": mesh_scaling_row(),
         "long_prompt": long_prompt,
         "prefix_shared_prompt": prefix_shared,
         "sample_fanout": fanout,
@@ -442,6 +490,16 @@ def main(quick: bool = False, json_path: str = "BENCH_serve.json"):
           f"chunked {lp['chunked_tok_per_s']:.1f}; "
           f"{lp['table_growths']} table growths, "
           f"{lp['prefill_chunks']} prefill chunks")
+    ms = r["mesh_scaling"]
+    print(f"  mesh scaling ({ms['mesh']} forced-host mesh, "
+          f"{ms['devices']} devices, {ms['arch']} reduced):")
+    print(f"    bitwise vs unsharded: "
+          f"{'OK' if ms['bitwise_equal'] else 'MISMATCH'} "
+          f"over {ms['gen_tokens']} tokens")
+    print(f"    decode tok/s: 1 dev {ms['tok_per_s_1dev']:.1f} vs mesh "
+          f"{ms['tok_per_s_mesh']:.1f} ({ms['mesh_speedup']:.2f}x; "
+          f"forced host devices share cores — collective overhead, "
+          f"not scaling)")
     print(f"  file stamped git {r['git_sha']}, "
           f"config {r['config_hash']}")
     if r["timings_indicative"]:

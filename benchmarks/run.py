@@ -11,26 +11,25 @@
                                       HBM traffic + fused-GEMM speedup,
                                       the CI perf-trajectory artifact)
   bench_serve        beyond-paper     continuous-batching scan-decode
-                                      engine vs per-token loop, plus a
-                                      mixed-length dense-vs-paged-KV
-                                      workload, a decode_attn row
-                                      (block-sparse kernel vs gather:
-                                      KV bytes read per decode step)
-                                      two prefix-cache rows —
-                                      shared-system-prompt and
-                                      S-sample-fanout — and a
-                                      long_prompt row (chunked vs
-                                      batch prefill interleaving:
-                                      decode-token inter-arrival p99
-                                      with a prompt outlier, plus
-                                      on-demand block-table growth)
-                                      (emits BENCH_serve.json: tok/s,
+                                      engine vs per-token loop (emits
+                                      BENCH_serve.json: tok/s,
                                       p50/p99/max request latency,
-                                      flags/1k tokens, peak KV bytes
-                                      paged vs dense, prefill tokens
-                                      saved + hit rate + CoW copies,
-                                      stamped once with git SHA +
-                                      config hash)
+                                      flags/1k tokens, stamped once
+                                      with git SHA + config hash), plus
+                                      one row per serving subsystem:
+    mixed                 mixed-length dense-vs-paged-KV workload
+                          (tok/s + peak resident KV bytes per layout)
+    decode_attn           block-sparse decode kernel vs gather
+                          (KV bytes read per decode step)
+    prefix_shared_prompt  shared-system-prompt radix-cache workload
+    sample_fanout         S-identical-prompt MC fanout workload
+                          (prefill tokens saved, hit rate, CoW copies)
+    long_prompt           chunked vs batch prefill interleaving
+                          (decode-token inter-arrival p99 with a
+                          prompt outlier + on-demand table growth)
+    mesh_scaling          --mesh sharded runner on a forced-host
+                          4-device CPU mesh (bitwise parity vs the
+                          unsharded engine + decode tok/s both ways)
   roofline           deliverable (g)  three-term roofline per dry-run cell
 """
 

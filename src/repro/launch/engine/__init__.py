@@ -1,0 +1,31 @@
+"""Layered serving-engine package.
+
+One layer per module, host-side policy strictly above device dispatch:
+
+  engine.py     -- ServeEngine: serving policy + the per-chunk loop
+  scheduler.py  -- Request / PrefixAdmit / SlotScheduler (admission,
+                   grants, preemption, block tables; numpy only)
+  block_pool.py -- BlockAllocator: refcounted KV block accounting
+  runner.py     -- ModelRunner: compiled callables + ALL device
+                   placement, incl. the --mesh tensor-parallel mode;
+                   decode_loop_reference (parity oracle / baseline)
+  stats.py      -- ServeStats: run counters + the results payload
+  mesh_check.py -- sharded-vs-unsharded parity + scaling CLI
+
+``launch.serve`` remains the CLI and the back-compat import surface;
+it re-exports everything below.
+"""
+
+from repro.launch.engine.block_pool import BlockAllocator
+from repro.launch.engine.engine import ServeEngine
+from repro.launch.engine.runner import (ModelRunner, decode_loop_reference,
+                                        resolve_mesh)
+from repro.launch.engine.scheduler import (PrefixAdmit, Request,
+                                           SlotScheduler)
+from repro.launch.engine.stats import ServeStats
+
+__all__ = [
+    "BlockAllocator", "ModelRunner", "PrefixAdmit", "Request",
+    "ServeEngine", "ServeStats", "SlotScheduler",
+    "decode_loop_reference", "resolve_mesh",
+]

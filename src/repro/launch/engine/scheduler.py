@@ -1,0 +1,335 @@
+"""Host-side request scheduling (the serving engine's admission layer).
+
+``Request`` is the unit of work, ``SlotScheduler`` maps queued requests
+onto fixed decode slots and — on the paged KV layout — owns the per-slot
+block tables over a ``block_pool.BlockAllocator``: admission, on-demand
+decode grants (tables WIDEN when a grant outruns them), LRU pressure
+eviction through the prefix cache, and preemption as the last resort.
+Everything here is plain Python + numpy; device work (prefill, CoW
+copies, table uploads) is the engine's job, driven by the records this
+layer produces.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.launch.engine.block_pool import BlockAllocator
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request plus its accumulated results."""
+
+    rid: int
+    prompt: np.ndarray                    # (S,) int32
+    max_new_tokens: int
+    t_submit: float = 0.0
+    t_finish: float = 0.0
+    finish_reason: str = ""
+    tokens: list = dataclasses.field(default_factory=list)
+    H: list = dataclasses.field(default_factory=list)
+    SE: list = dataclasses.field(default_factory=list)
+    MI: list = dataclasses.field(default_factory=list)
+    p_max: list = dataclasses.field(default_factory=list)
+    epistemic_flags: int = 0
+    aleatoric_flags: int = 0
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_finish - self.t_submit
+
+
+@dataclasses.dataclass
+class PrefixAdmit:
+    """Per-slot prefix-cache admission record the engine acts on.
+
+    ``tokens`` of the prompt are already resident in shared blocks
+    mapped read-only into the slot's table; prefill runs only on the
+    suffix.  ``cow`` is a pending ``(src, dst)`` device-side block copy:
+    the partially-matched tail block ``src`` stays referenced until the
+    engine copies it into ``dst`` (already swapped into the table) and
+    calls ``finish_cow``.
+    """
+
+    tokens: int
+    cow: Optional[tuple] = None
+
+
+class SlotScheduler:
+    """FIFO admission of queued requests into fixed decode slots.
+
+    Pure host-side bookkeeping (no jax): ``admit`` fills free slots in
+    slot order from the queue front, ``evict`` frees a slot for reuse.
+
+    With a ``BlockAllocator`` the scheduler also owns the paged-KV block
+    tables: admission switches from "is a slot free" to "are enough
+    blocks free" — the PROMPT's blocks plus a WATERMARK of free headroom
+    (``num_slots`` blocks by default, waived when no slot is running) so
+    in-flight decoders keep growing while the queue head defers (FIFO,
+    no skip-ahead).  ``grant`` maps decode blocks on demand as slots
+    deepen, capped at each request's ``prompt + max_new_tokens`` budget,
+    WIDENING the block tables when a grant outruns them (the table
+    width is a floor, not a ceiling); a grant the pool cannot cover
+    even after LRU-evicting unreferenced cached blocks returns None and
+    the engine preempts the slot (``preempt``: blocks released, request
+    requeued at the queue front).  ``evict`` returns every block.
+
+    With a ``prefix_cache`` (``launch.prefix_cache.RadixPrefixCache``)
+    admission first walks the radix tree: the matched prefix's blocks
+    are mapped into the slot's table shared (incref, read-only), only
+    the uncached span reserves fresh blocks, a token-granular partial
+    match allocates one extra block for the copy-on-write of the shared
+    tail, and eviction INSERTS the request's prompt blocks into the tree
+    (ownership transfers to the cache) before the slot's decref.  Under
+    pool pressure admission asks the cache to LRU-evict unreferenced
+    blocks before deferring.
+    """
+
+    def __init__(self, num_slots: int,
+                 allocator: Optional[BlockAllocator] = None,
+                 table_width: int = 0, prefix_cache=None,
+                 watermark: Optional[int] = None):
+        self.slots: list[Optional[Request]] = [None] * num_slots
+        self.queue: collections.deque[Request] = collections.deque()
+        self.allocator = allocator
+        self.prefix_cache = prefix_cache
+        # free-block headroom admission must leave for running decoders'
+        # on-demand grants (now that their budgets are no longer
+        # reserved up front); waived when nothing is running, so an
+        # empty engine admits exactly what fits
+        self.watermark = num_slots if watermark is None else watermark
+        self.table_growths = 0
+        if prefix_cache is not None and allocator is None:
+            raise ValueError("prefix cache requires a BlockAllocator")
+        if allocator is not None:
+            if table_width < 1:
+                raise ValueError("paged scheduling needs table_width "
+                                 "(initial blocks per slot)")
+            self.block_tables = np.full((num_slots, table_width), -1,
+                                        np.int32)
+            self._slot_blocks: list[list[int]] = \
+                [[] for _ in range(num_slots)]
+            # decode blocks still grantable per slot (budget, NOT an
+            # allocator reservation): blocks_for(prompt + max_new) minus
+            # what the slot already holds
+            self._slot_budget = [0] * num_slots
+            self._slot_prefix: list[Optional[PrefixAdmit]] = \
+                [None] * num_slots
+            self._slot_cow_src: list[Optional[int]] = [None] * num_slots
+            # bumped on every table mutation (admit/grant/evict) so the
+            # engine only re-uploads the device table when it changed
+            self.table_version = 0
+            self.table_growths = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _ensure_width(self, want: int) -> None:
+        """Widen the host block tables to hold ``want`` blocks per slot
+        (doubling, -1-padded).  The engine notices via table_version:
+        the device table re-uploads at the new shape and the decode
+        scan retraces once per growth."""
+        w = self.block_tables.shape[1]
+        if want <= w:
+            return
+        grown = np.full((len(self.slots), max(want, 2 * w)), -1, np.int32)
+        grown[:, :w] = self.block_tables
+        self.block_tables = grown
+        self.table_growths += 1
+        self.table_version += 1
+
+    def _try_reserve(self, need: int, protect: frozenset) -> bool:
+        """Reserve ``need`` blocks for an admission, LRU-evicting
+        cached-but-unreferenced blocks first when the pool is short
+        (``protect`` pins the hit being admitted).  On top of ``need``
+        the pool must keep ``watermark`` blocks free for running slots'
+        decode grants — waived when no slot is running (nothing to
+        starve, and the head request could otherwise never admit)."""
+        alloc = self.allocator
+        wm = self.watermark if any(r is not None for r in self.slots) \
+            else 0
+        short = need + wm - alloc.available()
+        if short > 0 and self.prefix_cache is not None:
+            self.prefix_cache.evict_lru(short, protect=protect)
+        if alloc.available() < need + wm:
+            return False
+        return alloc.reserve(need)
+
+    def _admit_paged(self, slot: int) -> Optional[Request]:
+        alloc = self.allocator
+        req = self.queue[0]
+        P = len(req.prompt)
+        nprompt = alloc.blocks_for(P)
+        # grant cap, NOT a reservation: decode blocks are drawn from the
+        # pool on demand, so admission only needs the prompt's blocks
+        total = alloc.blocks_for(P + req.max_new_tokens)
+        hit = self.prefix_cache.match(req.prompt) \
+            if self.prefix_cache is not None else None
+        if hit is not None and hit.tokens:
+            # uncached span + one extra block when the shared tail needs
+            # a copy-on-write duplicate before this slot writes into it
+            need = nprompt - len(hit.blocks) + (1 if hit.partial else 0)
+            if not self._try_reserve(need, frozenset(hit.blocks)):
+                # liveness: when no live slot will ever free a block
+                # (everything left is cache-held, pinned by this very
+                # hit), fall back to a cold admission rather than
+                # deadlocking on the hit's own protection
+                if alloc.in_use > self.prefix_cache.cached_blocks():
+                    return None           # a running slot will free some
+                hit = None
+        if hit is None or not hit.tokens:
+            if not self._try_reserve(nprompt, frozenset()):
+                return None               # pool exhausted: defer, FIFO
+            self.queue.popleft()
+            ids = alloc.alloc(nprompt)
+            if self.prefix_cache is not None:
+                self._slot_prefix[slot] = PrefixAdmit(tokens=0)
+        else:
+            self.queue.popleft()
+            self.prefix_cache.lock(hit)   # slot refs on shared blocks
+            ids = list(hit.blocks)
+            cow = None
+            if hit.partial:
+                [dst] = alloc.alloc(1)
+                cow = (ids[-1], dst)      # src stays ref'd: finish_cow
+                self._slot_cow_src[slot] = ids[-1]
+                ids[-1] = dst
+            ids += alloc.alloc(nprompt - len(hit.blocks))
+            self._slot_prefix[slot] = PrefixAdmit(tokens=hit.tokens,
+                                                  cow=cow)
+        self._slot_budget[slot] = total - nprompt
+        self._slot_blocks[slot] = ids
+        self._ensure_width(len(ids))
+        self.block_tables[slot, :] = -1
+        self.block_tables[slot, :len(ids)] = ids
+        self.table_version += 1
+        return req
+
+    def prefix_admit(self, slot: int) -> Optional[PrefixAdmit]:
+        """The slot's prefix-cache admission record (None when the cache
+        is off)."""
+        return self._slot_prefix[slot] if self.prefix_cache is not None \
+            else None
+
+    def finish_cow(self, slot: int) -> None:
+        """The engine copied the shared tail block device-side; release
+        this slot's reference on the source (the tree keeps its own)."""
+        src = self._slot_cow_src[slot]
+        if src is None:
+            raise ValueError(f"no pending CoW on slot {slot}")
+        self._slot_cow_src[slot] = None
+        self.allocator.free([src])
+
+    def admit(self) -> list[tuple[int, Request]]:
+        placed = []
+        for i, occupant in enumerate(self.slots):
+            if occupant is None and self.queue:
+                if self.allocator is not None:
+                    req = self._admit_paged(i)
+                    if req is None:
+                        break
+                else:
+                    req = self.queue.popleft()
+                self.slots[i] = req
+                placed.append((i, req))
+        return placed
+
+    def grant(self, slot: int, target_len: int) -> Optional[list[int]]:
+        """Map blocks so slot ``slot`` can hold ``target_len`` tokens.
+
+        Draws from the pool on demand, capped at the request's
+        ``prompt + max_new_tokens`` budget (junk steps a finished
+        request runs until its chunk boundary drop against the unmapped
+        tail instead of consuming pool) and widening the block tables
+        when the target outruns them.  Returns the granted ids ([] when
+        nothing is needed) or None when the pool cannot cover the
+        shortfall even after LRU-evicting cached-but-unreferenced
+        prefix blocks — the engine preempts the slot."""
+        alloc = self.allocator
+        have = len(self._slot_blocks[slot])
+        want = min(alloc.blocks_for(target_len),
+                   have + self._slot_budget[slot])
+        if want <= have:
+            return []
+        n = want - have
+        if alloc.available() < n and self.prefix_cache is not None:
+            # a cached-but-unreferenced prefix must never starve a
+            # running decoder (or livelock a deferred admission behind
+            # it): reclaim before giving up
+            self.prefix_cache.evict_lru(n - alloc.available(),
+                                        protect=frozenset())
+        if not alloc.reserve(n):
+            return None
+        ids = alloc.alloc(n)
+        self._slot_budget[slot] -= n
+        self._ensure_width(want)
+        self.block_tables[slot, have:want] = ids
+        self._slot_blocks[slot].extend(ids)
+        self.table_version += 1
+        return ids
+
+    def preempt(self, slot: int) -> Request:
+        """Evict a slot whose growth grant failed and requeue its
+        request at the queue FRONT (FIFO order preserved).  The caller
+        clears the request's accumulated output first — on readmission
+        it restarts from its prompt (depth-keyed decode noise replays
+        the aborted stream bit-exactly when it lands in the same
+        slot)."""
+        req = self.evict(slot)
+        self.queue.appendleft(req)
+        return req
+
+    def evict(self, slot: int) -> Request:
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"evict of empty slot {slot}")
+        self.slots[slot] = None
+        if self.allocator is not None:
+            if self.prefix_cache is not None:
+                # adopt the prompt's blocks into the radix tree BEFORE
+                # the slot lets go: chunks already cached share the
+                # existing nodes, fresh ones transfer to the cache
+                nprompt = self.allocator.blocks_for(len(req.prompt))
+                self.prefix_cache.insert(req.prompt,
+                                         self._slot_blocks[slot][:nprompt])
+                if self._slot_cow_src[slot] is not None:
+                    self.allocator.free([self._slot_cow_src[slot]])
+                    self._slot_cow_src[slot] = None
+                self._slot_prefix[slot] = None
+            self.allocator.free(self._slot_blocks[slot])
+            self._slot_blocks[slot] = []
+            self._slot_budget[slot] = 0
+            self.block_tables[slot, :] = -1
+            self.table_version += 1
+        return req
+
+    def pool_stats(self) -> dict:
+        """Queue depth + block-pool occupancy snapshot (free / reserved
+        / cached / in-use counts), so allocator behavior is observable
+        per chunk without a debugger."""
+        out = {"queue_depth": len(self.queue),
+               "active_slots": sum(r is not None for r in self.slots)}
+        if self.allocator is not None:
+            a = self.allocator
+            out.update(
+                blocks_free=len(a._free), blocks_reserved=a._reserved,
+                blocks_in_use=a.in_use,
+                blocks_cached=(self.prefix_cache.cached_blocks()
+                               if self.prefix_cache is not None else 0))
+        return out
+
+    def mapped_blocks(self, slot: int) -> int:
+        """Physical blocks currently mapped into the slot's table (what
+        the block-sparse decode kernel can actually read)."""
+        return len(self._slot_blocks[slot])
+
+    def active(self) -> list[tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)

@@ -1,0 +1,209 @@
+"""Per-run serving telemetry (the engine's observability layer).
+
+``ServeStats`` owns every counter the engine run accumulates — prefill
+compile-vs-steady classification, prefix-cache hit accounting, the
+decode-attention HBM block tally, the downsampled scheduler trace,
+decode-chunk arrival timestamps — and builds the results dict
+``ServeEngine.run`` returns.  Pure host-side: nothing here touches jax
+beyond ``device_flag_counters`` reading back the scan carry the engine
+hands it.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.models import registry as M
+
+
+class ServeStats:
+    """Counters for one ``ServeEngine.run`` + the results-dict builder.
+
+    The engine mutates the counter attributes directly inside its chunk
+    loop (they are the same names the monolithic loop used as locals);
+    ``classify`` splits each prefill dispatch into compile-vs-steady by
+    whether its shape key was seen before, ``trace`` appends the
+    scheduler/pool snapshot every ``trace_every``-th chunk, and
+    ``results`` assembles the full metrics payload.
+    """
+
+    def __init__(self, *, trace_every: int):
+        self.trace_every = trace_every
+        self.t_start = time.perf_counter()
+        self.decode_s = 0.0
+        # the jitted prefill compiles once per distinct prompt length
+        # (suffix prefill: per distinct suffix length); classify each
+        # admission's time accordingly so mixed-length traffic doesn't
+        # launder recompiles into the steady-state stat
+        self.compile_times: list[float] = []
+        self.steady_times: list[float] = []
+        self.seen_prefill_shapes: set[tuple] = set()
+        # prefix-cache counters + per-chunk scheduler/pool trace
+        self.pc_hits = self.pc_misses = self.pc_cow = 0
+        self.pc_tokens = self.pc_saved = 0
+        self.sched_trace: list[dict] = []
+        self.chunks_run = 0
+        # decode-attention HBM accounting (paged): physical KV blocks the
+        # selected read path touches per decode step vs the full logical
+        # span the gather path materializes (kernel skip rule in host
+        # arithmetic, kernels.paged_attention.kv_blocks_read)
+        self.attn_blocks_read = 0
+        self.attn_blocks_span = 0
+        self.prefill_chunks = 0
+        self.preemptions = 0
+        # decode-token inter-arrival: one timestamp per scan that served
+        # at least one decoding slot — the stall a long batch prefill
+        # injects between consecutive chunks is exactly what chunked
+        # prefill bounds (decode_interarrival_p99_s)
+        self.arrivals: list[float] = []
+
+    def classify(self, shape_key: tuple, dt: float) -> None:
+        if shape_key in self.seen_prefill_shapes:
+            self.steady_times.append(dt)
+        else:
+            self.seen_prefill_shapes.add(shape_key)
+            self.compile_times.append(dt)
+
+    def record_admission(self, prompt_len: int, hit_len: int) -> None:
+        """Prefix-cache hit accounting for one paged admission."""
+        self.pc_hits += bool(hit_len)
+        self.pc_misses += not hit_len
+        self.pc_tokens += prompt_len
+        self.pc_saved += hit_len
+
+    def trace(self, sched) -> None:
+        """Downsampled pool/queue snapshot: a long run would otherwise
+        grow host memory (and the results payload) by one dict per
+        chunk, unbounded."""
+        if self.chunks_run % self.trace_every == 0:
+            self.sched_trace.append(sched.pool_stats())
+
+    def results(self, engine, requests, *, sched, alloc, pcache, cache,
+                flags) -> dict:
+        """Assemble the engine metrics payload from the run's counters
+        plus the terminal scheduler / allocator / cache state."""
+        paged = engine.kv_layout == "paged"
+        total_s = time.perf_counter() - self.t_start
+        gen_tokens = sum(len(r.tokens) for r in requests)
+        # KV residency accounting: dense permanently owns num_slots
+        # strips of max_len; paged owns only the blocks actually mapped
+        # (peak over the run), which is what mixed-length traffic saves
+        kv_alloc_bytes = M.kv_bytes(cache)
+        if paged:
+            token_bytes = kv_alloc_bytes / (engine.kv_blocks
+                                            * engine.kv_block)
+            block_bytes = kv_alloc_bytes // engine.kv_blocks
+            kv_stats = {
+                "layout": "paged",
+                "block_tokens": engine.kv_block,
+                "blocks_total": engine.kv_blocks,
+                "blocks_peak": alloc.peak_in_use,
+                "bytes_in_use_peak": alloc.peak_in_use * block_bytes,
+                "bytes_dense_equiv": int(token_bytes * engine.num_slots
+                                         * engine.max_len),
+            }
+        else:
+            kv_stats = {
+                "layout": "dense",
+                "bytes_in_use_peak": kv_alloc_bytes,
+                "bytes_dense_equiv": kv_alloc_bytes,
+            }
+        # block-sparse decode attention accounting: KV bytes the selected
+        # read path pulls from HBM per decode step vs the full logical
+        # span (what gather materializes regardless of residency)
+        steps_run = self.chunks_run * engine.chunk
+        if paged:
+            read_blocks = self.attn_blocks_read \
+                if engine.decode_attn == "kernel" else self.attn_blocks_span
+            decode_attn_stats = {
+                "mode": engine.decode_attn,
+                "kv_bytes_read_per_step": read_blocks * block_bytes
+                / max(steps_run, 1),
+                "kv_bytes_span_per_step": self.attn_blocks_span
+                * block_bytes / max(steps_run, 1),
+                "kv_blocks_read": read_blocks,
+                "kv_blocks_span": self.attn_blocks_span,
+            }
+        else:
+            decode_attn_stats = {"mode": "gather"}
+        lat = np.array([r.latency_s for r in requests]) if requests \
+            else np.zeros((1,))
+        epi = sum(r.epistemic_flags for r in requests)
+        alea = sum(r.aleatoric_flags for r in requests)
+        return {
+            "requests": requests,
+            "num_requests": len(requests),
+            "gen_tokens": gen_tokens,
+            "total_s": total_s,
+            "decode_s": self.decode_s,
+            # first prefill per prompt length includes compilation; the
+            # rest are steady-state dispatch
+            "prefill_compile_s": float(np.sum(self.compile_times)),
+            "prefill_steady_s": float(np.mean(self.steady_times))
+            if self.steady_times else 0.0,
+            "decode_tok_per_s": gen_tokens / max(self.decode_s, 1e-9),
+            "e2e_tok_per_s": gen_tokens / max(total_s, 1e-9),
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            # nearest-rank (no interpolation): at small N a linear-
+            # interpolated p99 fabricates a tail latency no request
+            # experienced; "higher" reports a latency that actually
+            # happened (= max below 100 requests)
+            "latency_p99_s": float(np.percentile(lat, 99,
+                                                 method="higher")),
+            "latency_max_s": float(lat.max()),
+            "kv": kv_stats,
+            # block-sparse decode kernel vs gather HBM traffic
+            "decode_attn": decode_attn_stats,
+            # radix prefix cache over the paged pool: zero-compute hit
+            # spans, CoW divergence copies, LRU pressure evictions
+            "prefix_cache": {
+                "enabled": engine.prefix_cache,
+                "hits": self.pc_hits,
+                "misses": self.pc_misses,
+                "hit_rate": self.pc_hits / max(self.pc_hits
+                                               + self.pc_misses, 1),
+                "prompt_tokens": self.pc_tokens,
+                "prompt_tokens_saved": self.pc_saved,
+                "saved_frac": self.pc_saved / max(self.pc_tokens, 1),
+                "cow_copies": self.pc_cow,
+                "cache_evictions": pcache.evictions if pcache else 0,
+                "blocks_cached_end": (pcache.cached_blocks()
+                                      if pcache else 0),
+            },
+            # scheduler snapshot (queue depth + pool occupancy) every
+            # trace_every chunks — downsampled so long runs don't grow
+            # host memory linearly in chunks decoded
+            "sched_trace": self.sched_trace,
+            "sched_trace_every": self.trace_every,
+            "chunks_run": self.chunks_run,
+            # chunked-prefill / growable-table telemetry
+            "prefill_mode": engine.prefill_mode,
+            "prefill_chunk": engine.prefill_chunk,
+            "prefill_chunks": self.prefill_chunks,
+            # distinct prefill/chunk shapes traced (bucketing collapses
+            # per-prompt-length recompiles to one per kv_block bucket)
+            "prefill_compiles": len(self.seen_prefill_shapes),
+            "table_growths": sched.table_growths,
+            "preemptions": self.preemptions,
+            # worst gap between consecutive decode-serving scans: the
+            # stall a monolithic batch prefill injects mid-stream, which
+            # interleaved chunked prefill bounds at ~one chunk's compute
+            "decode_interarrival_p99_s": float(np.percentile(
+                np.diff(self.arrivals), 99, method="higher"))
+            if len(self.arrivals) >= 2 else 0.0,
+            "epistemic_flags": int(epi),
+            "aleatoric_flags": int(alea),
+            "flags_per_1k_tokens": {
+                "epistemic": 1000.0 * epi / max(gen_tokens, 1),
+                "aleatoric": 1000.0 * alea / max(gen_tokens, 1),
+            },
+            # device-side telemetry from the scan carry: per-slot totals a
+            # pure-device driver could read without syncing ys.  Upper-
+            # bounds the exact host accounting above (a request finishing
+            # mid-chunk keeps counting until its chunk boundary).
+            "device_flag_counters": {
+                k: np.asarray(v).tolist() for k, v in flags.items()
+            },
+        }

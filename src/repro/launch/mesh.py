@@ -29,7 +29,23 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_debug_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
-    """Small mesh over whatever devices exist (tests / examples)."""
+    """Small mesh over whatever devices exist (tests / examples).
+
+    ``jax.make_mesh`` requires the shape to tile the device count
+    exactly and raises from deep inside device assignment otherwise
+    (e.g. the default (2, 2) on a 1-CPU test process).  When it
+    doesn't, fall back to a 1D ``("model",)`` mesh over every
+    available device — callers get a working mesh whose axis names
+    the sharding rules still understand, and divisibility-aware specs
+    (``spec_if`` / ``sanitize_pspecs``) degrade to replication
+    exactly as they would on the requested shape.
+    """
+    n = len(jax.devices())
+    want = 1
+    for s in shape:
+        want *= s
+    if want != n:
+        return jax.make_mesh((n,), ("model",))
     return jax.make_mesh(shape, axes)
 
 

@@ -1,80 +1,43 @@
-"""Continuous-batching uncertainty serving engine.
+"""Continuous-batching uncertainty serving engine — CLI + import surface.
 
 The deployment analog of the paper's high-throughput trustworthy
 inference: a queue of requests is served through a fixed set of decode
-slots over one slot-indexed KV cache.  A host-side ``SlotScheduler``
-admits queued requests into free slots (batch-1 jitted prefill written
-into the slot at its own offset), the inner decode loop is a
-``jax.lax.scan`` that generates ``--chunk`` tokens per device call --
-carrying the (H, SE, MI) uncertainty triplet and the epistemic/aleatoric
-gating flags in the scan carry, one host sync per chunk instead of one
-per token -- and slots are evicted on EOS / max-new-tokens and refilled
-from the queue.
+slots over one slot-indexed KV cache, decoding ``--chunk`` tokens per
+device call with the (H, SE, MI) uncertainty triplet and the
+epistemic/aleatoric gating flags in the scan carry — one host sync per
+chunk instead of one per token.
 
-Each decode step draws ``cfg.mc_samples`` (paper: N=10) samples of the
-Bayesian output head -- fused in the uncertainty-head kernel on TPU,
-jnp-LRT elsewhere.  Tokens whose MI exceeds ``--mi-threshold`` are
-flagged epistemic (the LM analog of the paper's OOD rejection);
-high-SE/low-MI tokens are flagged aleatoric (ambiguous continuation).
+The engine itself lives in the layered ``launch.engine`` package (one
+module per concern; see its __init__ docstring and
+docs/architecture.md):
 
-The pre-engine per-token loop survives as ``decode_loop_reference`` --
-the parity oracle (scan decode replays its token stream exactly in
-operand-entropy mode for requests admitted at engine start; requests
-admitted later draw from the engine's global step stream, so replaying
-them needs the same step offset) and the benchmark baseline that
-``benchmarks/bench_serve.py`` measures the engine against.
+  engine.ServeEngine        policy + the per-chunk serve loop
+  engine.SlotScheduler      admission / grants / preemption (host numpy)
+  engine.BlockAllocator     refcounted paged-KV block pool accounting
+  engine.ModelRunner        compiled callables + ALL device placement
+  engine.ServeStats         run counters + the metrics payload
 
-KV layout: ``--kv-layout dense`` (the reference) gives each slot one
-contiguous ``max_len`` strip; ``--kv-layout paged`` backs the
-self-attention KV with a global pool of ``--kv-block``-token blocks
-managed by the host-side ``BlockAllocator`` (free list, per-slot block
-tables, whole-request budget reserved at admission, blocks granted
-chunk by chunk, full release on eviction).  Admission then asks "are
-enough blocks free" instead of "is a slot free", so mixed prompt/gen
-lengths stop paying ``num_slots * max_len`` padding waste; pool
-exhaustion defers the queue head instead of crashing.  The paged path
-is bit-exact against dense in operand-entropy mode (tested in
-tests/test_paged_kv.py).
+This module keeps the historical import surface (``from
+repro.launch.serve import ServeEngine, SlotScheduler, BlockAllocator,
+Request, decode_loop_reference`` all still work) and the CLI.
 
-``--prefix-cache on`` (paged only) adds the copy-on-write radix prefix
-cache (``launch.prefix_cache``): admission walks a host-side radix tree
-of cached token prefixes, maps the hit's refcounted blocks into the
-slot's table read-only, prefills only the uncached suffix (zero prefill
-compute on a full-prompt hit), and copies a shared block device-side
-when a slot would scatter into it (CoW at the divergence point).
-Prefix-hit decode is bit-exact vs the cold path in operand mode
-(tests/test_prefix_cache.py).
+Serving features (each with its bit-exact reference; see docs/serving.md):
+``--kv-layout paged`` blocks the self-attention KV behind per-slot
+block tables (dense is the reference); ``--prefix-cache on`` adds the
+copy-on-write radix prefix cache over the pool; ``--decode-attn
+kernel`` swaps the decode read path to the block-sparse Pallas kernel
+(gather is the reference); ``--prefill chunked`` interleaves
+Sarathi-style prompt chunks with running decode (batch is the
+reference); block tables GROW on demand and exhausted grants preempt.
 
-``--decode-attn kernel`` (paged only) swaps the decode-attention read
-path from gather-the-whole-logical-span to the block-sparse Pallas
-kernel (``kernels/paged_attention.py``), which reads K/V straight from
-the block pool through the per-slot table — per-step HBM reads scale
-with the tokens actually cached instead of ``MB*BS``.  Gather stays the
-bit-exact reference (tests/test_paged_attention.py), mirroring how
-dense anchors paged and ``decode_loop_reference`` anchors scan decode.
-
-``--prefill chunked`` (paged only) merges prefill into the decode loop
-(Sarathi/vLLM-style): each engine iteration runs at most ONE prompt
-chunk of ``--prefill-chunk`` tokens from the head admitting request
-(``models.*.prefill_chunk`` scatters it straight into the slot's pool
-blocks) plus the usual decode scan for already-active slots — a long
-prompt no longer stalls every in-flight decode stream for its whole
-prefill, which is what ``decode_interarrival_p99_s`` measures.  The
-batch path survives as the bit-exactness reference: every chunk reduces
-over the same static span the batch prefill uses, so the decoded
-streams are identical token-for-token in operand-entropy mode
-(tests/test_chunked_prefill.py, including prefix-cache hits chunking
-only the post-CoW suffix).
-
-Block tables are GROWABLE: admission maps only the prompt's blocks
-(plus a watermark of free headroom for running decoders), decode blocks
-are granted on demand, and when a grant outruns the table width the
-host table widens (device side re-uploads and the scan retraces once
-per growth) — so ``prompt + gen`` may exceed the admission-time span,
-and ``max_len`` no longer bounds paged requests.  A grant the pool
-cannot cover first LRU-evicts cached-but-unreferenced prefix blocks,
-then PREEMPTS the slot (tokens cleared, requeued at the queue front —
-depth-keyed decode noise makes the replay bit-identical).
+``--mesh DxM`` (e.g. ``--mesh 1x4``) serves decode tensor-parallel
+over the ``model`` axis of a debug mesh: parameters shard by the
+serve-TP rules (attention/ff/vocab columns), the paged KV pool shards
+on its kv-head axis, host scheduler state stays in numpy, and decode
+is BIT-EXACT vs the unsharded engine in operand-entropy mode
+(tests/test_mesh_runner.py; ``launch.engine.mesh_check`` is the
+standalone checker).  On CPU, force devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
 
 Container-scale: reduced config, debug mesh.  Full-size serving shapes
 (prefill_32k / decode_32k / long_500k) are compile-proven by launch.dryrun.
@@ -87,1233 +50,26 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import collections
 import dataclasses
-import time
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, reduced
 from repro.core.entropy import KernelEntropy
 from repro.data.synthetic import TokenStreamState, token_batch
-from repro.kernels.paged_attention import kv_blocks_read
-from repro.launch import steps as S
+from repro.launch.engine import (BlockAllocator, ModelRunner, PrefixAdmit,
+                                 Request, ServeEngine, ServeStats,
+                                 SlotScheduler, decode_loop_reference,
+                                 resolve_mesh)
 from repro.models import registry as M
 
-
-# ---------------------------------------------------------------------------
-# requests + host-side slot scheduler
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class Request:
-    """One serving request plus its accumulated results."""
-
-    rid: int
-    prompt: np.ndarray                    # (S,) int32
-    max_new_tokens: int
-    t_submit: float = 0.0
-    t_finish: float = 0.0
-    finish_reason: str = ""
-    tokens: list = dataclasses.field(default_factory=list)
-    H: list = dataclasses.field(default_factory=list)
-    SE: list = dataclasses.field(default_factory=list)
-    MI: list = dataclasses.field(default_factory=list)
-    p_max: list = dataclasses.field(default_factory=list)
-    epistemic_flags: int = 0
-    aleatoric_flags: int = 0
-
-    @property
-    def latency_s(self) -> float:
-        return self.t_finish - self.t_submit
-
-
-class BlockAllocator:
-    """Refcounted free-list allocator over a global pool of KV blocks.
-
-    Pure host-side (no jax).  Reservations are TRANSIENT: the scheduler
-    reserves exactly the blocks an admission or grant is about to
-    ``alloc`` (the reserve/alloc pair keeps the accounting honest), not
-    a request's whole-lifetime budget — decode blocks are granted on
-    demand as the sequence grows, and a grant the pool can't cover is
-    the scheduler's problem (LRU-evict cached blocks, else preempt the
-    slot), not an up-front admission tax.  ``available()`` is free minus
-    outstanding reservations.
-
-    Blocks carry per-block REFCOUNTS so the prefix cache can share them:
-    ``alloc`` hands a block out at refcount 1, ``incref`` adds a holder
-    (the radix tree adopting a block, a slot mapping a cached prefix),
-    and ``free`` is a decref — the block returns to the free list only
-    when the last holder lets go.  Freeing a block whose refcount is
-    already 0 is the double-free error it always was.
-    """
-
-    def __init__(self, num_blocks: int, block_size: int):
-        if num_blocks < 1 or block_size < 1:
-            raise ValueError("need at least one block of at least one "
-                             "token")
-        self.num_blocks = num_blocks
-        self.block_size = block_size
-        self._free: list[int] = list(range(num_blocks - 1, -1, -1))
-        self._ref = [0] * num_blocks
-        self._reserved = 0
-        self.peak_in_use = 0
-
-    def blocks_for(self, tokens: int) -> int:
-        """Blocks needed to hold ``tokens`` KV entries (ceil)."""
-        return -(-tokens // self.block_size)
-
-    @property
-    def in_use(self) -> int:
-        return self.num_blocks - len(self._free)
-
-    def available(self) -> int:
-        return len(self._free) - self._reserved
-
-    def reserve(self, n: int) -> bool:
-        """Set aside ``n`` blocks for later alloc; False if they aren't
-        there (the caller defers admission instead of crashing)."""
-        if self.available() < n:
-            return False
-        self._reserved += n
-        return True
-
-    def unreserve(self, n: int) -> None:
-        if n > self._reserved:
-            raise ValueError(f"unreserve({n}) exceeds {self._reserved} "
-                             "outstanding reservations")
-        self._reserved -= n
-
-    def alloc(self, n: int) -> list[int]:
-        """Draw ``n`` physical blocks down from an existing reservation."""
-        if n > self._reserved:
-            raise ValueError(f"alloc({n}) without reservation "
-                             f"({self._reserved} reserved)")
-        self._reserved -= n
-        ids = [self._free.pop() for _ in range(n)]
-        for i in ids:
-            self._ref[i] = 1
-        self.peak_in_use = max(self.peak_in_use, self.in_use)
-        return ids
-
-    def refcount(self, block: int) -> int:
-        return self._ref[block]
-
-    def incref(self, ids: list[int]) -> None:
-        """Add a holder to live blocks (prefix-cache adoption/sharing)."""
-        for i in ids:
-            if self._ref[i] < 1:
-                raise ValueError(f"incref of free block {i}")
-            self._ref[i] += 1
-
-    def free(self, ids: list[int]) -> None:
-        """Decref; a block rejoins the free list when its last holder
-        (slot or prefix-cache node) releases it.  No single holder ever
-        releases one block twice in a call, so same-call duplicates are
-        a caller bug caught here rather than a silent refcount steal."""
-        if len(set(ids)) != len(ids):
-            dupes = sorted({i for i in ids if ids.count(i) > 1})
-            raise ValueError(f"double free of blocks {dupes}")
-        for i in ids:
-            if self._ref[i] < 1:
-                raise ValueError(f"double free of blocks [{i}]")
-            self._ref[i] -= 1
-            if self._ref[i] == 0:
-                self._free.append(i)
-
-
-@dataclasses.dataclass
-class PrefixAdmit:
-    """Per-slot prefix-cache admission record the engine acts on.
-
-    ``tokens`` of the prompt are already resident in shared blocks
-    mapped read-only into the slot's table; prefill runs only on the
-    suffix.  ``cow`` is a pending ``(src, dst)`` device-side block copy:
-    the partially-matched tail block ``src`` stays referenced until the
-    engine copies it into ``dst`` (already swapped into the table) and
-    calls ``finish_cow``.
-    """
-
-    tokens: int
-    cow: Optional[tuple] = None
-
-
-class SlotScheduler:
-    """FIFO admission of queued requests into fixed decode slots.
-
-    Pure host-side bookkeeping (no jax): ``admit`` fills free slots in
-    slot order from the queue front, ``evict`` frees a slot for reuse.
-
-    With a ``BlockAllocator`` the scheduler also owns the paged-KV block
-    tables: admission switches from "is a slot free" to "are enough
-    blocks free" — the PROMPT's blocks plus a WATERMARK of free headroom
-    (``num_slots`` blocks by default, waived when no slot is running) so
-    in-flight decoders keep growing while the queue head defers (FIFO,
-    no skip-ahead).  ``grant`` maps decode blocks on demand as slots
-    deepen, capped at each request's ``prompt + max_new_tokens`` budget,
-    WIDENING the block tables when a grant outruns them (the table
-    width is a floor, not a ceiling); a grant the pool cannot cover
-    even after LRU-evicting unreferenced cached blocks returns None and
-    the engine preempts the slot (``preempt``: blocks released, request
-    requeued at the queue front).  ``evict`` returns every block.
-
-    With a ``prefix_cache`` (``launch.prefix_cache.RadixPrefixCache``)
-    admission first walks the radix tree: the matched prefix's blocks
-    are mapped into the slot's table shared (incref, read-only), only
-    the uncached span reserves fresh blocks, a token-granular partial
-    match allocates one extra block for the copy-on-write of the shared
-    tail, and eviction INSERTS the request's prompt blocks into the tree
-    (ownership transfers to the cache) before the slot's decref.  Under
-    pool pressure admission asks the cache to LRU-evict unreferenced
-    blocks before deferring.
-    """
-
-    def __init__(self, num_slots: int,
-                 allocator: Optional[BlockAllocator] = None,
-                 table_width: int = 0, prefix_cache=None,
-                 watermark: Optional[int] = None):
-        self.slots: list[Optional[Request]] = [None] * num_slots
-        self.queue: collections.deque[Request] = collections.deque()
-        self.allocator = allocator
-        self.prefix_cache = prefix_cache
-        # free-block headroom admission must leave for running decoders'
-        # on-demand grants (now that their budgets are no longer
-        # reserved up front); waived when nothing is running, so an
-        # empty engine admits exactly what fits
-        self.watermark = num_slots if watermark is None else watermark
-        self.table_growths = 0
-        if prefix_cache is not None and allocator is None:
-            raise ValueError("prefix cache requires a BlockAllocator")
-        if allocator is not None:
-            if table_width < 1:
-                raise ValueError("paged scheduling needs table_width "
-                                 "(initial blocks per slot)")
-            self.block_tables = np.full((num_slots, table_width), -1,
-                                        np.int32)
-            self._slot_blocks: list[list[int]] = \
-                [[] for _ in range(num_slots)]
-            # decode blocks still grantable per slot (budget, NOT an
-            # allocator reservation): blocks_for(prompt + max_new) minus
-            # what the slot already holds
-            self._slot_budget = [0] * num_slots
-            self._slot_prefix: list[Optional[PrefixAdmit]] = \
-                [None] * num_slots
-            self._slot_cow_src: list[Optional[int]] = [None] * num_slots
-            # bumped on every table mutation (admit/grant/evict) so the
-            # engine only re-uploads the device table when it changed
-            self.table_version = 0
-            self.table_growths = 0
-
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def _ensure_width(self, want: int) -> None:
-        """Widen the host block tables to hold ``want`` blocks per slot
-        (doubling, -1-padded).  The engine notices via table_version:
-        the device table re-uploads at the new shape and the decode
-        scan retraces once per growth."""
-        w = self.block_tables.shape[1]
-        if want <= w:
-            return
-        grown = np.full((len(self.slots), max(want, 2 * w)), -1, np.int32)
-        grown[:, :w] = self.block_tables
-        self.block_tables = grown
-        self.table_growths += 1
-        self.table_version += 1
-
-    def _try_reserve(self, need: int, protect: frozenset) -> bool:
-        """Reserve ``need`` blocks for an admission, LRU-evicting
-        cached-but-unreferenced blocks first when the pool is short
-        (``protect`` pins the hit being admitted).  On top of ``need``
-        the pool must keep ``watermark`` blocks free for running slots'
-        decode grants — waived when no slot is running (nothing to
-        starve, and the head request could otherwise never admit)."""
-        alloc = self.allocator
-        wm = self.watermark if any(r is not None for r in self.slots) \
-            else 0
-        short = need + wm - alloc.available()
-        if short > 0 and self.prefix_cache is not None:
-            self.prefix_cache.evict_lru(short, protect=protect)
-        if alloc.available() < need + wm:
-            return False
-        return alloc.reserve(need)
-
-    def _admit_paged(self, slot: int) -> Optional[Request]:
-        alloc = self.allocator
-        req = self.queue[0]
-        P = len(req.prompt)
-        nprompt = alloc.blocks_for(P)
-        # grant cap, NOT a reservation: decode blocks are drawn from the
-        # pool on demand, so admission only needs the prompt's blocks
-        total = alloc.blocks_for(P + req.max_new_tokens)
-        hit = self.prefix_cache.match(req.prompt) \
-            if self.prefix_cache is not None else None
-        if hit is not None and hit.tokens:
-            # uncached span + one extra block when the shared tail needs
-            # a copy-on-write duplicate before this slot writes into it
-            need = nprompt - len(hit.blocks) + (1 if hit.partial else 0)
-            if not self._try_reserve(need, frozenset(hit.blocks)):
-                # liveness: when no live slot will ever free a block
-                # (everything left is cache-held, pinned by this very
-                # hit), fall back to a cold admission rather than
-                # deadlocking on the hit's own protection
-                if alloc.in_use > self.prefix_cache.cached_blocks():
-                    return None           # a running slot will free some
-                hit = None
-        if hit is None or not hit.tokens:
-            if not self._try_reserve(nprompt, frozenset()):
-                return None               # pool exhausted: defer, FIFO
-            self.queue.popleft()
-            ids = alloc.alloc(nprompt)
-            if self.prefix_cache is not None:
-                self._slot_prefix[slot] = PrefixAdmit(tokens=0)
-        else:
-            self.queue.popleft()
-            self.prefix_cache.lock(hit)   # slot refs on shared blocks
-            ids = list(hit.blocks)
-            cow = None
-            if hit.partial:
-                [dst] = alloc.alloc(1)
-                cow = (ids[-1], dst)      # src stays ref'd: finish_cow
-                self._slot_cow_src[slot] = ids[-1]
-                ids[-1] = dst
-            ids += alloc.alloc(nprompt - len(hit.blocks))
-            self._slot_prefix[slot] = PrefixAdmit(tokens=hit.tokens,
-                                                  cow=cow)
-        self._slot_budget[slot] = total - nprompt
-        self._slot_blocks[slot] = ids
-        self._ensure_width(len(ids))
-        self.block_tables[slot, :] = -1
-        self.block_tables[slot, :len(ids)] = ids
-        self.table_version += 1
-        return req
-
-    def prefix_admit(self, slot: int) -> Optional[PrefixAdmit]:
-        """The slot's prefix-cache admission record (None when the cache
-        is off)."""
-        return self._slot_prefix[slot] if self.prefix_cache is not None \
-            else None
-
-    def finish_cow(self, slot: int) -> None:
-        """The engine copied the shared tail block device-side; release
-        this slot's reference on the source (the tree keeps its own)."""
-        src = self._slot_cow_src[slot]
-        if src is None:
-            raise ValueError(f"no pending CoW on slot {slot}")
-        self._slot_cow_src[slot] = None
-        self.allocator.free([src])
-
-    def admit(self) -> list[tuple[int, Request]]:
-        placed = []
-        for i, occupant in enumerate(self.slots):
-            if occupant is None and self.queue:
-                if self.allocator is not None:
-                    req = self._admit_paged(i)
-                    if req is None:
-                        break
-                else:
-                    req = self.queue.popleft()
-                self.slots[i] = req
-                placed.append((i, req))
-        return placed
-
-    def grant(self, slot: int, target_len: int) -> Optional[list[int]]:
-        """Map blocks so slot ``slot`` can hold ``target_len`` tokens.
-
-        Draws from the pool on demand, capped at the request's
-        ``prompt + max_new_tokens`` budget (junk steps a finished
-        request runs until its chunk boundary drop against the unmapped
-        tail instead of consuming pool) and widening the block tables
-        when the target outruns them.  Returns the granted ids ([] when
-        nothing is needed) or None when the pool cannot cover the
-        shortfall even after LRU-evicting cached-but-unreferenced
-        prefix blocks — the engine preempts the slot."""
-        alloc = self.allocator
-        have = len(self._slot_blocks[slot])
-        want = min(alloc.blocks_for(target_len),
-                   have + self._slot_budget[slot])
-        if want <= have:
-            return []
-        n = want - have
-        if alloc.available() < n and self.prefix_cache is not None:
-            # a cached-but-unreferenced prefix must never starve a
-            # running decoder (or livelock a deferred admission behind
-            # it): reclaim before giving up
-            self.prefix_cache.evict_lru(n - alloc.available(),
-                                        protect=frozenset())
-        if not alloc.reserve(n):
-            return None
-        ids = alloc.alloc(n)
-        self._slot_budget[slot] -= n
-        self._ensure_width(want)
-        self.block_tables[slot, have:want] = ids
-        self._slot_blocks[slot].extend(ids)
-        self.table_version += 1
-        return ids
-
-    def preempt(self, slot: int) -> Request:
-        """Evict a slot whose growth grant failed and requeue its
-        request at the queue FRONT (FIFO order preserved).  The caller
-        clears the request's accumulated output first — on readmission
-        it restarts from its prompt (depth-keyed decode noise replays
-        the aborted stream bit-exactly when it lands in the same
-        slot)."""
-        req = self.evict(slot)
-        self.queue.appendleft(req)
-        return req
-
-    def evict(self, slot: int) -> Request:
-        req = self.slots[slot]
-        if req is None:
-            raise ValueError(f"evict of empty slot {slot}")
-        self.slots[slot] = None
-        if self.allocator is not None:
-            if self.prefix_cache is not None:
-                # adopt the prompt's blocks into the radix tree BEFORE
-                # the slot lets go: chunks already cached share the
-                # existing nodes, fresh ones transfer to the cache
-                nprompt = self.allocator.blocks_for(len(req.prompt))
-                self.prefix_cache.insert(req.prompt,
-                                         self._slot_blocks[slot][:nprompt])
-                if self._slot_cow_src[slot] is not None:
-                    self.allocator.free([self._slot_cow_src[slot]])
-                    self._slot_cow_src[slot] = None
-                self._slot_prefix[slot] = None
-            self.allocator.free(self._slot_blocks[slot])
-            self._slot_blocks[slot] = []
-            self._slot_budget[slot] = 0
-            self.block_tables[slot, :] = -1
-            self.table_version += 1
-        return req
-
-    def pool_stats(self) -> dict:
-        """Queue depth + block-pool occupancy snapshot (free / reserved
-        / cached / in-use counts), so allocator behavior is observable
-        per chunk without a debugger."""
-        out = {"queue_depth": len(self.queue),
-               "active_slots": sum(r is not None for r in self.slots)}
-        if self.allocator is not None:
-            a = self.allocator
-            out.update(
-                blocks_free=len(a._free), blocks_reserved=a._reserved,
-                blocks_in_use=a.in_use,
-                blocks_cached=(self.prefix_cache.cached_blocks()
-                               if self.prefix_cache is not None else 0))
-        return out
-
-    def mapped_blocks(self, slot: int) -> int:
-        """Physical blocks currently mapped into the slot's table (what
-        the block-sparse decode kernel can actually read)."""
-        return len(self._slot_blocks[slot])
-
-    def active(self) -> list[tuple[int, Request]]:
-        return [(i, r) for i, r in enumerate(self.slots) if r is not None]
-
-    def has_work(self) -> bool:
-        return bool(self.queue) or any(r is not None for r in self.slots)
-
-
-# ---------------------------------------------------------------------------
-# the engine
-# ---------------------------------------------------------------------------
-
-class ServeEngine:
-    """Continuous-batching scan-decoded uncertainty engine.
-
-    ``num_slots`` concurrent decode slots over one slot-indexed KV cache
-    of depth ``max_len``; ``chunk`` tokens decoded per device call.
-    ``entropy`` (KernelEntropy) selects the seeded head-draw stream
-    (in-kernel on TPU); None keeps the legacy operand stream.
-
-    ``kv_layout`` picks the cache layout.  Both layouts bound a request
-    to ``prompt + gen <= max_len`` (block tables span ``max_len``
-    logical tokens).  ``'dense'`` — the bit-exact reference — gives
-    every slot one contiguous ``max_len`` KV strip, so mixed-length
-    traffic pays full padding waste.  ``'paged'`` backs the self-attention KV
-    with a global pool of ``kv_blocks`` blocks of ``kv_block`` tokens:
-    admission reserves a request's whole-lifetime block budget ("are
-    enough blocks free", deferring instead of crashing when the pool is
-    exhausted), decode blocks are granted chunk by chunk, and eviction
-    returns everything — KV bytes in use track the tokens actually
-    resident instead of ``num_slots * max_len``.  Paged decode is
-    bit-exact against dense when ``max_len`` is a ``kv_block`` multiple
-    (equal logical spans; tested in tests/test_paged_kv.py).  Families
-    without KV strips (ssm) fall back to dense.
-
-    ``prefix_cache=True`` (paged only) puts a host-side radix tree
-    (``launch.prefix_cache.RadixPrefixCache``) over the block pool:
-    admission walks the tree, maps the longest cached token prefix's
-    blocks into the slot's table read-only (refcounted sharing), and
-    prefill runs only on the uncached suffix — a full-prompt hit costs
-    zero prefill compute.  A token-granular partial match into a shared
-    block triggers copy-on-write (device-side block duplicate + table
-    swap) before the slot writes at the divergence point.  Evicted
-    requests donate their prompt blocks to the tree; cached-but-
-    unreferenced blocks are LRU-evicted under pool pressure.  Restricted
-    to families whose prompt KV is a pure function of token IDs
-    (``registry.supports_prefix_cache``); hit decode is bit-exact vs the
-    cold path under the same admission schedule (tested in
-    tests/test_prefix_cache.py).
-
-    ``decode_attn`` (paged only) selects the decode-attention read path:
-    ``'gather'`` — the bit-exact reference — materializes each slot's
-    full ``MB*BS`` logical strip per layer per step, so decode HBM
-    traffic is identical to dense strips; ``'kernel'`` runs the
-    block-sparse Pallas kernel (``kernels/paged_attention.py``) that
-    reads only mapped blocks under each slot's depth straight from the
-    pool, bit-exact vs gather in operand/interpret mode (tested in
-    tests/test_paged_attention.py).  ``trace_every`` downsamples the
-    per-chunk scheduler/pool snapshot (1 = every chunk) so long runs
-    don't grow host memory linearly in chunks decoded.
-    """
-
-    def __init__(self, params, cfg, *, num_slots: int, max_len: int,
-                 chunk: int = 8, entropy: Optional[KernelEntropy] = None,
-                 mi_threshold: float = 0.05, se_threshold: float = 1.0,
-                 eos_id: Optional[int] = None, kv_layout: str = "dense",
-                 kv_block: int = 16, kv_blocks: Optional[int] = None,
-                 prefix_cache: bool = False, decode_attn: str = "gather",
-                 prefill_mode: str = "batch", prefill_chunk: int = 32,
-                 trace_every: int = 1):
-        if kv_layout not in ("dense", "paged"):
-            raise ValueError(f"unknown kv_layout {kv_layout!r}")
-        if kv_block < 1:
-            raise ValueError(f"kv_block must be >= 1, got {kv_block}")
-        if prefix_cache and kv_layout != "paged":
-            raise ValueError("prefix cache shares blocks of the paged "
-                             "pool; run with kv_layout='paged'")
-        if decode_attn not in ("gather", "kernel"):
-            raise ValueError(f"unknown decode_attn {decode_attn!r}")
-        if decode_attn == "kernel" and kv_layout != "paged":
-            raise ValueError("the block-sparse decode kernel reads "
-                             "through the paged block table; run with "
-                             "kv_layout='paged'")
-        if prefill_mode not in ("batch", "chunked"):
-            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
-        if prefill_mode == "chunked" and kv_layout != "paged":
-            raise ValueError("chunked prefill scatters prompt chunks "
-                             "into pool blocks; run with "
-                             "kv_layout='paged'")
-        if prefill_chunk < 1:
-            raise ValueError(f"prefill_chunk must be >= 1, got "
-                             f"{prefill_chunk}")
-        if trace_every < 1:
-            raise ValueError(f"trace_every must be >= 1, got {trace_every}")
-        self.params = params
-        self.num_slots = num_slots
-        self.max_len = max_len
-        self.chunk = chunk
-        self.eos_id = eos_id
-        self.trace_every = trace_every
-        self.kv_layout = kv_layout if M.supports_paged(cfg) else "dense"
-        # the block-sparse decode kernel reads through the block table,
-        # so it only exists on the paged layout; families that fell back
-        # to dense silently keep the gather/dense read path, mirroring
-        # the ssm dense fallback below
-        self.decode_attn = decode_attn if self.kv_layout == "paged" \
-            else "gather"
-        # decode_attn rides ArchConfig (like head_entropy) so every
-        # family's decode threads it to layers.apply_attention without
-        # signature churn; params are structure-independent of it
-        self.cfg = cfg = dataclasses.replace(cfg,
-                                             decode_attn=self.decode_attn)
-        # prefix reuse additionally needs prompt KV that is a pure
-        # function of the token IDs (see registry.supports_prefix_cache);
-        # unsupported families silently serve cold, like the ssm
-        # dense fallback above
-        self.prefix_cache = (prefix_cache and self.kv_layout == "paged"
-                             and M.supports_prefix_cache(cfg))
-        self.kv_block = kv_block
-        self.table_width = M.paged_table_width(max_len, kv_block)
-        # default pool = full dense capacity: no admission change, the
-        # savings then show up as peak blocks in use < blocks allocated
-        self.kv_blocks = (kv_blocks if kv_blocks is not None
-                          else num_slots * self.table_width)
-        if self.kv_blocks < 1:
-            raise ValueError(f"kv_blocks must be >= 1, got {kv_blocks}")
-        paged = self.kv_layout == "paged"
-        # prompt-length bucketing: padding-safe families right-pad cold
-        # prompts to the next kv_block multiple, so the jitted batch
-        # prefill compiles once per BUCKET instead of once per distinct
-        # prompt length (prefill_compiles in the run stats); recurrent
-        # families keep exact lengths
-        self.pad_prompts = M.supports_prompt_padding(cfg)
-        # chunked prefill needs the per-family prefill_chunk walker and
-        # the paged layout; others fall back to batch silently, like the
-        # ssm dense fallback above
-        self.prefill_mode = prefill_mode if paged \
-            and M.supports_chunked_prefill(cfg) else "batch"
-        self.prefill_chunk = prefill_chunk
-        if self.prefill_mode == "chunked" and cfg.family == "hybrid":
-            # hybrid chunks walk the SSM in ssm_chunk segments; round
-            # the knob up so every full chunk is a clean multiple
-            sc = cfg.ssm_chunk
-            self.prefill_chunk = -(-prefill_chunk // sc) * sc
-        if paged:
-            # paged prefill builds a minimal prompt-length strip (the
-            # scatter pages it out token by token); dense keeps the
-            # engine-wide max_len strip its slot write needs
-            self._prefill = jax.jit(
-                lambda p, t, m: M.prefill(p, cfg, t, t.shape[1], m))
-            self._write = jax.jit(
-                lambda c, slot, sub, row: M.write_slot(cfg, c, slot, sub,
-                                                       row),
-                donate_argnums=(0,))
-        if self.prefill_mode == "chunked":
-            # one jitted walker per family kwarg shape; span (the whole
-            # prompt's static attention-reduction extent) is static, so
-            # compiles scale with distinct (chunk, span) pairs — bucketed
-            # prompts collapse most of those (see prefill_compiles)
-            if cfg.family == "moe":
-                self._chunk_fn = jax.jit(
-                    lambda p, t, c, s, o, n, off, span: M.prefill_chunk(
-                        p, cfg, t, c, s, o, n, span, expert_offsets=off),
-                    static_argnums=(7,), donate_argnums=(2,))
-            elif cfg.family == "hybrid":
-                self._chunk_fn = jax.jit(
-                    lambda p, t, c, s, o, n, st, span, fin:
-                    M.prefill_chunk(p, cfg, t, c, s, o, n, span,
-                                    state=st, finalize=fin),
-                    static_argnums=(7, 8), donate_argnums=(2,))
-            elif cfg.family == "encdec":
-                self._chunk_first = jax.jit(
-                    lambda p, t, c, s, o, n, fr, span: M.prefill_chunk(
-                        p, cfg, t, c, s, o, n, span, frames=fr),
-                    static_argnums=(7,), donate_argnums=(2,))
-                self._chunk_fn = jax.jit(
-                    lambda p, t, c, s, o, n, span: M.prefill_chunk(
-                        p, cfg, t, c, s, o, n, span),
-                    static_argnums=(6,), donate_argnums=(2,))
-            else:
-                self._chunk_fn = jax.jit(
-                    lambda p, t, c, s, o, n, span: M.prefill_chunk(
-                        p, cfg, t, c, s, o, n, span),
-                    static_argnums=(6,), donate_argnums=(2,))
-        if self.prefix_cache:
-            # prefix-hit fast paths.  _suffix gathers the slot's cached
-            # prefix strips from the pool, prefills ONLY the uncached
-            # suffix against them (bit-exact vs the cold flash-attention
-            # path; see layers.apply_attention_suffix) and scatters the
-            # suffix KV at its logical offset.  _copy is the device-side
-            # CoW block duplicate.
-            def suffix_fn(p, c, slot, row, toks, plen):
-                # gather only the blocks the hit spans (plen is static),
-                # not the full table-width logical strip
-                nb = -(-plen // kv_block)
-                strips = {
-                    n: jax.vmap(lambda pool: M.paged_gather(
-                        pool, row[None, :nb]))(c[n])
-                    for n in M.PAGED_KV_LEAVES if n in c}
-                _, sub = M.prefill_suffix(p, cfg, toks, strips, plen)
-                return M.write_slot(cfg, c, slot, sub, row, offset=plen)
-
-            # plen is STATIC: bit-exactness vs the cold path needs the
-            # suffix attention to reduce over exactly prefix + suffix
-            # keys, so each (hit, suffix) length pair compiles once
-            self._suffix = jax.jit(suffix_fn, static_argnums=(5,),
-                                   donate_argnums=(1,))
-            self._copy = jax.jit(
-                lambda c, src, dst: M.copy_block(cfg, c, src, dst),
-                donate_argnums=(0,))
-        if not paged:
-            self._prefill = jax.jit(
-                lambda p, t, m: M.prefill(p, cfg, t, max_len, m))
-            self._write = jax.jit(
-                lambda c, slot, sub: M.write_slot(cfg, c, slot, sub),
-                donate_argnums=(0,))
-        # depth pinning: bucketed/suffix/chunked prefill all write
-        # strips wider than the true prompt, then fix the slot's len to
-        # the real token count (full-prompt prefix hits need nothing
-        # else at all)
-        self._set_len = jax.jit(
-            lambda c, slot, n: dict(c, len=c["len"].at[slot].set(n)),
-            donate_argnums=(0,))
-        self._scan = jax.jit(
-            S.build_scan_decode(cfg, entropy=entropy, chunk=chunk,
-                                mi_threshold=mi_threshold,
-                                se_threshold=se_threshold),
-            donate_argnums=(2,))
-
-    def _bucket(self, n: int) -> int:
-        """Prompt-length bucket: next kv_block multiple (dense strips
-        additionally clamp to max_len).  The static attention span every
-        prefill path of a bucketed prompt reduces over."""
-        if not self.pad_prompts:
-            return n
-        w = -(-n // self.kv_block) * self.kv_block
-        return min(w, self.max_len) if self.kv_layout == "dense" else w
-
-    def _start_job(self, req: Request, hit_len: int, span: int,
-                   cache) -> dict:
-        """Open a chunked-prefill walk over ``req``'s prompt.
-
-        The job carries the walk offset plus whatever state the family's
-        ``prefill_chunk`` threads between chunks: running expert load for
-        MoE capacity splits, SSM/conv recurrent state for hybrid, and the
-        encoder-frames-pending flag for encdec.
-        """
-        job = {"req": req, "P": len(req.prompt), "span": span,
-               "off": hit_len, "first": True}
-        cfg = self.cfg
-        if cfg.family == "moe":
-            job["ex_off"] = jnp.zeros((cfg.num_layers, cfg.num_experts),
-                                      jnp.float32)
-        elif cfg.family == "hybrid":
-            from repro.models.ssm import dims
-            d_in, H, Pd, N = dims(cfg)
-            job["state"] = {
-                "ssm": jnp.zeros((cfg.num_layers, 1, H, Pd, N),
-                                 jnp.float32),
-                "conv": jnp.zeros((cfg.num_layers, 1,
-                                   cfg.ssm_conv_width - 1, d_in + 2 * N),
-                                  cache["conv"].dtype)}
-        return job
-
-    def _run_chunk(self, cache, slot: int, job: dict):
-        """Advance ``job`` by one prompt chunk; returns
-        ``(cache, done, shape_key)``.
-
-        Padding-safe families pad every chunk to exactly prefill_chunk
-        tokens (one compile per (chunk, span) pair; trailing junk either
-        scatters into the in-bucket pad region the batch path also
-        writes, or drops at unmapped blocks).  Hybrid walks exact
-        ssm_chunk-multiple segments instead — its recurrence is not
-        padding-safe.
-        """
-        off, P, W = job["off"], job["P"], job["span"]
-        pc = self.prefill_chunk
-        real = min(pc, P - off)
-        S_len = pc if self.pad_prompts else real
-        toks = np.zeros((S_len,), np.int32)
-        toks[:real] = job["req"].prompt[off:off + real]
-        new_len = off + real
-        done = new_len >= P
-        args = (self.params, jnp.asarray(toks)[None], cache,
-                jnp.asarray(slot, jnp.int32), jnp.asarray(off, jnp.int32),
-                jnp.asarray(new_len, jnp.int32))
-        fam = self.cfg.family
-        variant = ""
-        if fam == "moe":
-            cache, job["ex_off"] = self._chunk_fn(*args, job["ex_off"], W)
-        elif fam == "hybrid":
-            cache, job["state"] = self._chunk_fn(*args, job["state"], W,
-                                                 done)
-            variant = "final" if done else ""
-        elif fam == "encdec" and job["first"]:
-            cache = self._chunk_first(*args, self._modality(1), W)
-            variant = "first"
-        else:
-            cache = self._chunk_fn(*args, W)
-        job["first"] = False
-        job["off"] = new_len
-        return cache, done, ("chunk", S_len, W, variant)
-
-    def _modality(self, batch: int):
-        cfg = self.cfg
-        if cfg.family == "encdec":
-            from repro.models.encdec import ENC_LEN
-            return jnp.zeros((batch, ENC_LEN, cfg.d_model), jnp.float32)
-        if cfg.family == "vlm":
-            return jnp.zeros((batch, cfg.num_prefix_embeds, cfg.d_model),
-                             jnp.float32)
-        return None
-
-    def run(self, requests: list[Request]) -> dict:
-        """Serve ``requests`` to completion; returns engine metrics.
-
-        One host sync per admission (prefill) and one per decoded chunk
-        (the stacked (chunk, B) outputs) -- never per token.
-        """
-        paged = self.kv_layout == "paged"
-        for r in requests:
-            if len(r.prompt) == 0:
-                raise ValueError(f"request {r.rid}: empty prompt")
-            if r.max_new_tokens < 1:
-                raise ValueError(
-                    f"request {r.rid}: max_new_tokens must be >= 1")
-            # paged tables GROW on demand (grant widens them past the
-            # admission-time span), so only dense strips — whose depth
-            # is baked into the cache shape — bound prompt + gen
-            if not paged and len(r.prompt) + r.max_new_tokens \
-                    > self.max_len:
-                raise ValueError(
-                    f"request {r.rid}: prompt {len(r.prompt)} + "
-                    f"max_new_tokens {r.max_new_tokens} exceeds the "
-                    f"slot capacity max_len={self.max_len}; cache writes "
-                    f"past capacity would be dropped silently")
-        alloc = None
-        pcache = None
-        if paged:
-            alloc = BlockAllocator(self.kv_blocks, self.kv_block)
-            for r in requests:
-                need = alloc.blocks_for(len(r.prompt) + r.max_new_tokens)
-                if need > self.kv_blocks:
-                    raise ValueError(
-                        f"request {r.rid}: needs {need} KV blocks but the "
-                        f"pool only has {self.kv_blocks}; it could never "
-                        f"be admitted")
-            if self.prefix_cache:
-                from repro.launch.prefix_cache import RadixPrefixCache
-                pcache = RadixPrefixCache(alloc, self.kv_block)
-        sched = SlotScheduler(self.num_slots, allocator=alloc,
-                              table_width=self.table_width,
-                              prefix_cache=pcache)
-        # observable post-mortem (tests assert the pool balances even
-        # when run() raises mid-decode)
-        self._last_alloc, self._last_pcache = alloc, pcache
-        t_start = time.perf_counter()
-        for r in requests:
-            r.t_submit = time.perf_counter()
-            sched.submit(r)
-
-        tok = jnp.zeros((self.num_slots,), jnp.int32)
-        cache = M.make_cache(self.cfg, self.num_slots, self.max_len,
-                             layout=self.kv_layout,
-                             kv_block=self.kv_block,
-                             num_blocks=self.kv_blocks)
-        active = jnp.zeros((self.num_slots,), bool)
-        flags = {"epistemic": jnp.zeros((self.num_slots,), jnp.int32),
-                 "aleatoric": jnp.zeros((self.num_slots,), jnp.int32)}
-        step0 = 0
-        table_synced = -1            # device block-table version synced
-        decode_s = 0.0
-        # the jitted prefill compiles once per distinct prompt length
-        # (suffix prefill: per distinct suffix length); classify each
-        # admission's time accordingly so mixed-length traffic doesn't
-        # launder recompiles into the steady-state stat
-        compile_times: list[float] = []
-        steady_times: list[float] = []
-        seen_prefill_shapes: set[tuple] = set()
-        modality1 = self._modality(1)
-        # prefix-cache counters + per-chunk scheduler/pool trace
-        pc_hits = pc_misses = pc_cow = 0
-        pc_tokens = pc_saved = 0
-        sched_trace: list[dict] = []
-        chunks_run = 0
-        # decode-attention HBM accounting (paged): physical KV blocks the
-        # selected read path touches per decode step vs the full logical
-        # span the gather path materializes (kernel skip rule in host
-        # arithmetic, kernels.paged_attention.kv_blocks_read)
-        attn_blocks_read = 0
-        attn_blocks_span = 0
-        # chunked-prefill bookkeeping: slot -> in-flight prompt walk
-        # (offset + family carry), FIFO order of pending walks, and the
-        # slots currently DECODING (mid-prefill slots sit in the scan
-        # batch inactive; their junk steps are overwritten by the next
-        # chunk's scatter, see models.layers.apply_attention_chunk)
-        prefilling: dict[int, dict] = {}
-        jobs: collections.deque[int] = collections.deque()
-        decoding: set[int] = set()
-        prefill_chunks = 0
-        preemptions = 0
-        # decode-token inter-arrival: one timestamp per scan that served
-        # at least one decoding slot — the stall a long batch prefill
-        # injects between consecutive chunks is exactly what chunked
-        # prefill bounds (decode_interarrival_p99_s)
-        arrivals: list[float] = []
-
-        def activate(slot, req):
-            nonlocal tok, active, flags
-            tok = tok.at[slot].set(int(req.prompt[-1]))
-            active = active.at[slot].set(True)
-            flags = {k: v.at[slot].set(0) for k, v in flags.items()}
-            decoding.add(slot)
-
-        def classify(shape_key, dt):
-            if shape_key in seen_prefill_shapes:
-                steady_times.append(dt)
-            else:
-                seen_prefill_shapes.add(shape_key)
-                compile_times.append(dt)
-
-        def sync_table():
-            # re-upload the device block table (tiny: slots x MB) only
-            # when the host copy changed; a width change alters the
-            # cache shape, so downstream jits retrace once per growth
-            nonlocal cache, table_synced
-            if sched.table_version != table_synced:
-                cache = dict(cache, block_table=jnp.asarray(
-                    sched.block_tables))
-                table_synced = sched.table_version
-
-        try:
-            while sched.has_work():
-                admitted = sched.admit()
-                if paged:
-                    # admissions mutate the host tables (and may WIDEN
-                    # them); the device copy must match before any
-                    # prefill write installs a row at the new width
-                    sync_table()
-                for slot, req in admitted:
-                    t0 = time.perf_counter()
-                    info = sched.prefix_admit(slot) if paged else None
-                    hit_len = info.tokens if info is not None else 0
-                    P = len(req.prompt)
-                    W = self._bucket(P)
-                    if info is not None and info.cow is not None:
-                        # the shared tail block is about to be written at the
-                        # divergence point: duplicate it device-side and let
-                        # the scheduler drop this slot's ref on the original
-                        src, dst = info.cow
-                        cache = self._copy(cache, jnp.asarray(src, jnp.int32),
-                                           jnp.asarray(dst, jnp.int32))
-                        sched.finish_cow(slot)
-                        pc_cow += 1
-                    slot_ = jnp.asarray(slot, jnp.int32)
-                    shape_key: Optional[tuple] = None
-                    if hit_len == P:
-                        # whole prompt resident: zero prefill compute — the
-                        # decode loop only needs the slot's depth
-                        cache = self._set_len(cache, slot_,
-                                              jnp.asarray(P, jnp.int32))
-                        shape_key = ("hit",)
-                        activate(slot, req)
-                    elif self.prefill_mode == "chunked":
-                        # enqueue an incremental prompt walk (suffix-only
-                        # on a partial prefix hit — CoW already settled
-                        # above) and pin the slot's depth to the resident
-                        # span NOW: interleaved scans write junk at
-                        # [len, len+chunk) for every slot, and a stale
-                        # len would point into shared prefix blocks
-                        cache = self._set_len(
-                            cache, slot_, jnp.asarray(hit_len, jnp.int32))
-                        prefilling[slot] = self._start_job(req, hit_len, W,
-                                                           cache)
-                        jobs.append(slot)
-                    elif hit_len > 0:
-                        # suffix padded to the same bucketed span the
-                        # cold path reduces over (W - hit junk tokens):
-                        # equal extents keep hit and cold bit-identical
-                        stoks = np.zeros((W - hit_len,), np.int32)
-                        stoks[:P - hit_len] = req.prompt[hit_len:]
-                        cache = self._suffix(
-                            self.params, cache, slot_,
-                            jnp.asarray(sched.block_tables[slot]),
-                            jnp.asarray(stoks)[None], hit_len)
-                        if W > P:
-                            cache = self._set_len(
-                                cache, slot_, jnp.asarray(P, jnp.int32))
-                        shape_key = ("suffix", hit_len, W - hit_len)
-                        activate(slot, req)
-                    else:
-                        toks = np.zeros((W,), np.int32)
-                        toks[:P] = req.prompt
-                        _, sub = self._prefill(
-                            self.params, jnp.asarray(toks)[None],
-                            modality1)
-                        if paged:
-                            cache = self._write(
-                                cache, slot_, sub,
-                                jnp.asarray(sched.block_tables[slot]))
-                        else:
-                            cache = self._write(cache, slot_, sub)
-                        if W > P:
-                            # junk pad KV stays masked above the true len
-                            cache = self._set_len(
-                                cache, slot_, jnp.asarray(P, jnp.int32))
-                        shape_key = ("cold", W)
-                        activate(slot, req)
-                    if info is not None:
-                        pc_hits += bool(hit_len)
-                        pc_misses += not hit_len
-                        pc_tokens += P
-                        pc_saved += hit_len
-                    if shape_key is not None:
-                        jax.block_until_ready(cache)
-                        classify(shape_key, time.perf_counter() - t0)
-
-                if jobs:
-                    # at most ONE prompt chunk per engine iteration
-                    # (Sarathi-style): the head walk advances by
-                    # prefill_chunk tokens, then the decode scan below
-                    # still runs for every active slot
-                    slot = jobs[0]
-                    job = prefilling[slot]
-                    req = job["req"]
-                    t0 = time.perf_counter()
-                    cache, done, shape_key = self._run_chunk(cache, slot,
-                                                             job)
-                    prefill_chunks += 1
-                    jax.block_until_ready(cache)
-                    classify(shape_key, time.perf_counter() - t0)
-                    if done:
-                        jobs.popleft()
-                        del prefilling[slot]
-                        # activate BEFORE this iteration's scan: the
-                        # slot's first real decode tokens come from it
-                        # (no junk window between prefill and decode)
-                        activate(slot, req)
-
-                if paged:
-                    # incremental grant: map the blocks the coming chunk
-                    # can write, on demand from the pool (capped at each
-                    # request's prompt+max_new budget); re-upload the
-                    # device table (tiny: slots x MB) only when
-                    # something actually changed since the last chunk
-                    for slot, req in sched.active():
-                        if slot in prefilling:
-                            continue     # prompt blocks mapped at admission
-                        ids = sched.grant(slot, len(req.prompt)
-                                          + min(len(req.tokens) + self.chunk,
-                                                req.max_new_tokens))
-                        if ids is None:
-                            # the pool cannot grow this slot even after
-                            # LRU-evicting cached blocks: preempt — blocks
-                            # release, output clears, the request restarts
-                            # from the queue FRONT
-                            sched.preempt(slot)
-                            req.tokens.clear()
-                            for name in ("H", "SE", "MI", "p_max"):
-                                getattr(req, name).clear()
-                            req.epistemic_flags = 0
-                            req.aleatoric_flags = 0
-                            decoding.discard(slot)
-                            active = active.at[slot].set(False)
-                            preemptions += 1
-                    sync_table()
-
-                if chunks_run % self.trace_every == 0:
-                    # downsampled pool/queue snapshot: a long run would
-                    # otherwise grow host memory (and the results
-                    # payload) by one dict per chunk, unbounded
-                    sched_trace.append(sched.pool_stats())
-                if not decoding:
-                    if not jobs and not admitted:
-                        raise RuntimeError(
-                            "scheduler stalled: queued requests, no "
-                            "admission, nothing prefilling or decoding")
-                    continue             # prefill-only iteration: no scan
-                if paged:
-                    MB = sched.block_tables.shape[1]
-                    # the gather path materializes every slot's full
-                    # logical span each step, occupied or not
-                    attn_blocks_span += self.num_slots * MB * self.chunk
-                    if self.decode_attn == "kernel":
-                        # the kernel reads only mapped blocks under
-                        # each occupied slot's depth
-                        for slot, occupant in sched.active():
-                            if slot in prefilling:
-                                continue
-                            len0 = len(occupant.prompt) \
-                                + len(occupant.tokens)
-                            mapped = sched.mapped_blocks(slot)
-                            attn_blocks_read += sum(
-                                kv_blocks_read(len0 + t + 1, mapped,
-                                               self.kv_block, MB)
-                                for t in range(self.chunk))
-                chunks_run += 1
-                t0 = time.perf_counter()
-                tok, cache, flags, ys = self._scan(
-                    self.params, tok, cache, jnp.asarray(step0, jnp.int32),
-                    active, flags)
-                ys = jax.device_get(ys)            # the chunk's single sync
-                arrivals.append(time.perf_counter())
-                decode_s += time.perf_counter() - t0
-                step0 += self.chunk
-
-                for slot, req in sched.active():
-                    if slot in prefilling:
-                        continue         # mid-prefill: junk steps, no harvest
-                    for t in range(self.chunk):
-                        tk = int(ys["token"][t, slot])
-                        req.tokens.append(tk)
-                        for name in ("H", "SE", "MI", "p_max"):
-                            getattr(req, name).append(float(ys[name][t, slot]))
-                        req.epistemic_flags += int(ys["epistemic"][t, slot])
-                        req.aleatoric_flags += int(ys["aleatoric"][t, slot])
-                        done_eos = self.eos_id is not None and tk == self.eos_id
-                        if done_eos or len(req.tokens) >= req.max_new_tokens:
-                            req.t_finish = time.perf_counter()
-                            req.finish_reason = "eos" if done_eos else "length"
-                            sched.evict(slot)
-                            decoding.discard(slot)
-                            active = active.at[slot].set(False)
-                            break
-
-        except BaseException:
-            # eviction / exception / early-exit path: slots mid-decode
-            # still hold blocks — release them so the pool balances even
-            # when the run dies (evict also settles any pending CoW ref
-            # and donates prompt blocks to the prefix tree, exactly like
-            # a clean eviction would have)
-            for slot, _ in list(sched.active()):
-                sched.evict(slot)
-            raise
-        finally:
-            # leak check on EVERY exit path, clean drain or not: each
-            # block is either free or held by the prefix cache (cached
-            # refcounts included) and no reservation is outstanding
-            # (tests/test_paged_attention.py::TestEngineRobustness::
-            # test_mid_run_exception_releases_blocks)
-            if alloc is not None:
-                cached_end = pcache.cached_blocks() if pcache else 0
-                if alloc._reserved or alloc.in_use != cached_end:
-                    raise RuntimeError(
-                        f"block leak after drain: {alloc.in_use} in use "
-                        f"vs {cached_end} cached, {alloc._reserved} "
-                        "reserved")
-
-        total_s = time.perf_counter() - t_start
-        gen_tokens = sum(len(r.tokens) for r in requests)
-        # KV residency accounting: dense permanently owns num_slots
-        # strips of max_len; paged owns only the blocks actually mapped
-        # (peak over the run), which is what mixed-length traffic saves
-        kv_alloc_bytes = M.kv_bytes(cache)
-        if paged:
-            token_bytes = kv_alloc_bytes / (self.kv_blocks * self.kv_block)
-            block_bytes = kv_alloc_bytes // self.kv_blocks
-            kv_stats = {
-                "layout": "paged",
-                "block_tokens": self.kv_block,
-                "blocks_total": self.kv_blocks,
-                "blocks_peak": alloc.peak_in_use,
-                "bytes_in_use_peak": alloc.peak_in_use * block_bytes,
-                "bytes_dense_equiv": int(token_bytes * self.num_slots
-                                         * self.max_len),
-            }
-        else:
-            kv_stats = {
-                "layout": "dense",
-                "bytes_in_use_peak": kv_alloc_bytes,
-                "bytes_dense_equiv": kv_alloc_bytes,
-            }
-        # block-sparse decode attention accounting: KV bytes the selected
-        # read path pulls from HBM per decode step vs the full logical
-        # span (what gather materializes regardless of residency)
-        steps_run = chunks_run * self.chunk
-        if paged:
-            read_blocks = attn_blocks_read if self.decode_attn == "kernel" \
-                else attn_blocks_span
-            decode_attn_stats = {
-                "mode": self.decode_attn,
-                "kv_bytes_read_per_step": read_blocks * block_bytes
-                / max(steps_run, 1),
-                "kv_bytes_span_per_step": attn_blocks_span * block_bytes
-                / max(steps_run, 1),
-                "kv_blocks_read": read_blocks,
-                "kv_blocks_span": attn_blocks_span,
-            }
-        else:
-            decode_attn_stats = {"mode": "gather"}
-        lat = np.array([r.latency_s for r in requests]) if requests \
-            else np.zeros((1,))
-        epi = sum(r.epistemic_flags for r in requests)
-        alea = sum(r.aleatoric_flags for r in requests)
-        return {
-            "requests": requests,
-            "num_requests": len(requests),
-            "gen_tokens": gen_tokens,
-            "total_s": total_s,
-            "decode_s": decode_s,
-            # first prefill per prompt length includes compilation; the
-            # rest are steady-state dispatch
-            "prefill_compile_s": float(np.sum(compile_times)),
-            "prefill_steady_s": float(np.mean(steady_times))
-            if steady_times else 0.0,
-            "decode_tok_per_s": gen_tokens / max(decode_s, 1e-9),
-            "e2e_tok_per_s": gen_tokens / max(total_s, 1e-9),
-            "latency_p50_s": float(np.percentile(lat, 50)),
-            # nearest-rank (no interpolation): at small N a linear-
-            # interpolated p99 fabricates a tail latency no request
-            # experienced; "higher" reports a latency that actually
-            # happened (= max below 100 requests)
-            "latency_p99_s": float(np.percentile(lat, 99,
-                                                 method="higher")),
-            "latency_max_s": float(lat.max()),
-            "kv": kv_stats,
-            # block-sparse decode kernel vs gather HBM traffic
-            "decode_attn": decode_attn_stats,
-            # radix prefix cache over the paged pool: zero-compute hit
-            # spans, CoW divergence copies, LRU pressure evictions
-            "prefix_cache": {
-                "enabled": self.prefix_cache,
-                "hits": pc_hits,
-                "misses": pc_misses,
-                "hit_rate": pc_hits / max(pc_hits + pc_misses, 1),
-                "prompt_tokens": pc_tokens,
-                "prompt_tokens_saved": pc_saved,
-                "saved_frac": pc_saved / max(pc_tokens, 1),
-                "cow_copies": pc_cow,
-                "cache_evictions": pcache.evictions if pcache else 0,
-                "blocks_cached_end": (pcache.cached_blocks()
-                                      if pcache else 0),
-            },
-            # scheduler snapshot (queue depth + pool occupancy) every
-            # trace_every chunks — downsampled so long runs don't grow
-            # host memory linearly in chunks decoded
-            "sched_trace": sched_trace,
-            "sched_trace_every": self.trace_every,
-            "chunks_run": chunks_run,
-            # chunked-prefill / growable-table telemetry
-            "prefill_mode": self.prefill_mode,
-            "prefill_chunk": self.prefill_chunk,
-            "prefill_chunks": prefill_chunks,
-            # distinct prefill/chunk shapes traced (bucketing collapses
-            # per-prompt-length recompiles to one per kv_block bucket)
-            "prefill_compiles": len(seen_prefill_shapes),
-            "table_growths": sched.table_growths,
-            "preemptions": preemptions,
-            # worst gap between consecutive decode-serving scans: the
-            # stall a monolithic batch prefill injects mid-stream, which
-            # interleaved chunked prefill bounds at ~one chunk's compute
-            "decode_interarrival_p99_s": float(np.percentile(
-                np.diff(arrivals), 99, method="higher"))
-            if len(arrivals) >= 2 else 0.0,
-            "epistemic_flags": int(epi),
-            "aleatoric_flags": int(alea),
-            "flags_per_1k_tokens": {
-                "epistemic": 1000.0 * epi / max(gen_tokens, 1),
-                "aleatoric": 1000.0 * alea / max(gen_tokens, 1),
-            },
-            # device-side telemetry from the scan carry: per-slot totals a
-            # pure-device driver could read without syncing ys.  Upper-
-            # bounds the exact host accounting above (a request finishing
-            # mid-chunk keeps counting until its chunk boundary).
-            "device_flag_counters": {
-                k: np.asarray(v).tolist() for k, v in flags.items()
-            },
-        }
-
-
-# ---------------------------------------------------------------------------
-# per-token reference loop (parity oracle + benchmark baseline)
-# ---------------------------------------------------------------------------
-
-def decode_loop_reference(params, cfg, tokens, gen_len: int, *,
-                          entropy: Optional[KernelEntropy] = None,
-                          max_len: Optional[int] = None,
-                          modality=None, decode_fn=None) -> dict:
-    """The pre-engine decode driver: one jitted step + one host sync per
-    token over a statically batched prompt matrix.  Scan decode must
-    reproduce this loop's token stream exactly in operand-entropy mode
-    (same fold_in(base, global_step) noise; tested in test_serve.py).
-
-    ``decode_fn`` lets benchmarks pass a pre-compiled step so the timed
-    loop measures steady-state dispatch, not compilation.
-    """
-    tokens = jnp.asarray(tokens)
-    B, P = tokens.shape
-    max_len = max_len or P + gen_len
-    _, cache = M.prefill(params, cfg, tokens, max_len, modality)
-    decode = decode_fn or jax.jit(S.build_decode_step(cfg, entropy=entropy),
-                                  donate_argnums=(2,))
-    tok = tokens[:, -1]
-    rows = {"token": [], "H": [], "SE": [], "MI": [], "p_max": []}
-    t0 = time.perf_counter()
-    for i in range(gen_len):
-        out, cache = decode(params, tok, cache, jnp.asarray(i, jnp.int32))
-        tok = out["next_token"]
-        rows["token"].append(np.asarray(tok))        # per-token sync
-        for k in ("H", "SE", "MI", "p_max"):
-            rows[k].append(np.asarray(out[k]))
-    decode_s = time.perf_counter() - t0
-    return {name: np.stack(vals) for name, vals in rows.items()} | {
-        "decode_s": decode_s,
-        "decode_tok_per_s": gen_len * B / max(decode_s, 1e-9),
-    }
+__all__ = [
+    "BlockAllocator", "ModelRunner", "PrefixAdmit", "Request",
+    "ServeEngine", "ServeStats", "SlotScheduler",
+    "decode_loop_reference", "resolve_mesh", "make_requests", "serve",
+    "main",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -1373,7 +129,8 @@ def serve(args) -> dict:
         prefix_cache=args.prefix_cache == "on",
         decode_attn=args.decode_attn,
         prefill_mode=args.prefill, prefill_chunk=args.prefill_chunk,
-        trace_every=args.trace_every)
+        trace_every=args.trace_every,
+        mesh=resolve_mesh(getattr(args, "mesh", None)))
     result = engine.run(make_requests(args, cfg))
 
     # entropy HBM traffic of the head's MC draws per decoded token: the
@@ -1385,6 +142,9 @@ def serve(args) -> dict:
     result["entropy_mode"] = args.entropy
     result["entropy_hbm_bytes_per_token"] = 0 if in_kernel else \
         cfg.mc_samples * cfg.vocab_size * 4
+    result["mesh"] = (f"{engine.mesh.devices.size} devices "
+                      f"{dict(engine.mesh.shape)}"
+                      if engine.mesh is not None else "none")
     return result
 
 
@@ -1459,10 +219,19 @@ def main():
                     help="make the first N prompt tokens identical "
                          "across requests (shared-system-prompt traffic "
                          "for the prefix cache)")
+    ap.add_argument("--mesh", default=None,
+                    help="serve tensor-parallel on a DxM debug mesh "
+                         "(e.g. 1x4): params + paged KV pool shard over "
+                         "the model axis, bit-exact vs unsharded in "
+                         "operand mode; on CPU force devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=4")
     args = ap.parse_args()
     r = serve(args)
     print(f"served {r['num_requests']} requests / {r['gen_tokens']} tokens "
           f"in {r['total_s']:.2f}s")
+    if r["mesh"] != "none":
+        print(f"mesh: {r['mesh']}")
     print(f"prefill compile {r['prefill_compile_s']:.2f}s  "
           f"steady {r['prefill_steady_s'] * 1e3:.1f}ms  "
           f"({r['prefill_compiles']} shapes)")

@@ -15,6 +15,14 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.bayesian import GaussianVariational
+# serving-TP seam: no-op unless launch.engine.runner set a serve mesh —
+# each call site sits DIRECTLY on a sharded producer (column-parallel
+# matmul outputs; the kv-head-sharded attention read before wo), so the
+# forced all-gather (pure data movement) replicates the operand before
+# any elementwise tail or contraction can absorb the shard; that
+# producer-adjacent placement is what keeps sharded decode bitwise
+# equal to the unsharded reference (see partition.gather_rep)
+from repro.sharding.partition import gather_rep
 
 
 def dtype_of(cfg: ArchConfig):
@@ -189,6 +197,14 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     B, S, Hkv, D = k_cache.shape
     H = q.shape[2]
     rep = H // Hkv
+    # serve-TP: q arrives head-sharded (columns of wq).  rep is a FREE
+    # dim of the grouped dot below, so a shard would shrink the local
+    # row count and flip XLA between the gemm and matrix-vector
+    # emitters — the exact association split this function's rep==1
+    # padding exists to prevent.  All-gather q (pure data movement);
+    # the kv-head axis g is a BATCH dim of the dot, so a kv-head-
+    # sharded cache keeps the per-row reduction shape and stays exact.
+    q = gather_rep(q)
     qg = q.reshape(B, 1, Hkv, rep, D)
     if rep == 1:
         qg = jnp.concatenate([qg, jnp.zeros_like(qg)], axis=3)
@@ -368,8 +384,16 @@ def apply_attention(p, cfg: ArchConfig, x: jax.Array, *,
         v = _mm(x, p["wv"])
         if "bk" in p:
             k, v = k + p["bk"], v + p["bv"]
-        k = k.reshape(B, S, Hkv, hd)
-        v = v.reshape(B, S, Hkv, hd)
+        # serve-TP: wk/wv column shards land on hd after the reshape —
+        # the CONTRACTED dim of the score dot — and a q-side all-gather
+        # leaves that shard as the dot's only sharding, so GSPMD would
+        # partial-sum over D shards and all-reduce (a re-associated
+        # float reduction).  Gather adjacent to the projection instead:
+        # pure data movement, and every attention operand downstream is
+        # replicated (or kv-head/batch-sharded via the cache, which
+        # never re-associates a contraction).
+        k = gather_rep(k).reshape(B, S, Hkv, hd)
+        v = gather_rep(v).reshape(B, S, Hkv, hd)
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
         if kv_cache is not None:
@@ -416,7 +440,7 @@ def apply_attention(p, cfg: ArchConfig, x: jax.Array, *,
                                   q_offset=0)
             new_kv = (k, v)
     out = out.reshape(B, S, H * hd)
-    return _mm(out, p["wo"]), new_kv
+    return _mm(gather_rep(out), p["wo"]), new_kv
 
 
 def apply_attention_suffix(p, cfg: ArchConfig, x: jax.Array, *,
@@ -459,8 +483,9 @@ def apply_attention_suffix(p, cfg: ArchConfig, x: jax.Array, *,
     v = _mm(x, p["wv"])
     if "bk" in p:
         k, v = k + p["bk"], v + p["bv"]
-    k = k.reshape(B, S, Hkv, hd)
-    v = v.reshape(B, S, Hkv, hd)
+    # serve-TP: gather next to the projection (see apply_attention)
+    k = gather_rep(k).reshape(B, S, Hkv, hd)
+    v = gather_rep(v).reshape(B, S, Hkv, hd)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     kc, vc = prefix_kv
@@ -471,7 +496,7 @@ def apply_attention_suffix(p, cfg: ArchConfig, x: jax.Array, *,
                           kv_chunk=cfg.attn_kv_chunk,
                           q_offset=prefix_len)
     out = out.reshape(B, S, H * hd)
-    return _mm(out, p["wo"]), (k, v)
+    return _mm(gather_rep(out), p["wo"]), (k, v)
 
 
 def apply_attention_chunk(p, cfg: ArchConfig, x: jax.Array, *,
@@ -511,8 +536,9 @@ def apply_attention_chunk(p, cfg: ArchConfig, x: jax.Array, *,
     v = _mm(x, p["wv"])
     if "bk" in p:
         k, v = k + p["bk"], v + p["bv"]
-    k = k.reshape(B, S, Hkv, hd)
-    v = v.reshape(B, S, Hkv, hd)
+    # serve-TP: gather next to the projection (see apply_attention)
+    k = gather_rep(k).reshape(B, S, Hkv, hd)
+    v = gather_rep(v).reshape(B, S, Hkv, hd)
     positions = offset + jnp.arange(S)[None, :]
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
@@ -535,15 +561,16 @@ def apply_attention_chunk(p, cfg: ArchConfig, x: jax.Array, *,
                               kv_chunk=cfg.attn_kv_chunk,
                               q_offset=offset)
     out = out.reshape(B, S, H * hd)
-    return _mm(out, p["wo"]), (kc, vc)
+    return _mm(gather_rep(out), p["wo"]), (kc, vc)
 
 
 def make_cross_kv(p, cfg: ArchConfig, enc_out: jax.Array):
     """Precompute cross-attention K/V from encoder output (no RoPE)."""
     B, S, _ = enc_out.shape
     Hkv, hd = cfg.num_kv_heads, cfg.head_dim
-    k = _mm(enc_out, p["wk"]).reshape(B, S, Hkv, hd)
-    v = _mm(enc_out, p["wv"]).reshape(B, S, Hkv, hd)
+    # serve-TP: gather next to the projection (see apply_attention)
+    k = gather_rep(_mm(enc_out, p["wk"])).reshape(B, S, Hkv, hd)
+    v = gather_rep(_mm(enc_out, p["wv"])).reshape(B, S, Hkv, hd)
     return k, v
 
 
@@ -566,12 +593,20 @@ def init_mlp(key, cfg: ArchConfig, d_model: Optional[int] = None,
 
 
 def apply_mlp(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    # serve-TP: gather DIRECTLY on each column-sharded matmul output,
+    # before the activation.  A gather placed later — on act(g)*u just
+    # ahead of the down-projection — leaves dot(all-gather(h), w2) in
+    # the module, which XLA rewrites into per-shard partial dots plus
+    # an all-reduce over the ff contraction: a re-associated float sum
+    # that breaks bitwise parity with the unsharded engine.  With the
+    # gather adjacent to the producer the down-projection sees a plain
+    # replicated operand and stays a single local gemm.
     if cfg.mlp_activation == "relu2":
-        h = _mm(x, p["w1"])
+        h = gather_rep(_mm(x, p["w1"]))
         h = jnp.square(jax.nn.relu(h))
         return _mm(h, p["w2"])
-    g = _mm(x, p["w1"])
-    u = _mm(x, p["w3"])
+    g = gather_rep(_mm(x, p["w1"]))
+    u = gather_rep(_mm(x, p["w3"]))
     act = jax.nn.silu if cfg.mlp_activation == "silu" else jax.nn.gelu
     return _mm(act(g) * u, p["w2"])
 
@@ -605,8 +640,15 @@ def init_head(key, cfg: ArchConfig):
 def head_logits_mean(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     """Mean logits (training fwd uses MC draws via head_logits_sampled)."""
     w = p["q"].mu if "q" in p else p["w"]
-    logits = jnp.dot(x, w.astype(x.dtype),
-                     preferred_element_type=jnp.float32)
+    # vocab columns are exact per-shard; gather DIRECTLY on the dot
+    # output.  A gather placed after the softcap would let GSPMD sink
+    # the elementwise ops across the all-gather, parking the gather
+    # next to the softmax/entropy V-reductions in
+    # uncertainty_from_logits — which XLA then splits into per-shard
+    # partial sums, a re-associated reduction that drifts the
+    # uncertainty floats off the unsharded reference.
+    logits = gather_rep(jnp.dot(x, w.astype(x.dtype),
+                                preferred_element_type=jnp.float32))
     if cfg.logits_softcap:
         c = cfg.logits_softcap
         logits = c * jnp.tanh(logits / c)
@@ -649,8 +691,11 @@ def head_logits_sampled(p, x: jax.Array, cfg: ArchConfig,
         return head_logits_mean(p, x, cfg)
     q = p["q"]
     x32 = x.astype(jnp.float32)
-    mean = x32 @ q.mu
-    var = (x32 * x32) @ (q.sigma ** 2)
+    # serve-TP: gather each vocab-sharded dot output before the LRT
+    # combine (see head_logits_mean for why the gather must sit on the
+    # producer, not after the elementwise tail)
+    mean = gather_rep(x32 @ q.mu)
+    var = gather_rep((x32 * x32) @ (q.sigma ** 2))
     logits = mean + jnp.sqrt(jnp.maximum(var, 0.0)) * xi
     if cfg.logits_softcap:
         c = cfg.logits_softcap

@@ -79,6 +79,146 @@ def constrain(x: jax.Array, *spec) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# serving tensor-parallel context (set by launch.engine.runner.ModelRunner)
+# ---------------------------------------------------------------------------
+#
+# Serving TP is ALL-GATHER-ONLY: every weight whose contraction dim the
+# train rules shard (wo, w2, out_proj, embed-on-vocab, experts) stays
+# REPLICATED at serve time, and the few activations that feed a
+# contraction over a sharded dim are force-replicated (``gather_rep``)
+# first.  The reason is bitwise: a row-parallel matmul ends in an
+# all-reduce of per-shard PARTIAL SUMS, and float addition is not
+# associative — the sharded engine would drift from the unsharded
+# reference in the last ulp.  A forced all-gather is pure data movement
+# (no cross-shard reduction ever happens), so every f32 sum runs at full
+# extent on every device and the sharded runner replays the unsharded
+# token/uncertainty stream bit-for-bit in operand-entropy mode
+# (tests/test_mesh_runner.py).  The context is separate from the train
+# mesh context above so training sharding is unaffected.
+
+_serve_ctx = threading.local()
+
+
+def set_serve_mesh(mesh: Optional[Mesh]) -> None:
+    """Activate (or clear) the serving-TP mesh for the calling thread.
+
+    ``launch.engine.runner.ModelRunner`` sets this around every jitted
+    dispatch so the constraints below bake into the traced program; the
+    model code itself never knows whether it is running sharded.
+
+    CAVEAT: the mesh is hidden state that jax's trace cache cannot see.
+    Tracing the SAME function object with the same avals first without
+    and then with a mesh reuses the meshless jaxpr — every
+    ``gather_rep`` silently a no-op in the "sharded" run.  Jit a fresh
+    function object (closure/lambda) per mesh context, as
+    ``ModelRunner._jit`` does with its per-instance lambdas.
+    """
+    _serve_ctx.mesh = mesh
+
+
+def get_serve_mesh() -> Optional[Mesh]:
+    return getattr(_serve_ctx, "mesh", None)
+
+
+def gather_rep(x: jax.Array) -> jax.Array:
+    """Force ``x`` to replicated under the serve mesh (no-op otherwise).
+
+    Placed DIRECTLY on the output of each column-sharded matmul (q/k/v
+    projections, MLP w1/w3, head mu/rho dots).  Without the constraint
+    GSPMD is free to keep the operand sharded into the downstream
+    contraction and emit a partial-sum all-reduce, which is not bitwise
+    stable; with it the all-gather moves bytes but never reassociates a
+    float sum.  Placement matters: a gather deferred past the
+    elementwise tail (activation, bias, softcap) gets the elementwise
+    ops sunk across it by the partitioner, parking the all-gather
+    adjacent to the next dot/reduction — which XLA then still splits
+    into per-shard partial sums.  Adjacent to the producer, every
+    consumer sees a plain replicated operand and compiles to the same
+    single-device reduction as the unsharded module.
+
+    Two sharded shapes never need a gather at all: a BATCH dim of a dot
+    (the kv-head axis of the paged pool in ``decode_attention``) keeps
+    each per-row reduction at full extent, and elementwise ops on
+    identically-sharded operands (bias adds) are exact per shard.
+    """
+    mesh = get_serve_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
+
+
+# Serving param rules: column-parallel shards only.  Axes listed here are
+# all OUTPUT (free) dims of their matmuls — attention/ff/vocab columns —
+# so each device computes exact full-precision columns and no collective
+# ever reduces.  Everything else (wo, w2, embed, experts, router, ssm
+# mixers, norms) replicates; ``serve_pspecs`` falls back to replication
+# per-dim when a shape doesn't divide the mesh (``sanitize_pspecs``).
+_SERVE_RULES: list[tuple[str, dict[int, tuple]]] = [
+    # MoE experts / router / shared-expert stacks ("shared/w1", not the
+    # hybrid "shared/attn" block) and every ssm mixer stay replicated:
+    # their contractions (expert-combine sum over E, ssm recurrence)
+    # would cross shards.  Matched FIRST so the w1/w3/head column rules
+    # below cannot reach into these subtrees.
+    (r"(experts_|router|shared/w|in_proj|out_proj|conv_|A_log|D$|dt_)",
+     {}),
+    (r"head.*(mu|rho|w)$", {2: (None, "model")}),     # vocab columns
+    (r"(wq|wk|wv)$", {2: (None, "model")}),           # head columns
+    (r"(bq|bk|bv)$", {1: ("model",)}),
+    (r"(w1|w3)$", {2: (None, "model")}),              # ff columns
+    (r".*", {}),
+]
+
+
+def _serve_spec_for(path: str, ndim: int) -> P:
+    for pat, table in _SERVE_RULES:
+        if re.search(pat, path):
+            dims = table.get(ndim)
+            if dims is None:
+                for nd, d in table.items():
+                    if nd < ndim:
+                        dims = (None,) * (ndim - nd) + d
+                        break
+            return P(*dims) if dims is not None else P()
+    return P()
+
+
+def serve_pspecs(params: Any) -> Any:
+    """All-gather-only serving-TP PartitionSpec tree for ``params``.
+
+    Same name-based machinery as ``param_pspecs`` but over
+    ``_SERVE_RULES``: only column-parallel dims shard, so the sharded
+    decode stays bitwise equal to the unsharded reference (see the
+    module comment above).  Callers sanitize against the actual mesh
+    (``sanitize_pspecs``) before building shardings.
+    """
+
+    def spec_leaf(path, leaf):
+        if isinstance(leaf, GaussianVariational):
+            s = _serve_spec_for(path + "/mu", leaf.mu.ndim)
+            return GaussianVariational(mu=s, rho=s)  # type: ignore
+        return _serve_spec_for(path, getattr(leaf, "ndim", 0))
+
+    def walk(path, node):
+        if isinstance(node, GaussianVariational):
+            return spec_leaf(path, node)
+        if isinstance(node, dict):
+            return {k: walk(f"{path}/{k}", v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(f"{path}/{i}", v) for i, v in enumerate(node)]
+            return type(node)(t)
+        return spec_leaf(path, node)
+
+    return walk("", params)
+
+
+def serve_shardings_for(params: Any, mesh: Mesh) -> Any:
+    """NamedSharding tree placing ``params`` for the serving runner."""
+    specs = sanitize_pspecs(serve_pspecs(params), params, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
 # parameter partition rules
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,147 @@
+"""Mesh-sharded serving runner: bit-exactness, placement, fallbacks.
+
+The acceptance contract of serve tensor parallelism: a ``--mesh``
+runner on a forced-host multi-device CPU mesh replays the unsharded
+engine's token AND uncertainty streams bit-for-bit (operand-entropy
+mode) under staggered continuous-batching traffic, for every attention
+family.  The parity drive runs ``launch.engine.mesh_check`` in a
+SUBPROCESS because ``XLA_FLAGS=--xla_force_host_platform_device_count``
+must be pinned before jax initializes, and this test process already
+holds a 1-device jax.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_config, reduced
+from repro.launch.engine import ServeEngine, Request, resolve_mesh
+from repro.launch.mesh import make_debug_mesh
+from repro.models import registry as M
+from repro.sharding.partition import serve_pspecs
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_mesh_check(families: str) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.engine.mesh_check",
+         "--families", families, "--json"],
+        capture_output=True, text=True, env=env, timeout=540, cwd=REPO)
+    assert out.returncode == 0, out.stdout + out.stderr
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+# ---------------------------------------------------------------------------
+# sharded-vs-unsharded parity on a real 4-device mesh (subprocess)
+# ---------------------------------------------------------------------------
+
+class TestShardedParity:
+    def test_dense_and_moe_bitwise(self):
+        # dense: prefix cache + CoW + chunked prefill on the sharded
+        # runner; moe: Hkv=4 divides the model axis, so the paged KV
+        # pool really shards (the batch-dim exactness case)
+        rec = _run_mesh_check("dense,moe")
+        assert rec["ok"]
+        assert rec["mesh_devices"] == 4
+        for fam, r in rec["families"].items():
+            assert r["bitwise_equal"], (fam, r["errors"])
+        assert rec["families"]["dense"]["prefix_cache_hits"] > 0
+
+    def test_hybrid_and_encdec_bitwise(self):
+        # hybrid: replicated ssm state interleaved with sharded
+        # attention; encdec: cross-attention K/V through make_cross_kv
+        rec = _run_mesh_check("hybrid,encdec")
+        assert rec["ok"]
+        for fam, r in rec["families"].items():
+            assert r["bitwise_equal"], (fam, r["errors"])
+
+
+# ---------------------------------------------------------------------------
+# serve-TP partition rules (no mesh needed)
+# ---------------------------------------------------------------------------
+
+class TestServeRules:
+    def test_column_parallel_only(self):
+        cfg = reduced(get_config("qwen2_1_5b"))
+        params = M.init_params(jax.random.key(0), cfg)
+        specs = serve_pspecs(params)
+        blocks = specs["blocks"]["attn"]
+        # column (output) dims shard...
+        for name in ("wq", "wk", "wv"):
+            assert blocks[name] == P(None, None, "model")
+        assert blocks["bq"] == P(None, "model")
+        assert specs["blocks"]["mlp"]["w1"] == P(None, None, "model")
+        assert specs["head"]["q"].mu == P(None, "model")
+        # ...every contraction-feeding weight replicates (a row-parallel
+        # shard would end in a partial-sum all-reduce: not bitwise)
+        assert blocks["wo"] == P()
+        assert specs["blocks"]["mlp"]["w2"] == P()
+        assert specs["embed"]["table"] == P()
+
+    def test_moe_and_ssm_subtrees_replicate(self):
+        for arch in ("deepseek_moe_16b", "zamba2_7b"):
+            cfg = reduced(get_config(arch))
+            params = M.init_params(jax.random.key(0), cfg)
+            flat = jax.tree_util.tree_flatten_with_path(
+                serve_pspecs(params),
+                is_leaf=lambda x: isinstance(x, P))[0]
+            for kp, spec in flat:
+                path = "/".join(str(getattr(k, "key", k)) for k in kp)
+                if any(t in path for t in ("experts", "router", "in_proj",
+                                           "out_proj", "conv_", "A_log",
+                                           "dt_")):
+                    assert spec == P(), (path, spec)
+
+
+# ---------------------------------------------------------------------------
+# mesh construction + single-device degradation (in-process)
+# ---------------------------------------------------------------------------
+
+class TestMeshFallback:
+    def test_debug_mesh_falls_back_to_1d(self):
+        # (1, 4) cannot tile this 1-CPU process: 1D ("model",) fallback
+        mesh = make_debug_mesh((1, 4), ("data", "model"))
+        assert mesh.axis_names == ("model",)
+        assert mesh.devices.size == len(jax.devices())
+
+    def test_resolve_mesh_flag_forms(self):
+        assert resolve_mesh(None) is None
+        assert resolve_mesh("") is None
+        assert resolve_mesh("none") is None
+        with pytest.raises(ValueError):
+            resolve_mesh("4")
+
+    def test_one_device_mesh_engine_matches_meshless(self):
+        # on one device every serve spec degrades to replication, so
+        # --mesh must be a bitwise no-op (this is what lets the CI
+        # serve-smoke matrix pass the flag unconditionally)
+        cfg = dataclasses.replace(reduced(get_config("qwen2_1_5b")),
+                                  head_entropy="operand")
+        params = M.init_params(jax.random.key(0), cfg)
+
+        def reqs():
+            prompts = np.asarray(jax.random.randint(
+                jax.random.key(1), (3, 10), 0, cfg.vocab_size), np.int32)
+            return [Request(rid=i, prompt=prompts[i], max_new_tokens=5)
+                    for i in range(3)]
+
+        kw = dict(num_slots=2, max_len=24, chunk=4, kv_layout="paged",
+                  kv_block=8, kv_blocks=10)
+        ref = ServeEngine(params, cfg, **kw).run(reqs())
+        got = ServeEngine(params, cfg, mesh=resolve_mesh("1x4"),
+                          **kw).run(reqs())
+        for a, b in zip(ref["requests"], got["requests"]):
+            assert a.tokens == b.tokens
+            for f in ("H", "SE", "MI", "p_max"):
+                assert getattr(a, f) == getattr(b, f)
