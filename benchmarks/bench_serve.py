@@ -86,6 +86,22 @@ rows stay distinguishable without per-row re-stamping).  Fields:
                            sharded (indicative on CPU: forced host
                            devices share the same cores, so the ratio
                            measures collective overhead, not scaling)
+  spec_decode            uncertainty-gated speculative decoding row
+                         (shared-prefix first wave, the identical queue
+                         driven spec-off and spec-on; GATED on bitwise
+                         stream equality — a speculative stream that
+                         drifts from plain decode publishes nothing):
+    slots / shared_len / unique_len / gen_len / spec_k / draft_samples,
+    bitwise_equal          always True in an emitted row (the gate),
+    acceptance_rate, tokens_per_round, rounds, rollbacks,
+    full_model_calls_off / full_model_calls_spec
+                           full-S-sample dispatches each drive paid
+                           (a scan chunk costs ``chunk`` calls, a
+                           batched verify costs ONE),
+    full_model_calls_saved_frac   1 - spec/off (acceptance: >= 0.25),
+    off_tok_per_s / spec_tok_per_s / spec_vs_off_x   decode rate
+                           (indicative on CPU; the call count is the
+                           hardware-independent claim)
   long_prompt            chunked-vs-batch prefill interleaving row:
     long_len / short_len / gen_len / prefill_chunk of the workload,
     batch_interarrival_p99_s / chunked_interarrival_p99_s   worst gap
@@ -358,6 +374,79 @@ def run(quick: bool = False) -> dict:
         "prefill_compiles": lp["chunked"]["prefill_compiles"],
     }
 
+    # --- uncertainty-gated speculative decoding: verify-amortized row ---
+    # one first wave (num_requests == slots, equal gens): admission is
+    # FIFO-into-slot-order in both drives, so the slot-keyed operand
+    # noise streams line up token for token and bitwise equality is
+    # well-defined.  The prompts share a system prefix — the regime
+    # spec decode targets (seen text, low MI, drafts likely to survive
+    # the verify).  Savings are counted in full-S-sample dispatches,
+    # the quantity a verify round amortizes: a scan chunk costs
+    # ``chunk`` full-model calls, a batched verify costs ONE.
+    sp_slots, sp_shared, sp_unique = 4, 16, 8
+    sp_gen, sp_k = 32, 4
+    sp_max_len = 64                               # kv_block multiple
+    sp_sys = np.asarray(
+        jax.random.randint(jax.random.key(5), (sp_shared,), 0,
+                           cfg.vocab_size), np.int32)
+    sp_uniq = np.asarray(
+        jax.random.randint(jax.random.key(6), (sp_slots, sp_unique), 0,
+                           cfg.vocab_size), np.int32)
+
+    def spec_requests():
+        return [Request(rid=i,
+                        prompt=np.concatenate([sp_sys, sp_uniq[i]]),
+                        max_new_tokens=sp_gen) for i in range(sp_slots)]
+
+    sp = {}
+    for on in (False, True):
+        eng = ServeEngine(params, cfg, num_slots=sp_slots,
+                          max_len=sp_max_len, chunk=chunk,
+                          kv_layout="paged", kv_block=kv_block,
+                          spec_decode=on, spec_k=sp_k,
+                          spec_mi_threshold=float("inf"))
+        eng.run(spec_requests())                  # warm up compile
+        sp[on] = eng.run(spec_requests())
+    # THE GATE: no speculative number is published unless the spec-on
+    # stream (tokens AND the full uncertainty triplet) is bitwise
+    # identical to plain decode on every request
+    for a, b in zip(sp[False]["requests"], sp[True]["requests"]):
+        assert a.slot == b.slot and a.finish_reason == b.finish_reason
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        for name in ("H", "SE", "MI", "p_max"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, name), np.float32),
+                np.asarray(getattr(b, name), np.float32))
+    sd = sp[True]["spec_decode"]
+    calls_off = sp[False]["spec_decode"]["full_model_calls"]
+    calls_on = sd["full_model_calls"]
+    calls_saved = 1.0 - calls_on / max(calls_off, 1)
+    assert calls_saved >= 0.25, \
+        f"spec decode saved only {calls_saved:.0%} full-model calls " \
+        f"({calls_on} vs {calls_off}): below the 25% acceptance bar"
+    spec_row = {
+        "slots": sp_slots,
+        "shared_len": sp_shared,
+        "unique_len": sp_unique,
+        "gen_len": sp_gen,
+        "spec_k": sp_k,
+        "draft_samples": sd["draft_samples"],
+        "mi_threshold": sd["mi_threshold"],
+        "bitwise_equal": True,
+        "acceptance_rate": sd["acceptance_rate"],
+        "tokens_per_round": sd["tokens_per_round"],
+        "rounds": sd["rounds"],
+        "rollbacks": sd["rollbacks"],
+        "gated_slot_rounds": sd["gated_slot_rounds"],
+        "full_model_calls_off": calls_off,
+        "full_model_calls_spec": calls_on,
+        "full_model_calls_saved_frac": calls_saved,
+        "off_tok_per_s": sp[False]["decode_tok_per_s"],
+        "spec_tok_per_s": sp[True]["decode_tok_per_s"],
+        "spec_vs_off_x": sp[True]["decode_tok_per_s"]
+        / max(sp[False]["decode_tok_per_s"], 1e-9),
+    }
+
     return {
         "git_sha": git_sha(),
         # ONE stamp for the whole file: the hash covers the arch config
@@ -372,8 +461,12 @@ def run(quick: bool = False) -> dict:
                     unique_len=unique_len, fanout=n_pc),
             long_prompt=dict(short_len=lp_short, long_len=lp_long,
                              gen_len=lp_gen, kv_block=lp_block,
-                             max_len=lp_max_len, prefill_chunk=32)),
+                             max_len=lp_max_len, prefill_chunk=32),
+            spec=dict(slots=sp_slots, shared_len=sp_shared,
+                      unique_len=sp_unique, gen_len=sp_gen,
+                      spec_k=sp_k, max_len=sp_max_len)),
         "mesh_scaling": mesh_scaling_row(),
+        "spec_decode": spec_row,
         "long_prompt": long_prompt,
         "prefix_shared_prompt": prefix_shared,
         "sample_fanout": fanout,
@@ -490,6 +583,19 @@ def main(quick: bool = False, json_path: str = "BENCH_serve.json"):
           f"chunked {lp['chunked_tok_per_s']:.1f}; "
           f"{lp['table_growths']} table growths, "
           f"{lp['prefill_chunks']} prefill chunks")
+    sd = r["spec_decode"]
+    print(f"  spec decode (shared prefix {sd['shared_len']}, gen "
+          f"{sd['gen_len']}, k={sd['spec_k']}, "
+          f"{sd['draft_samples']}-sample draft):")
+    print(f"    bitwise vs plain decode: "
+          f"{'OK' if sd['bitwise_equal'] else 'MISMATCH'}; "
+          f"acceptance {sd['acceptance_rate']:.0%}, "
+          f"{sd['tokens_per_round']:.2f} tokens/round, "
+          f"{sd['rollbacks']} rollbacks")
+    print(f"    full-model calls: {sd['full_model_calls_spec']} vs "
+          f"{sd['full_model_calls_off']} plain "
+          f"({sd['full_model_calls_saved_frac']:.0%} saved; "
+          f"{sd['spec_vs_off_x']:.2f}x decode tok/s)")
     ms = r["mesh_scaling"]
     print(f"  mesh scaling ({ms['mesh']} forced-host mesh, "
           f"{ms['devices']} devices, {ms['arch']} reduced):")

@@ -95,7 +95,10 @@ class ServeEngine:
                  kv_block: int = 16, kv_blocks: Optional[int] = None,
                  prefix_cache: bool = False, decode_attn: str = "gather",
                  prefill_mode: str = "batch", prefill_chunk: int = 32,
-                 trace_every: int = 1, mesh=None):
+                 trace_every: int = 1, mesh=None,
+                 spec_decode: bool = False, spec_k: int = 4,
+                 spec_mi_threshold: Optional[float] = None,
+                 spec_draft_s: int = 1):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if kv_block < 1:
@@ -120,6 +123,31 @@ class ServeEngine:
                              f"{prefill_chunk}")
         if trace_every < 1:
             raise ValueError(f"trace_every must be >= 1, got {trace_every}")
+        if spec_decode:
+            if spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+            if spec_draft_s < 0:
+                raise ValueError(
+                    f"spec_draft_s must be >= 0, got {spec_draft_s}")
+            # losslessness hinges on the head noise being a pure function
+            # of (slot, depth): the seeded/kernel streams fold the GLOBAL
+            # step into the key, so a verify replayed at the same depth
+            # but a different step could not reproduce plain decode's draw
+            if entropy is not None or cfg.head_entropy == "kernel":
+                raise ValueError(
+                    "speculative decoding requires the operand entropy "
+                    "mode (depth-keyed head noise); the seeded/kernel "
+                    "streams fold the global step and cannot replay "
+                    "plain decode's draws at draft positions")
+            if not M.supports_spec_decode(cfg):
+                raise ValueError(
+                    f"family {cfg.family!r} does not support speculative "
+                    "decoding")
+        self.spec_decode = spec_decode
+        self.spec_k = spec_k
+        self.spec_mi_threshold = mi_threshold if spec_mi_threshold is None \
+            else spec_mi_threshold
+        self.spec_draft_s = spec_draft_s
         self.num_slots = num_slots
         self.max_len = max_len
         self.chunk = chunk
@@ -183,7 +211,9 @@ class ServeEngine:
             mi_threshold=mi_threshold, se_threshold=se_threshold,
             kv_layout=self.kv_layout, kv_block=kv_block,
             kv_blocks=self.kv_blocks, prefix_cache=self.prefix_cache,
-            prefill_mode=self.prefill_mode, mesh=mesh)
+            prefill_mode=self.prefill_mode, mesh=mesh,
+            spec_decode=spec_decode, spec_k=spec_k,
+            spec_draft_s=spec_draft_s)
         # mesh mode re-places params by the serve-TP rules; the engine
         # always dispatches the runner's copy
         self.params = self.runner.params
@@ -198,6 +228,9 @@ class ServeEngine:
         self._copy = self.runner._copy
         self._set_len = self.runner._set_len
         self._scan = self.runner._scan
+        self._draft = self.runner._draft
+        self._verify = self.runner._verify
+        self._spec_commit = self.runner._spec_commit
 
     def _bucket(self, n: int) -> int:
         """Prompt-length bucket: next kv_block multiple (dense strips
@@ -282,6 +315,120 @@ class ServeEngine:
             return jnp.zeros((batch, cfg.num_prefix_embeds, cfg.d_model),
                              jnp.float32)
         return None
+
+    def _spec_round(self, sched, stats, decoding, tok, cache, active,
+                    flags):
+        """One uncertainty-gated speculative round (replaces a scan
+        chunk): a k-step shared-body draft proposes cheap-head tokens
+        for every slot, ONE batched full-S-sample verify re-draws the
+        uncertain head over the draft's stacked hiddens at the same
+        (slot, depth) noise sites, and the host keeps each slot's
+        longest agreeing prefix plus the first verified correction.
+
+        Because the draft runs the SAME body (same params, same cache)
+        as plain decode, every accepted position's KV/state writes are
+        bitwise what plain decode would have written, and the verify
+        head at depth-keyed operand noise reproduces plain decode's
+        emissions exactly — so the accepted stream is bitwise identical
+        to spec-decode off (tests/test_spec_decode.py).  Slots whose
+        carried MI sits at/above the gate ride the round as plain
+        decode: position 1's verified token only.  Rejected suffixes
+        roll back host-side (``scheduler.rollback`` frees the decode
+        blocks past the kept depth) and device-side (``spec_commit``
+        pins tok/len and rewinds recurrent ssm/conv state); junk KV
+        above the kept depth stays masked until overwritten.
+        """
+        runner = self.runner
+        k = self.spec_k
+        parts = [(slot, req) for slot, req in sched.active()
+                 if slot in decoding]
+        lens0 = np.zeros((self.num_slots,), np.int32)
+        for slot, req in parts:
+            lens0[slot] = len(req.prompt) + len(req.tokens)
+        t0 = time.perf_counter()
+        tok, cache, dys = self._draft(self.params, tok, cache)
+        vys = self._verify(self.params, dys["hidden"],
+                           runner.put_replicated(jnp.asarray(lens0)))
+        host = jax.device_get({"draft": dys["token"], **vys})
+        stats.arrivals.append(time.perf_counter())
+        stats.decode_s += time.perf_counter() - t0
+        stats.spec_rounds += 1
+        stats.full_model_calls += 1          # ONE batched verify
+        stats.steps_run += k
+        commit_mask = np.zeros((self.num_slots,), bool)
+        commit_tok = np.zeros((self.num_slots,), np.int32)
+        commit_len = np.zeros((self.num_slots,), np.int32)
+        commit_idx = np.zeros((self.num_slots,), np.int32)
+        epi_add = np.zeros((self.num_slots,), np.int32)
+        alea_add = np.zeros((self.num_slots,), np.int32)
+        for slot, req in parts:
+            if req.last_mi < self.spec_mi_threshold:
+                a = 0
+                while a < k and host["draft"][a, slot] \
+                        == host["next_token"][a, slot]:
+                    a += 1
+                stats.spec_drafted += k
+                stats.spec_accepted += a
+            else:
+                # carried MI at/above the gate: no drafting credit —
+                # the slot emits position 1's verified token only,
+                # exactly one plain decode step's worth
+                a = 0
+                stats.spec_gated += 1
+            m = min(a + 1, k)
+            emitted = 0
+            finished = False
+            for j in range(m):
+                tk = int(host["next_token"][j, slot])
+                req.tokens.append(tk)
+                for name in ("H", "SE", "MI", "p_max"):
+                    getattr(req, name).append(float(host[name][j, slot]))
+                req.epistemic_flags += int(host["epistemic"][j, slot])
+                req.aleatoric_flags += int(host["aleatoric"][j, slot])
+                epi_add[slot] += int(host["epistemic"][j, slot])
+                alea_add[slot] += int(host["aleatoric"][j, slot])
+                req.last_mi = float(host["MI"][j, slot])
+                emitted = j + 1
+                done_eos = self.eos_id is not None and tk == self.eos_id
+                if done_eos or len(req.tokens) >= req.max_new_tokens:
+                    req.t_finish = time.perf_counter()
+                    req.finish_reason = "eos" if done_eos else "length"
+                    sched.evict(slot)
+                    decoding.discard(slot)
+                    active = active.at[slot].set(False)
+                    finished = True
+                    break
+            stats.spec_emitted += emitted
+            if finished:
+                continue
+            # keep depth lens0+emitted: free the decode blocks the
+            # rejected draft tail grew into (host) and pin the slot's
+            # carry token / device len / recurrent state (device).
+            # emitted == k still commits — the carry token must be the
+            # VERIFIED v_k, not the draft's final proposal.
+            if emitted < k:
+                stats.spec_rollbacks += 1
+                sched.rollback(slot, int(lens0[slot]) + emitted)
+            commit_mask[slot] = True
+            commit_tok[slot] = host["next_token"][emitted - 1, slot]
+            commit_len[slot] = lens0[slot] + emitted
+            commit_idx[slot] = emitted - 1
+        states = {leaf: dys[leaf] for leaf in M.RECURRENT_LEAVES
+                  if leaf in dys}
+        tok, cache = self._spec_commit(
+            cache, tok,
+            runner.put_replicated(jnp.asarray(commit_mask)),
+            runner.put_replicated(jnp.asarray(commit_tok)),
+            runner.put_replicated(jnp.asarray(commit_len)),
+            states,
+            runner.put_replicated(jnp.asarray(commit_idx)))
+        # device flag telemetry: exactly the emitted positions' flags
+        # (the scan carry instead counts junk steps to the chunk edge)
+        flags = {"epistemic": flags["epistemic"]
+                 + runner.put_replicated(jnp.asarray(epi_add)),
+                 "aleatoric": flags["aleatoric"]
+                 + runner.put_replicated(jnp.asarray(alea_add))}
+        return tok, cache, active, flags
 
     def run(self, requests: list[Request]) -> dict:
         """Serve ``requests`` to completion; returns engine metrics.
@@ -474,6 +621,16 @@ class ServeEngine:
                         # (no junk window between prefill and decode)
                         activate(slot, req)
 
+                # a speculative round replaces this iteration's scan
+                # chunk when ANY decoding slot's carried MI sits strictly
+                # below the gate (threshold 0 therefore never drafts and
+                # the loop is byte-for-byte the plain scan path); decided
+                # before grants so the lookahead matches what the round
+                # will write (k draft positions instead of a chunk)
+                run_spec = self.spec_decode and any(
+                    req.last_mi < self.spec_mi_threshold
+                    for slot, req in sched.active() if slot in decoding)
+                ahead = self.spec_k if run_spec else self.chunk
                 if paged:
                     # incremental grant: map the blocks the coming chunk
                     # can write, on demand from the pool (capped at each
@@ -484,7 +641,7 @@ class ServeEngine:
                         if slot in prefilling:
                             continue     # prompt blocks mapped at admission
                         ids = sched.grant(slot, len(req.prompt)
-                                          + min(len(req.tokens) + self.chunk,
+                                          + min(len(req.tokens) + ahead,
                                                 req.max_new_tokens))
                         if ids is None:
                             # the pool cannot grow this slot even after
@@ -497,6 +654,7 @@ class ServeEngine:
                                 getattr(req, name).clear()
                             req.epistemic_flags = 0
                             req.aleatoric_flags = 0
+                            req.last_mi = float("inf")
                             decoding.discard(slot)
                             active = active.at[slot].set(False)
                             stats.preemptions += 1
@@ -512,9 +670,11 @@ class ServeEngine:
                 if paged:
                     MB = sched.block_tables.shape[1]
                     # the gather path materializes every slot's full
-                    # logical span each step, occupied or not
-                    stats.attn_blocks_span += self.num_slots * MB \
-                        * self.chunk
+                    # logical span each step, occupied or not (a spec
+                    # round's draft reads decode attention for its k
+                    # steps exactly like k scan steps; the verify is
+                    # head-only and touches no KV)
+                    stats.attn_blocks_span += self.num_slots * MB * ahead
                     if self.decode_attn == "kernel":
                         # the kernel reads only mapped blocks under
                         # each occupied slot's depth
@@ -527,8 +687,16 @@ class ServeEngine:
                             stats.attn_blocks_read += sum(
                                 kv_blocks_read(len0 + t + 1, mapped,
                                                self.kv_block, MB)
-                                for t in range(self.chunk))
+                                for t in range(ahead))
+
+                if run_spec:
+                    tok, cache, active, flags = self._spec_round(
+                        sched, stats, decoding, tok, cache, active, flags)
+                    continue
+
                 stats.chunks_run += 1
+                stats.full_model_calls += self.chunk
+                stats.steps_run += self.chunk
                 t0 = time.perf_counter()
                 tok, cache, flags, ys = self._scan(
                     self.params, tok, cache, jnp.asarray(step0, jnp.int32),
@@ -548,6 +716,7 @@ class ServeEngine:
                             getattr(req, name).append(float(ys[name][t, slot]))
                         req.epistemic_flags += int(ys["epistemic"][t, slot])
                         req.aleatoric_flags += int(ys["aleatoric"][t, slot])
+                        req.last_mi = float(ys["MI"][t, slot])
                         done_eos = self.eos_id is not None and tk == self.eos_id
                         if done_eos or len(req.tokens) >= req.max_new_tokens:
                             req.t_finish = time.perf_counter()

@@ -85,7 +85,9 @@ class ModelRunner:
                  mi_threshold: float, se_threshold: float,
                  kv_layout: str, kv_block: int, kv_blocks: int,
                  prefix_cache: bool, prefill_mode: str,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 spec_decode: bool = False, spec_k: int = 4,
+                 spec_draft_s: int = 1):
         self.cfg = cfg
         self.max_len = max_len
         self.kv_layout = kv_layout
@@ -181,6 +183,21 @@ class ModelRunner:
                                 mi_threshold=mi_threshold,
                                 se_threshold=se_threshold),
             donate_argnums=(2,))
+        self._draft = self._verify = self._spec_commit = None
+        if spec_decode:
+            # speculative round: k-step shared-body draft (cache donated
+            # forward like the scan's), ONE vmapped full-S verify over
+            # the stacked hiddens, then the masked rollback/commit
+            self._draft = self._jit(
+                S.build_spec_draft(cfg, entropy=entropy, k=spec_k,
+                                   draft_samples=spec_draft_s),
+                donate_argnums=(2,))
+            self._verify = self._jit(
+                S.build_spec_verify(cfg, entropy=entropy, k=spec_k,
+                                    mi_threshold=mi_threshold,
+                                    se_threshold=se_threshold))
+            self._spec_commit = self._jit(S.build_spec_commit(cfg),
+                                          donate_argnums=(0,))
 
     def _jit(self, fn, **kw):
         """jit + serve-mesh context around every dispatch: tracing

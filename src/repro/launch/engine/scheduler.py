@@ -38,6 +38,17 @@ class Request:
     p_max: list = dataclasses.field(default_factory=list)
     epistemic_flags: int = 0
     aleatoric_flags: int = 0
+    # MI of the most recently harvested token; the engine's speculative
+    # rounds gate on it (only slots with last_mi strictly below the
+    # spec threshold draft).  +inf until the first token lands — a fresh
+    # or just-preempted slot never speculates before the model has shown
+    # it is confident there.
+    last_mi: float = float("inf")
+    # the slot this request was (last) admitted into.  Telemetry, but
+    # load-bearing for parity tests: operand-mode decode noise folds the
+    # slot index, so two runs only produce bitwise-equal streams for
+    # requests that landed in the same slot.
+    slot: Optional[int] = None
 
     @property
     def latency_s(self) -> float:
@@ -235,6 +246,7 @@ class SlotScheduler:
                         break
                 else:
                     req = self.queue.popleft()
+                req.slot = i
                 self.slots[i] = req
                 placed.append((i, req))
         return placed
@@ -272,6 +284,32 @@ class SlotScheduler:
         self._slot_blocks[slot].extend(ids)
         self.table_version += 1
         return ids
+
+    def rollback(self, slot: int, target_len: int) -> int:
+        """Shrink a slot back to ``target_len`` tokens after a partially
+        rejected speculative round: decode-granted blocks beyond
+        ``blocks_for(target_len)`` return to the pool and re-credit the
+        slot's grant budget.  Only ever drops blocks this slot drew via
+        ``grant`` AFTER its prompt landed (target_len >= prompt length
+        + 1 by construction), so every freed block is exclusively owned
+        (refcount 1, never a shared prefix-cache block).  Junk KV the
+        draft wrote into the kept tail block is masked by decode
+        attention (positions >= len) and overwritten by later steps.
+        Returns the number of blocks released."""
+        alloc = self.allocator
+        if alloc is None:
+            return 0
+        keep = alloc.blocks_for(target_len)
+        blocks = self._slot_blocks[slot]
+        if keep >= len(blocks):
+            return 0
+        drop = blocks[keep:]
+        del blocks[keep:]
+        alloc.free(drop)
+        self._slot_budget[slot] += len(drop)
+        self.block_tables[slot, keep:] = -1
+        self.table_version += 1
+        return len(drop)
 
     def preempt(self, slot: int) -> Request:
         """Evict a slot whose growth grant failed and requeue its

@@ -53,6 +53,20 @@ class ServeStats:
         self.attn_blocks_span = 0
         self.prefill_chunks = 0
         self.preemptions = 0
+        # speculative decoding: rounds run, proposals drafted/accepted/
+        # emitted, partial-round rollbacks, and MI-gated (non-drafting)
+        # slot-rounds.  full_model_calls counts full-S-sample dispatches
+        # (chunk per scan, ONE per batched verify) — the quantity spec
+        # decode exists to reduce; steps_run the real KV-advancing steps
+        # either path executed (replaces the chunks_run*chunk estimate)
+        self.spec_rounds = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
+        self.spec_rollbacks = 0
+        self.spec_gated = 0
+        self.full_model_calls = 0
+        self.steps_run = 0
         # decode-token inter-arrival: one timestamp per scan that served
         # at least one decoding slot — the stall a long batch prefill
         # injects between consecutive chunks is exactly what chunked
@@ -113,7 +127,7 @@ class ServeStats:
         # block-sparse decode attention accounting: KV bytes the selected
         # read path pulls from HBM per decode step vs the full logical
         # span (what gather materializes regardless of residency)
-        steps_run = self.chunks_run * engine.chunk
+        steps_run = self.steps_run
         if paged:
             read_blocks = self.attn_blocks_read \
                 if engine.decode_attn == "kernel" else self.attn_blocks_span
@@ -187,6 +201,27 @@ class ServeStats:
             "prefill_compiles": len(self.seen_prefill_shapes),
             "table_growths": sched.table_growths,
             "preemptions": self.preemptions,
+            # uncertainty-gated speculative decoding: acceptance per
+            # drafted proposal, emitted tokens per round, and the
+            # full-S-sample dispatch count the rounds amortize (a scan
+            # chunk costs ``chunk`` full-model calls, a verify ONE)
+            "spec_decode": {
+                "enabled": engine.spec_decode,
+                "k": engine.spec_k,
+                "mi_threshold": engine.spec_mi_threshold,
+                "draft_samples": engine.spec_draft_s,
+                "rounds": self.spec_rounds,
+                "drafted": self.spec_drafted,
+                "accepted": self.spec_accepted,
+                "acceptance_rate": self.spec_accepted
+                / max(self.spec_drafted, 1),
+                "emitted": self.spec_emitted,
+                "tokens_per_round": self.spec_emitted
+                / max(self.spec_rounds, 1),
+                "rollbacks": self.spec_rollbacks,
+                "gated_slot_rounds": self.spec_gated,
+                "full_model_calls": self.full_model_calls,
+            },
             # worst gap between consecutive decode-serving scans: the
             # stall a monolithic batch prefill injects mid-stream, which
             # interleaved chunked prefill bounds at ~one chunk's compute

@@ -28,7 +28,11 @@ copy-on-write radix prefix cache over the pool; ``--decode-attn
 kernel`` swaps the decode read path to the block-sparse Pallas kernel
 (gather is the reference); ``--prefill chunked`` interleaves
 Sarathi-style prompt chunks with running decode (batch is the
-reference); block tables GROW on demand and exhausted grants preempt.
+reference); block tables GROW on demand and exhausted grants preempt;
+``--spec-decode on`` runs uncertainty-gated speculative rounds (k-step
+shared-body draft + one batched full-sample verify, MI-gated per slot)
+whose accepted stream is bitwise identical to spec-decode off in
+operand-entropy mode (tests/test_spec_decode.py).
 
 ``--mesh DxM`` (e.g. ``--mesh 1x4``) serves decode tensor-parallel
 over the ``model`` axis of a debug mesh: parameters shard by the
@@ -51,6 +55,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 
 import jax
 import numpy as np
@@ -130,7 +135,10 @@ def serve(args) -> dict:
         decode_attn=args.decode_attn,
         prefill_mode=args.prefill, prefill_chunk=args.prefill_chunk,
         trace_every=args.trace_every,
-        mesh=resolve_mesh(getattr(args, "mesh", None)))
+        mesh=resolve_mesh(getattr(args, "mesh", None)),
+        spec_decode=args.spec_decode == "on", spec_k=args.spec_k,
+        spec_mi_threshold=args.spec_mi_threshold,
+        spec_draft_s=args.spec_draft_s)
     result = engine.run(make_requests(args, cfg))
 
     # entropy HBM traffic of the head's MC draws per decoded token: the
@@ -219,13 +227,34 @@ def main():
                     help="make the first N prompt tokens identical "
                          "across requests (shared-system-prompt traffic "
                          "for the prefix cache)")
+    ap.add_argument("--spec-decode", choices=("on", "off"), default="off",
+                    help="'on': uncertainty-gated speculative decoding — "
+                         "a k-step shared-body draft proposes tokens with "
+                         "a cheap head, ONE batched full-sample verify "
+                         "re-draws the uncertain head at the same (slot, "
+                         "depth) noise sites, and only slots whose "
+                         "carried MI sits below --spec-mi-threshold "
+                         "draft; the accepted stream is bitwise identical "
+                         "to spec-decode off (needs --entropy operand)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft positions per speculative round")
+    ap.add_argument("--spec-mi-threshold", type=float, default=None,
+                    help="MI gate for drafting (default: --mi-threshold); "
+                         "0 never speculates")
+    ap.add_argument("--spec-draft-s", type=int, default=1,
+                    help="head samples for draft proposals (0 = "
+                         "deterministic mean head)")
     ap.add_argument("--mesh", default=None,
                     help="serve tensor-parallel on a DxM debug mesh "
                          "(e.g. 1x4): params + paged KV pool shard over "
                          "the model axis, bit-exact vs unsharded in "
                          "operand mode; on CPU force devices with "
-                         "XLA_FLAGS=--xla_force_host_platform_device_"
-                         "count=4")
+                         "XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=4")
+    ap.add_argument("--stats-json", default=None, metavar="PATH",
+                    help="also dump the run's stats dict (counters only, "
+                         "no per-request streams) as JSON — what the CI "
+                         "smoke legs assert against")
     args = ap.parse_args()
     r = serve(args)
     print(f"served {r['num_requests']} requests / {r['gen_tokens']} tokens "
@@ -269,6 +298,16 @@ def main():
     else:
         print(f"kv: dense strips, {kv['bytes_in_use_peak'] / 1e6:.2f} MB "
               f"resident for the whole run")
+    sd = r["spec_decode"]
+    if sd["enabled"]:
+        print(f"spec decode: k={sd['k']}, {sd['rounds']} rounds, "
+              f"{sd['accepted']}/{sd['drafted']} proposals accepted "
+              f"({sd['acceptance_rate']:.0%}), "
+              f"{sd['tokens_per_round']:.2f} tokens/round, "
+              f"{sd['rollbacks']} rollbacks, "
+              f"{sd['gated_slot_rounds']} MI-gated slot-rounds, "
+              f"{sd['full_model_calls']} full-model calls for "
+              f"{r['gen_tokens']} tokens")
     pc = r["prefix_cache"]
     if pc["enabled"]:
         print(f"prefix cache: {pc['hits']}/{pc['hits'] + pc['misses']} "
@@ -282,6 +321,11 @@ def main():
     for r_ in r["requests"]:
         print(f"  #{r_.rid} ({r_.finish_reason}): "
               + np.array2string(np.asarray(r_.MI), precision=4))
+    if args.stats_json:
+        payload = {k: v for k, v in r.items() if k != "requests"}
+        with open(args.stats_json, "w") as f:
+            json.dump(payload, f, indent=2, default=float)
+        print(f"stats written to {args.stats_json}")
 
 
 if __name__ == "__main__":

@@ -230,6 +230,115 @@ def build_scan_decode(cfg: ArchConfig, entropy=None, chunk: int = 8,
 
 
 # ---------------------------------------------------------------------------
+# speculative decoding (draft / verify / commit)
+# ---------------------------------------------------------------------------
+
+def build_spec_draft(cfg: ArchConfig, entropy=None, k: int = 4,
+                     draft_samples: int = 1):
+    """``k``-step draft pass for uncertainty-gated speculative decoding.
+
+    Operand-entropy mode ONLY (the engine validates): the head noise is
+    then a pure function of (slot, depth), never of the global step, so
+    draft and verify can replay plain decode's stream at equal sites.
+
+    The draft SHARES the full model body: each step runs
+    ``M.decode_hidden`` — whose KV/state writes at the slot's pre-step
+    depth are bitwise the writes plain decode would do for the same fed
+    token — and proposes with a cheap ``draft_samples``-draw head
+    (0 = the deterministic mean head).  No separate draft cache exists;
+    a rejected suffix leaves junk KV above the rolled-back ``len``,
+    which every decode read masks and later writes overwrite.
+
+    Returns ``spec_draft(params, token, cache) -> (token, cache, ys)``
+    with ``ys = {token (k, B) proposals, hidden (k, B, d) pre-head
+    hiddens}`` plus the post-step recurrent leaves (``ssm``/``conv``)
+    stacked for rollback (``build_spec_commit``).
+    """
+    base = _decode_base_key(entropy)
+
+    def spec_draft(params, token, cache):
+        def body(carry, _):
+            tok, cache = carry
+            depth = cache["len"]
+            hidden, cache = M.decode_hidden(params, cfg, tok, cache)
+            out = M.head_outputs(params, cfg, hidden, depth, base,
+                                 num_samples=draft_samples)
+            ys = {"token": out["next_token"], "hidden": hidden}
+            for leaf in M.RECURRENT_LEAVES:
+                if leaf in cache:
+                    ys[leaf] = cache[leaf]
+            return (out["next_token"], cache), ys
+
+        (token, cache), ys = jax.lax.scan(body, (token, cache), None,
+                                          length=k)
+        return token, cache, ys
+
+    return spec_draft
+
+
+def build_spec_verify(cfg: ArchConfig, entropy=None, k: int = 4,
+                      mi_threshold: float = 0.05,
+                      se_threshold: float = 1.0):
+    """ONE batched full-S-sample verify over the k draft positions.
+
+    ``spec_verify(params, hiddens, lens0)``: ``hiddens`` are the draft
+    pass's stacked (k, B, d) pre-head hiddens, ``lens0`` the (B,)
+    pre-round depths.  Runs the family's exact uncertain head
+    (``M.head_outputs``) vmapped over positions, at depth ``lens0 + j``
+    for position j — in operand mode the depth-keyed noise
+    (``layers.decode_head_noise`` folds (slot, depth), never the step)
+    makes the vmapped head BITWISE identical to k sequential per-step
+    heads, so verify output j IS what plain decode would have emitted
+    there (tests/test_spec_decode.py).  Also emits the engine's
+    epistemic/aleatoric gating flags per position.
+    """
+    base = _decode_base_key(entropy)
+
+    def spec_verify(params, hiddens, lens0):
+        def one(j, h):
+            out = M.head_outputs(params, cfg, h, lens0 + j, base)
+            is_epi = out["MI"] > mi_threshold
+            is_alea = (out["SE"] > se_threshold) & ~is_epi
+            return dict(out, epistemic=is_epi, aleatoric=is_alea)
+
+        return jax.vmap(one)(jnp.arange(k, dtype=jnp.int32), hiddens)
+
+    return spec_verify
+
+
+def build_spec_commit(cfg: ArchConfig):
+    """Device-side rollback/commit after a speculative round.
+
+    ``spec_commit(cache, token, mask, new_tok, new_len, states, idx)``:
+    ``mask`` (B,) selects the slots keeping spec-round results (active
+    participants that did not finish); their carry token and depth are
+    pinned to ``new_tok``/``new_len`` (= pre-round len + emitted).  KV
+    written above the rolled-back ``len`` needs no cleanup — decode
+    attention masks positions >= len and later steps overwrite — but
+    the hybrid/ssm RECURRENT state must rewind: ``states`` holds the
+    draft scan's stacked (k, L, B, ...) post-step leaves and ``idx``
+    (B,) picks index ``emitted - 1`` (the state after the last kept
+    step) per slot.  Unmasked slots keep their (junk-advanced) state,
+    exactly like inactive slots under a plain scan chunk.
+    """
+    def spec_commit(cache, token, mask, new_tok, new_len, states, idx):
+        token = jnp.where(mask, new_tok, token)
+        cache = dict(cache, len=jnp.where(mask, new_len, cache["len"]))
+        for leaf in M.RECURRENT_LEAVES:
+            if leaf not in cache:
+                continue
+            st = jnp.moveaxis(states[leaf], 2, 0)          # (B, k, L, ...)
+            picked = jax.vmap(lambda s, i: s[i])(st, idx)  # (B, L, ...)
+            picked = jnp.moveaxis(picked, 0, 1)            # (L, B, ...)
+            keep = mask.reshape((1, -1) + (1,) * (picked.ndim - 2))
+            cache[leaf] = jnp.where(
+                keep, picked.astype(cache[leaf].dtype), cache[leaf])
+        return token, cache
+
+    return spec_commit
+
+
+# ---------------------------------------------------------------------------
 # dry-run input specs + shardings
 # ---------------------------------------------------------------------------
 

@@ -19,8 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.uncertainty import uncertainty_from_logits
 from repro.models import layers as L
+from repro.models import uncertain_head as U
 from repro.sharding.partition import constrain
 
 ENC_LEN = 1024
@@ -242,8 +242,9 @@ def prefill_chunk(params, cfg: ArchConfig, tokens: jax.Array, cache: dict,
     return cache
 
 
-def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
-                key: jax.Array):
+def decode_hidden(params, cfg: ArchConfig, token: jax.Array, cache: dict):
+    """The KV-writing decode body (see transformer.decode_hidden); the
+    cross-attention KV strips pass through untouched."""
     x = L.apply_embed(params["embed"], token[:, None])
     x = constrain(x, "batch", None, None)
     cache_len = cache["len"]
@@ -263,17 +264,12 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
         (params["decoder"], cache["k"], cache["v"], cache["ck"],
          cache["cv"]))
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    hidden = x[:, 0]
-    head = params["head"]
-    if "q" in head:
-        xi = L.decode_head_noise(key, cache_len, cfg.mc_samples,
-                                 cfg.vocab_size)
-        logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
-    else:
-        logits = L.head_logits_mean(head, hidden, cfg)[None]
-    unc = uncertainty_from_logits(logits)
-    outputs = {"next_token": unc["p_mean"].argmax(-1).astype(jnp.int32),
-               "H": unc["H"], "SE": unc["SE"], "MI": unc["MI"],
-               "p_max": unc["p_mean"].max(-1)}
-    return outputs, {"k": kvs[0], "v": kvs[1], "ck": cache["ck"],
+    return x[:, 0], {"k": kvs[0], "v": kvs[1], "ck": cache["ck"],
                      "cv": cache["cv"], "len": cache_len + 1}
+
+
+def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
+                key: jax.Array):
+    hidden, new_cache = decode_hidden(params, cfg, token, cache)
+    return U.head_outputs(params, cfg, hidden, cache["len"], key), \
+        new_cache

@@ -21,8 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.uncertainty import uncertainty_from_logits
 from repro.models import layers as L
+from repro.models import uncertain_head as U
 from repro.models import ssm as S
 from repro.sharding.partition import constrain
 
@@ -223,8 +223,9 @@ def prefill_chunk(params, cfg: ArchConfig, tokens: jax.Array, cache: dict,
     return cache, state
 
 
-def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
-                key: jax.Array):
+def decode_hidden(params, cfg: ArchConfig, token: jax.Array, cache: dict):
+    """The KV/state-writing decode body (see transformer.decode_hidden);
+    also advances the per-layer SSM/conv recurrent state."""
     x = L.apply_embed(params["embed"], token[:, None])
     x = constrain(x, "batch", None, None)
     sp = params["shared"]
@@ -258,20 +259,15 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
         new_h.append(h2)
         new_c.append(c2)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    hidden = x[:, 0]
-    head = params["head"]
-    if "q" in head:
-        xi = L.decode_head_noise(key, cache_len, cfg.mc_samples,
-                                 cfg.vocab_size)
-        logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
-    else:
-        logits = L.head_logits_mean(head, hidden, cfg)[None]
-    unc = uncertainty_from_logits(logits)
-    outputs = {"next_token": unc["p_mean"].argmax(-1).astype(jnp.int32),
-               "H": unc["H"], "SE": unc["SE"], "MI": unc["MI"],
-               "p_max": unc["p_mean"].max(-1)}
     new_cache = {"ssm": jnp.concatenate(new_h, 0),
                  "conv": jnp.concatenate(new_c, 0),
                  "attn_k": jnp.stack(new_k), "attn_v": jnp.stack(new_v),
                  "len": cache_len + 1}
-    return outputs, new_cache
+    return x[:, 0], new_cache
+
+
+def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
+                key: jax.Array):
+    hidden, new_cache = decode_hidden(params, cfg, token, cache)
+    return U.head_outputs(params, cfg, hidden, cache["len"], key), \
+        new_cache

@@ -28,8 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.uncertainty import uncertainty_from_logits
 from repro.models import layers as L
+from repro.models import uncertain_head as U
 from repro.models import transformer as T
 from repro.sharding.partition import constrain, constrain_seq
 
@@ -355,8 +355,8 @@ def prefill_chunk(params, cfg: ArchConfig, tokens: jax.Array, cache: dict,
     return cache, offs
 
 
-def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
-                key: jax.Array):
+def decode_hidden(params, cfg: ArchConfig, token: jax.Array, cache: dict):
+    """The KV-writing decode body (see transformer.decode_hidden)."""
     x = L.apply_embed(params["embed"], token[:, None])
     cache_len = cache["len"]
     block_table = cache.get("block_table")     # paged layout marker
@@ -376,17 +376,12 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     x, new_kvs = jax.lax.scan(
         scan_step, x, (params["blocks"], {"k": cache["k"], "v": cache["v"]}))
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    hidden = x[:, 0]
-    head = params["head"]
-    if "q" in head:
-        xi = L.decode_head_noise(key, cache_len, cfg.mc_samples,
-                                 cfg.vocab_size)
-        logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
-    else:
-        logits = L.head_logits_mean(head, hidden, cfg)[None]
-    unc = uncertainty_from_logits(logits)
-    outputs = {"next_token": unc["p_mean"].argmax(-1).astype(jnp.int32),
-               "H": unc["H"], "SE": unc["SE"], "MI": unc["MI"],
-               "p_max": unc["p_mean"].max(-1)}
-    return outputs, {"k": new_kvs["k"], "v": new_kvs["v"],
+    return x[:, 0], {"k": new_kvs["k"], "v": new_kvs["v"],
                      "len": cache_len + 1}
+
+
+def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
+                key: jax.Array):
+    hidden, new_cache = decode_hidden(params, cfg, token, cache)
+    return U.head_outputs(params, cfg, hidden, cache["len"], key), \
+        new_cache

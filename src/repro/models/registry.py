@@ -212,8 +212,54 @@ def decode_step(params, cfg: ArchConfig, token, cache, key):
     return out, new_cache
 
 
+def decode_hidden(params, cfg: ArchConfig, token, cache):
+    """The KV-writing decode BODY alone: embed -> blocks -> final norm,
+    returning ``(hidden, new_cache)`` with the step's cache writes done
+    and ``len`` advanced, but NO head.  ``decode_step`` is exactly this
+    followed by ``head_outputs`` at the pre-step depths — the split the
+    speculative-decoding draft/verify passes build on (the draft shares
+    the body, so its KV writes are bitwise plain decode's; the verify
+    re-runs only the head over the stacked draft hiddens)."""
+    hidden, new_cache = module_for(cfg).decode_hidden(params, cfg, token,
+                                                      cache)
+    if isinstance(cache, dict) and "block_table" in cache:
+        new_cache.setdefault("block_table", cache["block_table"])
+    return hidden, new_cache
+
+
+def head_outputs(params, cfg: ArchConfig, hidden, cache_len, key,
+                 num_samples=None):
+    """The family-shared uncertain head (see models.uncertain_head):
+    {next_token, H, SE, MI, p_max} from ``num_samples`` (default
+    ``cfg.mc_samples``) LRT draws over ``hidden`` at depth
+    ``cache_len``."""
+    from repro.models.uncertain_head import head_outputs as _head
+    return _head(params, cfg, hidden, cache_len, key,
+                 num_samples=num_samples)
+
+
+def supports_spec_decode(cfg: ArchConfig) -> bool:
+    """Whether uncertainty-gated speculative decoding serves this family.
+
+    Every family exposes the ``decode_hidden``/``head_outputs`` split,
+    so all of them speculate.  Losslessness rests on per-slot decode
+    state being independent across slots given the fed tokens; the one
+    cross-slot coupling in the zoo is MoE's capacity cumsum, which only
+    bites when an expert overflows during single-token decode dispatch
+    — never hit on the served configs (the same assumption the PR 2
+    scan-vs-reference parity already makes), and the bitwise parity
+    harness (tests/test_spec_decode.py) would catch it if it were.
+    """
+    return True
+
+
 # cache leaves that live in the global block pool under the paged layout
 PAGED_KV_LEAVES = ("k", "v", "attn_k", "attn_v")
+
+# per-slot recurrent state leaves (hybrid/ssm) that speculative-decode
+# rollback must restore to the accepted step (KV pool junk above the
+# rolled-back ``len`` is masked instead; see steps.build_spec_commit)
+RECURRENT_LEAVES = ("ssm", "conv")
 
 
 def kv_bytes(cache) -> int:

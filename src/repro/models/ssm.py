@@ -24,8 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.uncertainty import uncertainty_from_logits
 from repro.models import layers as L
+from repro.models import uncertain_head as U
 from repro.sharding.partition import constrain
 
 
@@ -296,8 +296,9 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, max_len: int):
     return x[:, -1], cache
 
 
-def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
-                key: jax.Array):
+def decode_hidden(params, cfg: ArchConfig, token: jax.Array, cache: dict):
+    """The state-advancing decode body (see transformer.decode_hidden):
+    pure recurrence, no KV strips."""
     x = L.apply_embed(params["embed"], token[:, None])
     x = constrain(x, "batch", None, None)
 
@@ -310,16 +311,11 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     x, (hs, cs) = jax.lax.scan(
         scan_step, x, (params["blocks"], cache["ssm"], cache["conv"]))
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    hidden = x[:, 0]
-    head = params["head"]
-    if "q" in head:
-        xi = L.decode_head_noise(key, cache["len"], cfg.mc_samples,
-                                 cfg.vocab_size)
-        logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
-    else:
-        logits = L.head_logits_mean(head, hidden, cfg)[None]
-    unc = uncertainty_from_logits(logits)
-    outputs = {"next_token": unc["p_mean"].argmax(-1).astype(jnp.int32),
-               "H": unc["H"], "SE": unc["SE"], "MI": unc["MI"],
-               "p_max": unc["p_mean"].max(-1)}
-    return outputs, {"ssm": hs, "conv": cs, "len": cache["len"] + 1}
+    return x[:, 0], {"ssm": hs, "conv": cs, "len": cache["len"] + 1}
+
+
+def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
+                key: jax.Array):
+    hidden, new_cache = decode_hidden(params, cfg, token, cache)
+    return U.head_outputs(params, cfg, hidden, cache["len"], key), \
+        new_cache

@@ -24,8 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.uncertainty import uncertainty_from_logits
 from repro.models import layers as L
+from repro.models import uncertain_head as U
 from repro.sharding.partition import constrain, constrain_seq
 
 
@@ -312,15 +312,13 @@ def _decode_block(bp, cfg, x, kv, cache_len, block_table=None):
     return x, {"k": new_kv[0], "v": new_kv[1]}
 
 
-def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
-                key: jax.Array):
-    """One uncertain decode step.
+def decode_hidden(params, cfg: ArchConfig, token: jax.Array, cache: dict):
+    """The KV-writing decode body: embed -> blocks -> final norm.
 
-    token: (B,) last sampled token.  Returns (outputs, new_cache) where
-    outputs = {next_token, H, SE, MI, p_max} per sequence — the paper's
-    uncertainty triplet computed from cfg.mc_samples LRT head draws
-    (fused in kernels/uncertainty_head on TPU; jnp math here lowers
-    everywhere and is what the dry-run compiles).
+    token: (B,) last sampled token.  Writes the step's K/V at each
+    slot's PRE-step depth and returns ``(hidden, new_cache)`` with
+    ``len`` advanced by one; the uncertain head over ``hidden`` is the
+    shared ``uncertain_head.head_outputs`` (fed the pre-step depths).
     """
     x = L.apply_embed(params["embed"], token[:, None])
     x = constrain(x, "batch", None, None)
@@ -335,41 +333,21 @@ def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
     x, new_kvs = jax.lax.scan(
         scan_step, x, (params["blocks"], {"k": cache["k"], "v": cache["v"]}))
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    hidden = x[:, 0]                                   # (B, d)
-
-    B = hidden.shape[0]
-    S = cfg.mc_samples
-    head = params["head"]
-    if "q" in head and not cfg.logits_softcap \
-            and cfg.head_entropy == "kernel":
-        # seed-driven fused head: on TPU the xi tensor never exists (the
-        # uncertainty-head kernel draws it in-register and regenerates the
-        # sample logits in its second pass); off-TPU the seeded oracle
-        # runs.  Softcapped heads keep the explicit-logits path below.
-        from repro.kernels import ops, rng
-        q = head["q"]
-        unc = ops.uncertainty_head_sampled(
-            hidden, q.mu, q.sigma, rng.seed_from_key(key), num_samples=S)
-        outputs = {
-            "next_token": unc["pred"],
-            "H": unc["H"], "SE": unc["SE"], "MI": unc["MI"],
-            "p_max": unc["p_max"],
-        }
-        new_cache = {"k": new_kvs["k"], "v": new_kvs["v"],
+    return x[:, 0], {"k": new_kvs["k"], "v": new_kvs["v"],
                      "len": cache_len + 1}
-        return outputs, new_cache
-    if "q" in head:
-        xi = L.decode_head_noise(key, cache_len, S, cfg.vocab_size)
-        logits = L.head_logits_sampled(head, hidden[None], cfg, xi)
-    else:
-        logits = L.head_logits_mean(head, hidden, cfg)[None]
-    logits = constrain(logits, None, "batch", "model")
-    unc = uncertainty_from_logits(logits)
-    outputs = {
-        "next_token": unc["p_mean"].argmax(-1).astype(jnp.int32),
-        "H": unc["H"], "SE": unc["SE"], "MI": unc["MI"],
-        "p_max": unc["p_mean"].max(-1),
-    }
-    new_cache = {"k": new_kvs["k"], "v": new_kvs["v"],
-                 "len": cache_len + 1}
-    return outputs, new_cache
+
+
+def decode_step(params, cfg: ArchConfig, token: jax.Array, cache: dict,
+                key: jax.Array):
+    """One uncertain decode step.
+
+    token: (B,) last sampled token.  Returns (outputs, new_cache) where
+    outputs = {next_token, H, SE, MI, p_max} per sequence — the paper's
+    uncertainty triplet computed from cfg.mc_samples LRT head draws
+    (fused in kernels/uncertainty_head on TPU; jnp math in
+    ``uncertain_head`` lowers everywhere and is what the dry-run
+    compiles).
+    """
+    hidden, new_cache = decode_hidden(params, cfg, token, cache)
+    return U.head_outputs(params, cfg, hidden, cache["len"], key), \
+        new_cache

@@ -1,0 +1,85 @@
+"""Shared engine fixtures for the serving test modules.
+
+test_serve / test_paged_kv / test_prefix_cache / test_chunked_prefill /
+test_mesh_runner / test_spec_decode all start from the same
+ingredients — a reduced operand-entropy config for one attention
+family, seed-0 params, and a fixed prompt pool — and build ServeEngine
+instances varying along (family, kv-layout, prefill mode, decode-attn,
+mesh).  Those ingredients live here once: ``family_setup`` is lru-cached
+so each family's params initialize a single time across the whole run,
+and ``engine_kwargs`` is the parametrized factory for the engine's
+keyword matrix.  tests/ is the pytest rootdir, so plain helpers are
+importable too (``from conftest import family_setup, ...``), same as
+``_hypothesis_compat``.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, reduced
+from repro.launch.engine import Request, resolve_mesh
+from repro.models import registry as M
+
+# one representative reduced arch per attention family
+FAMILY_ARCHS = {
+    "dense": "qwen2_1_5b",
+    "moe": "deepseek_moe_16b",
+    "hybrid": "zamba2_7b",
+    "encdec": "seamless_m4t_medium",
+    "ssm": "mamba2_370m",
+    "vlm": "phi_3_vision_4_2b",
+}
+
+
+def make_request(rid, prompt, n):
+    return Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                   max_new_tokens=n)
+
+
+def operand_cfg(arch):
+    """Reduced config pinned to operand entropy — the mode whose decode
+    noise is a pure function of (slot, depth), i.e. the mode every
+    bitwise engine-equivalence test (and spec decode) runs in."""
+    return dataclasses.replace(reduced(get_config(arch)),
+                               head_entropy="operand")
+
+
+@functools.lru_cache(maxsize=None)
+def family_setup(family="dense", seed=0, num_prompts=6, prompt_len=12):
+    """(cfg, params, prompts) for one attention family, shared across
+    every module in the run (init_params dominates setup time)."""
+    cfg = operand_cfg(FAMILY_ARCHS[family])
+    key = jax.random.key(seed)
+    params = M.init_params(key, cfg)
+    prompts = np.asarray(
+        jax.random.randint(key, (num_prompts, prompt_len), 0,
+                           cfg.vocab_size), np.int32)
+    return cfg, params, prompts
+
+
+def engine_kwargs(*, kv_layout="paged", kv_block=8, prefill="batch",
+                  decode_attn="gather", mesh=None, num_slots=2,
+                  max_len=32, chunk=4, **extra):
+    """ServeEngine keyword set along the test matrix's axes.
+
+    ``mesh`` accepts the CLI's string form ("1x4") or an already-built
+    mesh; everything else passes straight through, so invalid
+    combinations (chunked prefill on dense KV, ...) still hit the
+    engine's own validation."""
+    kw = dict(num_slots=num_slots, max_len=max_len, chunk=chunk,
+              kv_layout=kv_layout, kv_block=kv_block,
+              prefill_mode=prefill, decode_attn=decode_attn,
+              mesh=resolve_mesh(mesh) if isinstance(mesh, str) else mesh)
+    kw.update(extra)
+    return kw
+
+
+@pytest.fixture(scope="session")
+def setup():
+    """The dense-family (cfg, params, prompts) triple most engine
+    modules share (overridden where a module needs different shapes)."""
+    return family_setup("dense")

@@ -12,34 +12,23 @@ The acceptance contract:
     the admission-time table span still completes, bit-exact vs batch;
   * a growth grant the pool cannot cover LRU-evicts cached-but-
     unreferenced prefix blocks before preempting (no livelock);
-  * allocator/scheduler churn through the growth path leaks nothing.
+  * allocator/scheduler churn through the growth path leaks nothing —
+    the randomized leak fuzz lives in test_block_fuzz.py.
 """
-
-import dataclasses
-import random
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.registry import get_config, reduced
+from conftest import family_setup
 from repro.kernels import ops
 from repro.launch.serve import (BlockAllocator, Request, ServeEngine,
                                 SlotScheduler)
 from repro.models import registry as M
 
-CHUNK_ARCHES = {
-    "dense": "qwen2_1_5b",
-    "moe": "deepseek_moe_16b",
-    "hybrid": "zamba2_7b",
-    "encdec": "seamless_m4t_medium",
-}
-
-
-def _cfg(arch):
-    return dataclasses.replace(reduced(get_config(arch)),
-                               head_entropy="operand")
+# the chunk-capable subset of conftest.FAMILY_ARCHS
+CHUNK_FAMILIES = ("dense", "encdec", "hybrid", "moe")
 
 
 def _reqs(cfg, lens, gen=8, seed=7):
@@ -76,12 +65,11 @@ def _assert_same_streams(ra, rb):
 # ---------------------------------------------------------------------------
 
 class TestChunkedMatchesBatch:
-    @pytest.mark.parametrize("family", sorted(CHUNK_ARCHES))
+    @pytest.mark.parametrize("family", sorted(CHUNK_FAMILIES))
     def test_staggered_mixed_lengths(self, family):
         """Uneven prompts forcing partial chunks, bucket pads, and
         mid-stream admissions: streams must match batch bit for bit."""
-        cfg = _cfg(CHUNK_ARCHES[family])
-        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        cfg, params, _ = family_setup(family)
         lens = [13, 27, 5, 18]
         ra = _run(params, cfg, lens, "batch")
         rb = _run(params, cfg, lens, "chunked")
@@ -93,8 +81,7 @@ class TestChunkedMatchesBatch:
         """Shared prefixes admitted through the radix cache: chunked
         prefill walks only the uncached suffix, after the admission-time
         CoW — still bit-exact vs batch."""
-        cfg = _cfg(CHUNK_ARCHES["dense"])
-        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        cfg, params, _ = family_setup("dense")
         rng = np.random.default_rng(11)
         shared = rng.integers(1, cfg.vocab_size - 1, size=16)
         reqs_spec = []                       # prefix reuse + divergence
@@ -119,8 +106,7 @@ class TestChunkedMatchesBatch:
         _assert_same_streams(ra, rb)
 
     def test_prefill_chunk_size_invariance(self):
-        cfg = _cfg(CHUNK_ARCHES["dense"])
-        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        cfg, params, _ = family_setup("dense")
         lens = [13, 27, 5]
         r8 = _run(params, cfg, lens, "chunked", pc=8)
         r32 = _run(params, cfg, lens, "chunked", pc=32)
@@ -128,16 +114,14 @@ class TestChunkedMatchesBatch:
         _assert_same_streams(r8, r32)
 
     def test_decode_chunk_size_invariance(self):
-        cfg = _cfg(CHUNK_ARCHES["dense"])
-        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        cfg, params, _ = family_setup("dense")
         lens = [13, 18]
         r4 = _run(params, cfg, lens, "chunked", chunk=4, max_len=36)
         r16 = _run(params, cfg, lens, "chunked", chunk=16, max_len=36)
         _assert_same_streams(r4, r16)
 
     def test_chunked_requires_paged(self):
-        cfg = _cfg(CHUNK_ARCHES["dense"])
-        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        cfg, params, _ = family_setup("dense")
         with pytest.raises(ValueError, match="paged"):
             ServeEngine(params, cfg, num_slots=1, max_len=16,
                         prefill_mode="chunked")
@@ -151,8 +135,7 @@ class TestTableGrowth:
     def test_request_outgrows_admission_span(self):
         """prompt + gen far beyond the admission-time table width: the
         table widens on demand and the stream still matches batch."""
-        cfg = _cfg(CHUNK_ARCHES["dense"])
-        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        cfg, params, _ = family_setup("dense")
         kw = dict(gen=12, max_len=16, kv_blocks=40)  # width 4 blocks
         ra = _run(params, cfg, [40, 6], "batch", **kw)
         rb = _run(params, cfg, [40, 6], "chunked", **kw)
@@ -201,53 +184,16 @@ class TestTableGrowth:
     def test_preemption_requeues_and_completes(self):
         """A pool too small for two full streams preempts, requeues at
         the FIFO front, and still finishes every request."""
-        cfg = _cfg(CHUNK_ARCHES["dense"])
-        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        cfg, params, _ = family_setup("dense")
         r = _run(params, cfg, [8, 8, 8], "chunked", gen=16, max_len=32,
                  kv_blocks=8)
         assert r["preemptions"] > 0
         assert all(x.finish_reason == "length" for x in r["requests"])
         assert all(len(x.tokens) == 16 for x in r["requests"])
 
-    def test_growth_churn_leaks_nothing(self):
-        """Randomized admit/grant/preempt/evict churn through the growth
-        path: width only ratchets up, budgets cap grants, every block
-        returns."""
-        rng = random.Random(0)
-        s = SlotScheduler(3, allocator=BlockAllocator(12, 4),
-                          table_width=2)
-        total = s.allocator.num_blocks
-        rid = 0
-        for _ in range(200):
-            if rng.random() < 0.6:
-                s.submit(Request(rid=rid,
-                                 prompt=np.ones(rng.randint(1, 12),
-                                                np.int32),
-                                 max_new_tokens=rng.randint(1, 40)))
-                rid += 1
-            s.admit()
-            width = s.block_tables.shape[1]
-            for slot, req in list(s.active()):
-                ids = s.grant(slot, len(req.prompt) + rng.randint(0, 24))
-                if ids is None:
-                    s.preempt(slot)
-                    continue
-                held = (s.block_tables[slot] >= 0).sum()
-                assert held <= s.allocator.blocks_for(
-                    len(req.prompt) + req.max_new_tokens)
-                if rng.random() < 0.3:
-                    s.evict(slot)
-            assert s.block_tables.shape[1] >= width
-            assert s.allocator.in_use <= total
-        while s.has_work():                  # drain
-            if not s.admit() and not s.active():
-                break
-            for slot, _ in list(s.active()):
-                s.evict(slot)
-        assert s.allocator.in_use == 0
-        assert s.allocator._reserved == 0
-        assert s.allocator.available() == total
-        assert (s.block_tables == -1).all()
+    # randomized growth/preempt churn lives in test_block_fuzz.py now:
+    # the property-based interpreter there drives the same grant-outruns-
+    # width path with per-op refcount and table-mirror invariants
 
     def test_watermark_defers_admission_but_not_first(self):
         """Admission keeps `watermark` free blocks for running slots'

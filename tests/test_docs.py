@@ -7,7 +7,9 @@ Three classes of grep-able anchors in ``README.md`` and ``docs/*.md``:
   * backticked test anchors (``tests/test_x.py::TestC::test_f``) must
     name a real file and real ``class``/``def`` symbols in it;
   * backticked CLI flags (``--kv-layout``) must be defined somewhere in
-    the code (argparse add_argument or equivalent literal).
+    the code — an argparse add_argument literal, or a ``--flag=value``
+    spelling for env-var style flags (``XLA_FLAGS=--xla_force_...``)
+    that are never quoted bare.
 
 This is the CI docs job (see .github/workflows/ci.yml) and part of
 tier-1, so renaming a flag, moving a module, or deleting a test that a
@@ -26,7 +28,9 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
 CODE_SPAN_RE = re.compile(r"`([^`\n]+)`")
 PATH_RE = re.compile(r"^[\w./-]+\.(?:py|md|json|toml|yml|yaml)$")
 TEST_ANCHOR_RE = re.compile(r"^([\w./-]+\.py)((?:::[\w\[\]-]+)+)$")
-FLAG_RE = re.compile(r"--[a-z][a-z0-9-]*")
+# underscores included so --xla_force_host_platform_device_count parses
+# as ONE flag instead of stopping at --xla
+FLAG_RE = re.compile(r"--[a-z][a-z0-9_-]*")
 
 # flags argparse provides for free
 BUILTIN_FLAGS = {"--help"}
@@ -103,5 +107,6 @@ def test_cli_flags_exist_in_code(doc, code_text):
     for flag in set(FLAG_RE.findall(doc.read_text())):
         if flag in BUILTIN_FLAGS:
             continue
-        assert f'"{flag}"' in code_text or f"'{flag}'" in code_text, \
+        assert (f'"{flag}"' in code_text or f"'{flag}'" in code_text
+                or f"{flag}=" in code_text), \
             f"{doc.name}: flag {flag} not defined anywhere in the code"

@@ -10,7 +10,6 @@ must be pinned before jax initializes, and this test process already
 holds a 1-device jax.
 """
 
-import dataclasses
 import json
 import os
 import subprocess
@@ -21,10 +20,9 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.registry import get_config, reduced
+from conftest import family_setup
 from repro.launch.engine import ServeEngine, Request, resolve_mesh
 from repro.launch.mesh import make_debug_mesh
-from repro.models import registry as M
 from repro.sharding.partition import serve_pspecs
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -73,8 +71,7 @@ class TestShardedParity:
 
 class TestServeRules:
     def test_column_parallel_only(self):
-        cfg = reduced(get_config("qwen2_1_5b"))
-        params = M.init_params(jax.random.key(0), cfg)
+        _, params, _ = family_setup("dense")
         specs = serve_pspecs(params)
         blocks = specs["blocks"]["attn"]
         # column (output) dims shard...
@@ -90,9 +87,8 @@ class TestServeRules:
         assert specs["embed"]["table"] == P()
 
     def test_moe_and_ssm_subtrees_replicate(self):
-        for arch in ("deepseek_moe_16b", "zamba2_7b"):
-            cfg = reduced(get_config(arch))
-            params = M.init_params(jax.random.key(0), cfg)
+        for family in ("moe", "hybrid"):
+            _, params, _ = family_setup(family)
             flat = jax.tree_util.tree_flatten_with_path(
                 serve_pspecs(params),
                 is_leaf=lambda x: isinstance(x, P))[0]
@@ -126,9 +122,7 @@ class TestMeshFallback:
         # on one device every serve spec degrades to replication, so
         # --mesh must be a bitwise no-op (this is what lets the CI
         # serve-smoke matrix pass the flag unconditionally)
-        cfg = dataclasses.replace(reduced(get_config("qwen2_1_5b")),
-                                  head_entropy="operand")
-        params = M.init_params(jax.random.key(0), cfg)
+        cfg, params, _ = family_setup("dense")
 
         def reqs():
             prompts = np.asarray(jax.random.randint(

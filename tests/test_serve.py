@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import make_request as _req
 from repro.configs.registry import get_config, reduced
 from repro.core.entropy import KernelEntropy
 from repro.launch import steps as S
@@ -20,21 +21,7 @@ from repro.launch.serve import (Request, ServeEngine, SlotScheduler,
                                 decode_loop_reference)
 from repro.models import registry as M
 
-
-def _req(rid, prompt, n):
-    return Request(rid=rid, prompt=np.asarray(prompt, np.int32),
-                   max_new_tokens=n)
-
-
-@pytest.fixture(scope="module")
-def setup():
-    cfg = dataclasses.replace(reduced(get_config("qwen2_1_5b")),
-                              head_entropy="operand")
-    key = jax.random.key(0)
-    params = M.init_params(key, cfg)
-    prompts = np.asarray(
-        jax.random.randint(key, (6, 12), 0, cfg.vocab_size), np.int32)
-    return cfg, params, prompts
+# the shared (cfg, params, prompts) `setup` fixture lives in conftest.py
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,248 @@
+"""Uncertainty-gated speculative decoding: the lossless parity contract.
+
+The acceptance contract of ``--spec-decode`` (ISSUE 8): in
+operand-entropy mode the engine's accepted stream — tokens AND the full
+uncertainty triplet — is BITWISE identical to the same queue served
+with speculation off, across every attention family, staggered
+mixed-length slots, and the prefix cache (including post-CoW hits);
+``--spec-mi-threshold 0`` never drafts and degenerates to the plain
+scan path; a draft that proposes garbage still yields the exact stream
+(one verified token per round); and partially rejected rounds roll
+their decode-granted blocks back without leaking.
+
+Operand-mode decode noise folds the SLOT index, so bitwise parity is
+only defined for requests that land in the same slot in both runs —
+and speculation changes finish timing, which can reshuffle queued
+admissions across slots.  The workloads here therefore pin the
+admission schedule by construction (first-wave-only for the multi-slot
+sweeps, a single slot for queue churn) and every comparison asserts
+the slot breadcrumbs actually matched, so a reshuffle fails loudly
+instead of silently comparing different noise streams.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import family_setup as _family
+from conftest import make_request as _req
+from repro.launch.serve import ServeEngine
+
+# one family per KV-carrying attention variant; hybrid additionally
+# exercises the recurrent ssm/conv state rewind on rollback (ssm-only
+# has no KV and serves dense, covered by the same rewind path)
+SPEC_FAMILIES = ("dense", "encdec", "hybrid", "moe")
+
+
+def _first_wave(prompts):
+    # 3 slots, 3 requests: staggered prompt lengths AND finish times
+    # without queue refill, so admission is FIFO-into-slot-order in
+    # both runs regardless of how speculation shifts finish timing
+    lens, gens = (12, 8, 10), (8, 4, 6)
+    return [_req(i, prompts[i][:lens[i]], gens[i]) for i in range(3)]
+
+
+def _churn_queue(prompts):
+    # single slot + a deep queue: real admission churn (evict, readmit,
+    # prefix-tree inserts) with a trivially identical schedule
+    gens = (8, 4, 8, 6, 5)
+    return [_req(i, prompts[i][:(12 if i % 2 == 0 else 8)], gens[i])
+            for i in range(5)]
+
+
+def _assert_streams_equal(ra, rb):
+    assert len(ra["requests"]) == len(rb["requests"])
+    for a, b in zip(ra["requests"], rb["requests"]):
+        assert a.slot == b.slot, \
+            f"request {a.rid} reshuffled to a different slot " \
+            f"({a.slot} vs {b.slot}): parity undefined, fix the workload"
+        assert a.finish_reason == b.finish_reason
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        for name in ("H", "SE", "MI", "p_max"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, name), np.float32),
+                np.asarray(getattr(b, name), np.float32))
+        assert a.epistemic_flags == b.epistemic_flags
+        assert a.aleatoric_flags == b.aleatoric_flags
+
+
+_ENGINE_KW = dict(num_slots=3, max_len=32, chunk=4, kv_layout="paged",
+                  kv_block=8)
+# gate wide open: every slot drafts as soon as it has carried one MI
+_SPEC_KW = dict(spec_decode=True, spec_k=3, spec_mi_threshold=float("inf"))
+
+
+def _garbage_draft(engine):
+    """Wrap the engine's draft so every proposal is an impossible token:
+    verification rejects everything, every round emits exactly its one
+    verified correction."""
+    orig = engine._draft
+
+    def bad(params, tok, cache):
+        tok, cache, dys = orig(params, tok, cache)
+        return tok, cache, dict(dys, token=jnp.full_like(dys["token"], -1))
+
+    engine._draft = bad
+
+
+class TestSpecParity:
+    @pytest.mark.parametrize("family", sorted(SPEC_FAMILIES))
+    def test_bitwise_stream_parity_across_families(self, family):
+        """Staggered first wave, spec on vs off: every request's token +
+        (H, SE, MI, p_max) streams must match bit for bit, speculation
+        must actually run, and the expensive full-sample head must
+        dispatch no more often than the chunk-per-scan baseline."""
+        cfg, params, prompts = _family(family)
+        off = ServeEngine(params, cfg, **_ENGINE_KW)
+        r_off = off.run(_first_wave(prompts))
+        on = ServeEngine(params, cfg, **_ENGINE_KW, **_SPEC_KW)
+        r_on = on.run(_first_wave(prompts))
+        _assert_streams_equal(r_off, r_on)
+        sd = r_on["spec_decode"]
+        assert sd["enabled"] and sd["rounds"] > 0
+        assert sd["emitted"] > 0
+        assert sd["full_model_calls"] <= \
+            r_off["spec_decode"]["full_model_calls"]
+
+    def test_queue_churn_parity_single_slot(self):
+        """Admission churn (evict, readmit into the same slot) under
+        speculation: the whole drained queue replays the off-mode run
+        bitwise, and acceptance actually saves full-model calls."""
+        cfg, params, prompts = _family("dense")
+        kw = dict(num_slots=1, max_len=32, chunk=4, kv_layout="paged",
+                  kv_block=8)
+        off = ServeEngine(params, cfg, **kw)
+        r_off = off.run(_churn_queue(prompts))
+        on = ServeEngine(params, cfg, **kw, **_SPEC_KW)
+        r_on = on.run(_churn_queue(prompts))
+        _assert_streams_equal(r_off, r_on)
+        sd = r_on["spec_decode"]
+        assert sd["rounds"] > 0 and sd["accepted"] > 0
+        assert sd["full_model_calls"] < \
+            r_off["spec_decode"]["full_model_calls"]
+
+    def test_threshold_zero_never_speculates(self):
+        """MI gating is STRICT (<): threshold 0 admits no slot, so the
+        engine never leaves the plain scan path and the run is
+        indistinguishable from spec-decode off."""
+        cfg, params, prompts = _family("dense")
+        off = ServeEngine(params, cfg, **_ENGINE_KW)
+        r_off = off.run(_first_wave(prompts))
+        on = ServeEngine(params, cfg, **_ENGINE_KW, spec_decode=True,
+                         spec_k=3, spec_mi_threshold=0.0)
+        r_on = on.run(_first_wave(prompts))
+        _assert_streams_equal(r_off, r_on)
+        sd = r_on["spec_decode"]
+        assert sd["rounds"] == 0 and sd["drafted"] == 0
+        assert sd["full_model_calls"] == \
+            r_off["spec_decode"]["full_model_calls"]
+        assert r_on["chunks_run"] == r_off["chunks_run"]
+
+    def test_reject_all_draft_stream_still_exact(self):
+        """A draft proposing garbage must cost throughput, never
+        correctness: every round accepts nothing, emits exactly the one
+        verified token per slot, and the stream stays bitwise
+        identical."""
+        cfg, params, prompts = _family("dense")
+        off = ServeEngine(params, cfg, **_ENGINE_KW)
+        r_off = off.run(_first_wave(prompts))
+        on = ServeEngine(params, cfg, **_ENGINE_KW, **_SPEC_KW)
+        _garbage_draft(on)
+        r_on = on.run(_first_wave(prompts))
+        _assert_streams_equal(r_off, r_on)
+        sd = r_on["spec_decode"]
+        assert sd["rounds"] > 0
+        assert sd["accepted"] == 0 and sd["acceptance_rate"] == 0.0
+        assert sd["rollbacks"] > 0
+        assert sd["tokens_per_round"] <= on.num_slots
+
+    def test_rollback_releases_blocks(self):
+        """Every speculative rejection rewinds the slot's decode-granted
+        blocks: after a drain with forced 100% rejection (maximum
+        rollback traffic) the pool must balance exactly — nothing in
+        use, nothing reserved, every block back on the free list."""
+        cfg, params, prompts = _family("dense")
+        on = ServeEngine(params, cfg, **_ENGINE_KW, **_SPEC_KW)
+        _garbage_draft(on)
+        res = on.run(_first_wave(prompts))
+        assert res["spec_decode"]["rollbacks"] > 0
+        alloc = on._last_alloc
+        assert alloc.in_use == 0
+        assert alloc._reserved == 0
+        assert sorted(alloc._free) == list(range(alloc.num_blocks))
+
+    def test_parity_with_prefix_cache_and_cow(self):
+        """Spec rounds over prefix-cache hits, including post-CoW slots
+        (20 shared tokens over 8-token blocks => a partial tail match
+        every admission after the first): the hit + CoW + speculate
+        pipeline must still replay the spec-off stream exactly, and the
+        pool must end balanced against the cache's refcounts."""
+        cfg, params, _ = _family("dense")
+        shared = np.asarray(jax.random.randint(jax.random.key(3), (20,),
+                                               0, cfg.vocab_size), np.int32)
+        tails = np.asarray(jax.random.randint(jax.random.key(4), (5, 8),
+                                              0, cfg.vocab_size), np.int32)
+        mk = lambda: [_req(i, np.concatenate([shared, tails[i]]), 6)
+                      for i in range(5)]
+        kw = dict(num_slots=1, max_len=48, chunk=4, kv_layout="paged",
+                  kv_block=8, prefix_cache=True)
+        off = ServeEngine(params, cfg, **kw)
+        r_off = off.run(mk())
+        on = ServeEngine(params, cfg, **kw, **_SPEC_KW)
+        r_on = on.run(mk())
+        _assert_streams_equal(r_off, r_on)
+        assert r_on["prefix_cache"]["hits"] > 0
+        assert r_on["prefix_cache"]["cow_copies"] > 0
+        assert r_on["spec_decode"]["rounds"] > 0
+        alloc, pcache = on._last_alloc, on._last_pcache
+        assert alloc.in_use == pcache.cached_blocks()
+        assert alloc._reserved == 0
+
+    def test_dense_layout_parity(self):
+        """The dense reference layout speculates too (rollback is then
+        pure tok/len/state rewind, no block bookkeeping)."""
+        cfg, params, prompts = _family("dense")
+        off = ServeEngine(params, cfg, num_slots=3, max_len=32, chunk=4)
+        r_off = off.run(_first_wave(prompts))
+        on = ServeEngine(params, cfg, num_slots=3, max_len=32, chunk=4,
+                         **_SPEC_KW)
+        r_on = on.run(_first_wave(prompts))
+        _assert_streams_equal(r_off, r_on)
+        assert r_on["spec_decode"]["rounds"] > 0
+
+    def test_mean_head_draft_is_also_lossless(self):
+        """spec_draft_s=0 (deterministic mean-head proposals): a
+        different draft distribution changes ONLY acceptance, never the
+        emitted stream."""
+        cfg, params, prompts = _family("dense")
+        off = ServeEngine(params, cfg, **_ENGINE_KW)
+        r_off = off.run(_first_wave(prompts))
+        on = ServeEngine(params, cfg, **_ENGINE_KW, **_SPEC_KW,
+                         spec_draft_s=0)
+        r_on = on.run(_first_wave(prompts))
+        _assert_streams_equal(r_off, r_on)
+
+
+class TestSpecValidation:
+    def test_spec_requires_operand_entropy(self):
+        import dataclasses
+
+        from repro.core.entropy import KernelEntropy
+        cfg, params, _ = _family("dense")
+        with pytest.raises(ValueError, match="operand"):
+            ServeEngine(params, cfg, num_slots=2, max_len=32, chunk=4,
+                        entropy=KernelEntropy(seed=0), spec_decode=True)
+        kcfg = dataclasses.replace(cfg, head_entropy="kernel")
+        with pytest.raises(ValueError, match="operand"):
+            ServeEngine(params, kcfg, num_slots=2, max_len=32, chunk=4,
+                        spec_decode=True)
+
+    def test_spec_knob_validation(self):
+        cfg, params, _ = _family("dense")
+        with pytest.raises(ValueError, match="spec_k"):
+            ServeEngine(params, cfg, num_slots=2, max_len=32, chunk=4,
+                        spec_decode=True, spec_k=0)
+        with pytest.raises(ValueError, match="spec_draft_s"):
+            ServeEngine(params, cfg, num_slots=2, max_len=32, chunk=4,
+                        spec_decode=True, spec_draft_s=-1)
