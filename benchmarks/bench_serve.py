@@ -102,6 +102,19 @@ rows stay distinguishable without per-row re-stamping).  Fields:
     off_tok_per_s / spec_tok_per_s / spec_vs_off_x   decode rate
                            (indicative on CPU; the call count is the
                            hardware-independent claim)
+  priority_burst         risk-aware scheduling row (2 slots, heavy-tail
+                         class-2 traffic in bursts, short class-0
+                         requests arriving mid-burst; GATED on the fifo
+                         engine replaying the per-token oracle bitwise):
+    bitwise_equal          always True in an emitted row (the gate),
+    hi_p99_fifo_s / hi_p99_priority_s / hi_p99_improvement_x
+                           class-0 tail latency under each policy
+                           (acceptance: >= 2x better under priority),
+    per_class_fifo / per_class_priority   per-class p50/p99 latency +
+                           queue/service decomposition + counters,
+    preemptions, escalations, escalated_tokens, verify_samples
+                           the priority drive arms --escalate-mi at the
+                           carried-MI band the reduced config crosses
   long_prompt            chunked-vs-batch prefill interleaving row:
     long_len / short_len / gen_len / prefill_chunk of the workload,
     batch_interarrival_p99_s / chunked_interarrival_p99_s   worst gap
@@ -447,6 +460,98 @@ def run(quick: bool = False) -> dict:
         / max(sp[False]["decode_tok_per_s"], 1e-9),
     }
 
+    # --- risk-aware scheduling: priority burst + escalation row ---
+    # THE GATE first: the policy-layered engine only publishes priority
+    # numbers if --policy fifo still replays the pre-engine per-token
+    # oracle bit for bit (dense reference layout, one static wave)
+    gate_gen = 8
+    gate_eng = ServeEngine(params, cfg, num_slots=2,
+                           max_len=prompt_len + gate_gen, chunk=chunk,
+                           policy="fifo")
+    gate_res = gate_eng.run([Request(rid=i, prompt=prompts[i],
+                                     max_new_tokens=gate_gen)
+                             for i in range(2)])
+    gate_ref = decode_loop_reference(params, cfg, prompts[:2], gate_gen,
+                                     max_len=prompt_len + gate_gen)
+    for j, req in enumerate(gate_res["requests"]):
+        np.testing.assert_array_equal(req.tokens, gate_ref["token"][:, j])
+        for name in ("H", "SE", "MI", "p_max"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(req, name), np.float32),
+                gate_ref[name][:, j])
+
+    # bursty heavy-tail trace over 2 slots: class-2 requests with
+    # heavy-tail generation lengths arrive in two bursts; short class-0
+    # requests (tight SLO) land MID-burst, when every slot is pinned by
+    # a long low-priority decode.  fifo makes them wait out the tail;
+    # the priority policy preempts a strictly-worse decoding slot.  The
+    # priority drive also arms MI escalation at the threshold band the
+    # reduced operand-mode config actually crosses (carried MI sits
+    # around 4.5e-3..5.4e-3 — see docs/uncertainty.md), so the row
+    # exercises the full risk-aware path: preempt AND escalate.
+    pb_slots, pb_max_len = 2, 80                  # kv_block multiple
+    pb_lo_gens = (32, 48, 16, 40, 24, 16)         # the heavy tail
+    pb_lo_arr = (0, 0, 0, 0, 16, 16)              # two bursts
+    pb_hi_arr = (4, 12, 24)                       # mid-burst arrivals
+    pb_hi_gen, pb_esc_mi = 8, 0.005
+    pb_prompts = np.asarray(
+        jax.random.randint(jax.random.key(7), (9, 16), 0,
+                           cfg.vocab_size), np.int32)
+
+    def burst_requests():
+        reqs = [Request(rid=i, prompt=pb_prompts[i],
+                        max_new_tokens=pb_lo_gens[i], priority=2,
+                        arrival_step=pb_lo_arr[i]) for i in range(6)]
+        reqs += [Request(rid=6 + j, prompt=pb_prompts[6 + j, :8],
+                         max_new_tokens=pb_hi_gen, priority=0,
+                         slo_s=0.5, arrival_step=pb_hi_arr[j])
+                 for j in range(3)]
+        return reqs
+
+    pb = {}
+    for pol in ("fifo", "priority"):
+        pb_kw = dict(num_slots=pb_slots, max_len=pb_max_len, chunk=chunk,
+                     kv_layout="paged", kv_block=kv_block, policy=pol)
+        if pol == "priority":
+            pb_kw.update(escalate_mi=pb_esc_mi)
+        eng = ServeEngine(params, cfg, **pb_kw)
+        eng.run(burst_requests())                 # warm up compile
+        pb[pol] = eng.run(burst_requests())
+    hi_fifo = pb["fifo"]["per_class"][0]
+    hi_prio = pb["priority"]["per_class"][0]
+    hi_x = hi_fifo["latency_p99_s"] / max(hi_prio["latency_p99_s"], 1e-9)
+    assert hi_x >= 2.0, \
+        f"priority policy improved high-priority p99 only {hi_x:.2f}x " \
+        f"({hi_fifo['latency_p99_s']:.3f}s -> " \
+        f"{hi_prio['latency_p99_s']:.3f}s): below the 2x acceptance bar"
+    assert pb["priority"]["preemptions"] > 0
+    esc = pb["priority"]["escalation"]
+    assert esc["escalations"] > 0, \
+        f"escalation armed at MI {pb_esc_mi} never fired: threshold " \
+        f"outside the config's carried-MI band"
+    priority_burst = {
+        "slots": pb_slots,
+        "max_len": pb_max_len,
+        "lo_gen_lens": list(pb_lo_gens),
+        "lo_arrival_steps": list(pb_lo_arr),
+        "hi_gen_len": pb_hi_gen,
+        "hi_arrival_steps": list(pb_hi_arr),
+        "hi_slo_s": 0.5,
+        "escalate_mi": pb_esc_mi,
+        "bitwise_equal": True,                    # the fifo oracle gate
+        "hi_p99_fifo_s": hi_fifo["latency_p99_s"],
+        "hi_p99_priority_s": hi_prio["latency_p99_s"],
+        "hi_p99_improvement_x": hi_x,
+        "per_class_fifo": pb["fifo"]["per_class"],
+        "per_class_priority": pb["priority"]["per_class"],
+        "queue_p99_fifo_s": pb["fifo"]["queue_time_p99_s"],
+        "queue_p99_priority_s": pb["priority"]["queue_time_p99_s"],
+        "preemptions": pb["priority"]["preemptions"],
+        "escalations": esc["escalations"],
+        "escalated_tokens": esc["tokens"],
+        "verify_samples": esc["verify_samples"],
+    }
+
     return {
         "git_sha": git_sha(),
         # ONE stamp for the whole file: the hash covers the arch config
@@ -464,8 +569,13 @@ def run(quick: bool = False) -> dict:
                              max_len=lp_max_len, prefill_chunk=32),
             spec=dict(slots=sp_slots, shared_len=sp_shared,
                       unique_len=sp_unique, gen_len=sp_gen,
-                      spec_k=sp_k, max_len=sp_max_len)),
+                      spec_k=sp_k, max_len=sp_max_len),
+            burst=dict(slots=pb_slots, max_len=pb_max_len,
+                       lo_gens=pb_lo_gens, lo_arr=pb_lo_arr,
+                       hi_gen=pb_hi_gen, hi_arr=pb_hi_arr,
+                       escalate_mi=pb_esc_mi)),
         "mesh_scaling": mesh_scaling_row(),
+        "priority_burst": priority_burst,
         "spec_decode": spec_row,
         "long_prompt": long_prompt,
         "prefix_shared_prompt": prefix_shared,
@@ -596,6 +706,24 @@ def main(quick: bool = False, json_path: str = "BENCH_serve.json"):
           f"{sd['full_model_calls_off']} plain "
           f"({sd['full_model_calls_saved_frac']:.0%} saved; "
           f"{sd['spec_vs_off_x']:.2f}x decode tok/s)")
+    pb = r["priority_burst"]
+    print(f"  priority burst ({pb['slots']} slots, heavy-tail gens "
+          f"{sorted(set(pb['lo_gen_lens']))}, {len(pb['hi_arrival_steps'])}"
+          f" class-0 arrivals mid-burst; fifo oracle gate "
+          f"{'OK' if pb['bitwise_equal'] else 'MISMATCH'}):")
+    print(f"    class-0 p99: fifo {pb['hi_p99_fifo_s']:.3f}s vs priority "
+          f"{pb['hi_p99_priority_s']:.3f}s "
+          f"({pb['hi_p99_improvement_x']:.1f}x better; "
+          f"{pb['preemptions']} preemptions)")
+    print(f"    escalation @ MI {pb['escalate_mi']}: "
+          f"{pb['escalations']} requests, {pb['escalated_tokens']} tokens "
+          f"at S={pb['verify_samples']}")
+    for pol in ("fifo", "priority"):
+        cls = pb[f"per_class_{pol}"]
+        split = ", ".join(
+            f"class {c}: p50 {v['latency_p50_s']:.3f}s / "
+            f"p99 {v['latency_p99_s']:.3f}s" for c, v in cls.items())
+        print(f"    {pol:8s} {split}")
     ms = r["mesh_scaling"]
     print(f"  mesh scaling ({ms['mesh']} forced-host mesh, "
           f"{ms['devices']} devices, {ms['arch']} reduced):")

@@ -3,8 +3,12 @@
 One layer per module, host-side policy strictly above device dispatch:
 
   engine.py     -- ServeEngine: serving policy + the per-chunk loop
-  scheduler.py  -- Request / PrefixAdmit / SlotScheduler (admission,
-                   grants, preemption, block tables; numpy only)
+  scheduler.py  -- Request lifecycle state machine / PrefixAdmit /
+                   SlotScheduler (admission, grants, preemption, block
+                   tables; numpy only)
+  policy.py     -- SchedPolicy: the admission/eviction DECISION layer
+                   (fifo reference, priority classes + SLO deadlines)
+  escalate.py   -- EscalationLane: high-S OOD verification sidecar
   block_pool.py -- BlockAllocator: refcounted KV block accounting
   runner.py     -- ModelRunner: compiled callables + ALL device
                    placement, incl. the --mesh tensor-parallel mode;
@@ -18,14 +22,18 @@ it re-exports everything below.
 
 from repro.launch.engine.block_pool import BlockAllocator
 from repro.launch.engine.engine import ServeEngine
+from repro.launch.engine.escalate import EscalationLane
+from repro.launch.engine.policy import (FifoPolicy, PriorityPolicy,
+                                        SchedPolicy, get_policy)
 from repro.launch.engine.runner import (ModelRunner, decode_loop_reference,
                                         resolve_mesh)
-from repro.launch.engine.scheduler import (PrefixAdmit, Request,
+from repro.launch.engine.scheduler import (LIFECYCLE, PrefixAdmit, Request,
                                            SlotScheduler)
 from repro.launch.engine.stats import ServeStats
 
 __all__ = [
-    "BlockAllocator", "ModelRunner", "PrefixAdmit", "Request",
-    "ServeEngine", "ServeStats", "SlotScheduler",
-    "decode_loop_reference", "resolve_mesh",
+    "BlockAllocator", "EscalationLane", "FifoPolicy", "LIFECYCLE",
+    "ModelRunner", "PrefixAdmit", "PriorityPolicy", "Request",
+    "SchedPolicy", "ServeEngine", "ServeStats", "SlotScheduler",
+    "decode_loop_reference", "get_policy", "resolve_mesh",
 ]

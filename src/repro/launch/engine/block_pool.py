@@ -54,6 +54,13 @@ class BlockAllocator:
     def available(self) -> int:
         return len(self._free) - self._reserved
 
+    def utilization(self) -> float:
+        """Fraction of the pool held or reserved — the pool-pressure
+        signal risk-aware scheduling keys on (1.0 means the next
+        admission/grant must evict, preempt or defer).  Traced per
+        chunk in ``SlotScheduler.pool_stats``."""
+        return (self.in_use + self._reserved) / self.num_blocks
+
     def reserve(self, n: int) -> bool:
         """Set aside ``n`` blocks for later alloc; False if they aren't
         there (the caller defers admission instead of crashing)."""

@@ -24,6 +24,8 @@ import numpy as np
 from repro.core.entropy import KernelEntropy
 from repro.kernels.paged_attention import kv_blocks_read
 from repro.launch.engine.block_pool import BlockAllocator
+from repro.launch.engine.escalate import EscalationLane
+from repro.launch.engine.policy import SchedPolicy, get_policy
 from repro.launch.engine.runner import ModelRunner
 from repro.launch.engine.scheduler import Request, SlotScheduler
 from repro.launch.engine.stats import ServeStats
@@ -98,7 +100,12 @@ class ServeEngine:
                  trace_every: int = 1, mesh=None,
                  spec_decode: bool = False, spec_k: int = 4,
                  spec_mi_threshold: Optional[float] = None,
-                 spec_draft_s: int = 1):
+                 spec_draft_s: int = 1,
+                 spec_k_min: Optional[int] = None,
+                 spec_k_max: Optional[int] = None,
+                 policy="fifo",
+                 escalate_mi: Optional[float] = None,
+                 escalate_s: Optional[int] = None):
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         if kv_block < 1:
@@ -148,6 +155,35 @@ class ServeEngine:
         self.spec_mi_threshold = mi_threshold if spec_mi_threshold is None \
             else spec_mi_threshold
         self.spec_draft_s = spec_draft_s
+        # adaptive draft depth: per-slot acceptance EMA walks each
+        # slot's k inside [k_min, k_max] (defaults pin both to spec_k,
+        # which disables adaptation and keeps the fixed-k stream
+        # bitwise); a round drafts at the drafting slots' minimum
+        self.spec_k_min = spec_k if spec_k_min is None else spec_k_min
+        self.spec_k_max = spec_k if spec_k_max is None else spec_k_max
+        if spec_decode and not (1 <= self.spec_k_min <= spec_k
+                                <= self.spec_k_max):
+            raise ValueError(
+                f"adaptive spec-k bounds must satisfy 1 <= k_min <= k "
+                f"<= k_max, got k_min={self.spec_k_min} k={spec_k} "
+                f"k_max={self.spec_k_max}")
+        # admission/eviction decision layer (policy.SchedPolicy): a name
+        # from --policy or a ready instance; fifo is the bit-exact
+        # reference the priority policy is anchored against
+        self.policy = policy if isinstance(policy, SchedPolicy) \
+            else get_policy(policy)
+        # MI-triggered OOD escalation: a slot whose carried MI reaches
+        # escalate_mi finishes on a high-S sidecar runner (escalate_s
+        # MC samples; default 4x the serving S)
+        if escalate_mi is not None and escalate_mi < 0:
+            raise ValueError(
+                f"escalate_mi must be >= 0, got {escalate_mi}")
+        self.escalate_mi = escalate_mi
+        self.escalate_s = escalate_s if escalate_s is not None \
+            else 4 * cfg.mc_samples
+        if self.escalate_s < 1:
+            raise ValueError(
+                f"escalate_s must be >= 1, got {self.escalate_s}")
         self.num_slots = num_slots
         self.max_len = max_len
         self.chunk = chunk
@@ -217,6 +253,14 @@ class ServeEngine:
         # mesh mode re-places params by the serve-TP rules; the engine
         # always dispatches the runner's copy
         self.params = self.runner.params
+        # escalation sidecars: unplaced params + head-draw knobs so
+        # escalation_runner can build a second ModelRunner (its own jit
+        # cache) per distinct verify S, on demand
+        self._base_params = params
+        self._entropy = entropy
+        self._mi_threshold = mi_threshold
+        self._se_threshold = se_threshold
+        self._esc_runners: dict[int, ModelRunner] = {}
         # compiled-callable aliases: run() dispatches through self so
         # tests can interpose on a single engine attribute (e.g. the
         # mid-run fault injection in tests/test_paged_attention.py)
@@ -231,6 +275,26 @@ class ServeEngine:
         self._draft = self.runner._draft
         self._verify = self.runner._verify
         self._spec_commit = self.runner._spec_commit
+
+    def escalation_runner(self, s: int) -> ModelRunner:
+        """The high-S verify runner for ``s`` MC head samples — a
+        second ModelRunner jit cache KEYED BY S (each distinct verify S
+        compiles its own prefill/scan once, then every escalated
+        request at that S reuses them).  Single-slot dense sidecar: S
+        only changes head draws, so the cheap layout is fine, and the
+        gather read path is the dense reference
+        (tests/test_policy.py::TestEscalation)."""
+        if s not in self._esc_runners:
+            cfg = dataclasses.replace(self.cfg, mc_samples=s,
+                                      decode_attn="gather")
+            self._esc_runners[s] = ModelRunner(
+                self._base_params, cfg, max_len=self.max_len,
+                chunk=self.chunk, entropy=self._entropy,
+                mi_threshold=self._mi_threshold,
+                se_threshold=self._se_threshold, kv_layout="dense",
+                kv_block=self.kv_block, kv_blocks=self.table_width,
+                prefix_cache=False, prefill_mode="batch")
+        return self._esc_runners[s]
 
     def _bucket(self, n: int) -> int:
         """Prompt-length bucket: next kv_block multiple (dense strips
@@ -317,7 +381,7 @@ class ServeEngine:
         return None
 
     def _spec_round(self, sched, stats, decoding, tok, cache, active,
-                    flags):
+                    flags, *, k=None, escalate=None):
         """One uncertainty-gated speculative round (replaces a scan
         chunk): a k-step shared-body draft proposes cheap-head tokens
         for every slot, ONE batched full-S-sample verify re-draws the
@@ -339,16 +403,22 @@ class ServeEngine:
         above the kept depth stays masked until overwritten.
         """
         runner = self.runner
-        k = self.spec_k
+        k = self.spec_k if k is None else k
+        # the engine-attribute aliases stay the dispatch point at the
+        # default depth (tests interpose on engine._draft); other
+        # adaptive depths resolve through the runner's per-k jit cache
+        draft_fn, verify_fn = (self._draft, self._verify) \
+            if k == self.spec_k else runner.spec_fns(k)
+        stats.record_round_k(k)
         parts = [(slot, req) for slot, req in sched.active()
                  if slot in decoding]
         lens0 = np.zeros((self.num_slots,), np.int32)
         for slot, req in parts:
             lens0[slot] = len(req.prompt) + len(req.tokens)
         t0 = time.perf_counter()
-        tok, cache, dys = self._draft(self.params, tok, cache)
-        vys = self._verify(self.params, dys["hidden"],
-                           runner.put_replicated(jnp.asarray(lens0)))
+        tok, cache, dys = draft_fn(self.params, tok, cache)
+        vys = verify_fn(self.params, dys["hidden"],
+                        runner.put_replicated(jnp.asarray(lens0)))
         host = jax.device_get({"draft": dys["token"], **vys})
         stats.arrivals.append(time.perf_counter())
         stats.decode_s += time.perf_counter() - t0
@@ -369,6 +439,21 @@ class ServeEngine:
                     a += 1
                 stats.spec_drafted += k
                 stats.spec_accepted += a
+                # adaptive depth: acceptance EMA per slot walks its k
+                # inside [k_min, k_max]; at pinned bounds neither
+                # branch can fire and the fixed-k stream is untouched
+                rate = a / k
+                req.spec_ema = rate if req.spec_ema is None \
+                    else 0.5 * req.spec_ema + 0.5 * rate
+                cur = req.spec_k_cur or self.spec_k
+                if req.spec_ema >= 0.8 and cur < self.spec_k_max:
+                    req.spec_k_cur = cur + 1
+                    stats.spec_k_up += 1
+                elif req.spec_ema <= 0.4 and cur > self.spec_k_min:
+                    req.spec_k_cur = cur - 1
+                    stats.spec_k_down += 1
+                else:
+                    req.spec_k_cur = cur
             else:
                 # carried MI at/above the gate: no drafting credit —
                 # the slot emits position 1's verified token only,
@@ -391,8 +476,8 @@ class ServeEngine:
                 emitted = j + 1
                 done_eos = self.eos_id is not None and tk == self.eos_id
                 if done_eos or len(req.tokens) >= req.max_new_tokens:
-                    req.t_finish = time.perf_counter()
-                    req.finish_reason = "eos" if done_eos else "length"
+                    req.transition("finished",
+                                   reason="eos" if done_eos else "length")
                     sched.evict(slot)
                     decoding.discard(slot)
                     active = active.at[slot].set(False)
@@ -400,6 +485,12 @@ class ServeEngine:
                     break
             stats.spec_emitted += emitted
             if finished:
+                continue
+            if escalate is not None and escalate(slot, req):
+                # handed to the high-S lane: the eviction already freed
+                # every block (draft tail included), the slot goes
+                # inactive, and no commit pin is needed
+                active = active.at[slot].set(False)
                 continue
             # keep depth lens0+emitted: free the decode blocks the
             # rejected draft tail grew into (host) and pin the slot's
@@ -469,14 +560,52 @@ class ServeEngine:
                 pcache = RadixPrefixCache(alloc, self.kv_block)
         sched = SlotScheduler(self.num_slots, allocator=alloc,
                               table_width=self.table_width,
-                              prefix_cache=pcache)
+                              prefix_cache=pcache, policy=self.policy)
         # observable post-mortem (tests assert the pool balances even
         # when run() raises mid-decode)
         self._last_alloc, self._last_pcache = alloc, pcache
         stats = ServeStats(trace_every=self.trace_every)
+        # open-loop arrivals: requests with arrival_step > 0 join the
+        # queue only once the engine has decoded that many steps (the
+        # bursty traces bench_serve drives); step-0 requests submit now
+        pending = collections.deque(
+            sorted((r for r in requests if r.arrival_step > 0),
+                   key=lambda r: r.arrival_step))
         for r in requests:
-            r.t_submit = time.perf_counter()
-            sched.submit(r)
+            if r.arrival_step <= 0:
+                sched.submit(r)
+        # MI-triggered escalation lane: a one-slot high-S sidecar the
+        # harvest paths hand flagged requests to (None keeps every
+        # escalation branch dead and the loop byte-for-byte)
+        lane = None
+        if self.escalate_mi is not None:
+            lane = EscalationLane(
+                self.escalation_runner(self.escalate_s),
+                chunk=self.chunk, eos_id=self.eos_id,
+                pad_to=self.kv_block if self.pad_prompts else None,
+                modality=self._modality(1))
+        esc_skipped_rids: set = set()
+
+        def maybe_escalate(slot, req):
+            """Hand a flagged slot to the lane; the CALLER clears the
+            slot's active lane in the device mask (this closure cannot
+            rebind the loop's `active` from inside _spec_round)."""
+            if lane is None or req.last_mi < self.escalate_mi:
+                return False
+            if not lane.fits(req):
+                # dense sidecar can't hold prompt + budget: keep
+                # decoding in the main engine, counted once
+                if req.rid not in esc_skipped_rids:
+                    esc_skipped_rids.add(req.rid)
+                    stats.esc_skipped += 1
+                return False
+            req.transition("escalated")
+            sched.evict(slot)
+            decoding.discard(slot)
+            lane.submit(req)
+            stats.escalations += 1
+            stats.esc_by_class[req.priority] += 1
+            return True
 
         runner = self.runner
         tok = runner.put_replicated(jnp.zeros((self.num_slots,), jnp.int32))
@@ -501,6 +630,8 @@ class ServeEngine:
 
         def activate(slot, req):
             nonlocal tok, active, flags
+            req.transition("decoding")
+            req.spec_k_cur = self.spec_k
             tok = tok.at[slot].set(int(req.prompt[-1]))
             active = active.at[slot].set(True)
             flags = {k: v.at[slot].set(0) for k, v in flags.items()}
@@ -517,8 +648,30 @@ class ServeEngine:
                 table_synced = sched.table_version
 
         try:
-            while sched.has_work():
+            while sched.has_work() or pending \
+                    or (lane is not None and lane.has_work()):
+                # fire every arrival whose step has come; when the
+                # engine is otherwise idle, fast-forward to the next
+                # arrival group instead of spinning on empty iterations
+                fired = 0
+                while pending \
+                        and pending[0].arrival_step <= stats.steps_run:
+                    sched.submit(pending.popleft())
+                    fired += 1
+                if not fired and pending and not sched.has_work() \
+                        and not (lane is not None and lane.has_work()):
+                    nxt = pending[0].arrival_step
+                    while pending and pending[0].arrival_step == nxt:
+                        sched.submit(pending.popleft())
+                        fired += 1
                 admitted = sched.admit()
+                # admission-pressure preemptions (priority policy):
+                # the victims' requests are already requeued; drop the
+                # slots from the engine's decode set before the new
+                # admissions (possibly into those slots) re-arm them
+                for slot, _req in sched.take_preempted():
+                    decoding.discard(slot)
+                    active = active.at[slot].set(False)
                 if paged:
                     # admissions mutate the host tables (and may WIDEN
                     # them); the device copy must match before any
@@ -626,11 +779,18 @@ class ServeEngine:
                 # below the gate (threshold 0 therefore never drafts and
                 # the loop is byte-for-byte the plain scan path); decided
                 # before grants so the lookahead matches what the round
-                # will write (k draft positions instead of a chunk)
-                run_spec = self.spec_decode and any(
-                    req.last_mi < self.spec_mi_threshold
-                    for slot, req in sched.active() if slot in decoding)
-                ahead = self.spec_k if run_spec else self.chunk
+                # will write (k draft positions instead of a chunk).
+                # Adaptive depth: the round drafts at the drafting
+                # slots' MINIMUM current k, so no slot overdrafts past
+                # its own EMA-chosen depth.
+                drafting = [req for slot, req in sched.active()
+                            if slot in decoding
+                            and req.last_mi < self.spec_mi_threshold]
+                run_spec = self.spec_decode and bool(drafting)
+                k_round = min(req.spec_k_cur or self.spec_k
+                              for req in drafting) if run_spec \
+                    else self.spec_k
+                ahead = k_round if run_spec else self.chunk
                 if paged:
                     # incremental grant: map the blocks the coming chunk
                     # can write, on demand from the pool (capped at each
@@ -646,23 +806,22 @@ class ServeEngine:
                         if ids is None:
                             # the pool cannot grow this slot even after
                             # LRU-evicting cached blocks: preempt — blocks
-                            # release, output clears, the request restarts
-                            # from the queue FRONT
+                            # release, the lifecycle transition clears the
+                            # output, the request restarts from the queue
+                            # FRONT
                             sched.preempt(slot)
-                            req.tokens.clear()
-                            for name in ("H", "SE", "MI", "p_max"):
-                                getattr(req, name).clear()
-                            req.epistemic_flags = 0
-                            req.aleatoric_flags = 0
-                            req.last_mi = float("inf")
                             decoding.discard(slot)
                             active = active.at[slot].set(False)
-                            stats.preemptions += 1
                     sync_table()
 
                 stats.trace(sched)
+                # ONE unit of lane work per iteration (admission or a
+                # chunk at the verify S): escalations drain alongside
+                # the main pool without stalling its decode cadence
+                lane_ran = lane.step(stats) if lane is not None else False
                 if not decoding:
-                    if not jobs and not admitted:
+                    if not jobs and not admitted and not lane_ran \
+                            and not fired:
                         raise RuntimeError(
                             "scheduler stalled: queued requests, no "
                             "admission, nothing prefilling or decoding")
@@ -691,7 +850,8 @@ class ServeEngine:
 
                 if run_spec:
                     tok, cache, active, flags = self._spec_round(
-                        sched, stats, decoding, tok, cache, active, flags)
+                        sched, stats, decoding, tok, cache, active, flags,
+                        k=k_round, escalate=maybe_escalate)
                     continue
 
                 stats.chunks_run += 1
@@ -709,6 +869,7 @@ class ServeEngine:
                 for slot, req in sched.active():
                     if slot in prefilling:
                         continue         # mid-prefill: junk steps, no harvest
+                    finished = False
                     for t in range(self.chunk):
                         tk = int(ys["token"][t, slot])
                         req.tokens.append(tk)
@@ -719,12 +880,18 @@ class ServeEngine:
                         req.last_mi = float(ys["MI"][t, slot])
                         done_eos = self.eos_id is not None and tk == self.eos_id
                         if done_eos or len(req.tokens) >= req.max_new_tokens:
-                            req.t_finish = time.perf_counter()
-                            req.finish_reason = "eos" if done_eos else "length"
+                            req.transition(
+                                "finished",
+                                reason="eos" if done_eos else "length")
                             sched.evict(slot)
                             decoding.discard(slot)
                             active = active.at[slot].set(False)
+                            finished = True
                             break
+                    # escalation check on the slot's CARRIED (chunk-end)
+                    # MI: unfinished flagged slots finish on the lane
+                    if not finished and maybe_escalate(slot, req):
+                        active = active.at[slot].set(False)
 
         except BaseException:
             # eviction / exception / early-exit path: slots mid-decode

@@ -1,0 +1,116 @@
+"""Scheduling policies (the admission/eviction decision layer).
+
+``SchedPolicy`` is the interface ``scheduler.SlotScheduler`` consults
+at every admission: WHICH queued request to try next (``select``) and,
+when no slot or not enough pool is available for it, WHICH running
+slot to preempt on its behalf (``victim``).  The scheduler keeps all
+the mechanism — block reservations, table rewrites, requeueing — so a
+policy is a pure ranking function over host-side request state and
+never touches the allocator.
+
+``FifoPolicy`` is the bit-exact reference: always the queue head, no
+skip-ahead, never a preemption at admission time.  A refactored engine
+running fifo must replay the pre-policy engine's streams bit for bit
+(tests/test_policy.py::TestFifoReference).
+
+``PriorityPolicy`` ranks by (priority class, SLO deadline, submission
+order) — lower ``Request.priority`` wins, an SLO'd request's deadline
+is ``t_submit + slo_s`` (EDF within its class) — and under pressure
+preempts the lowest-ranked *decoding* slot whose class is strictly
+worse than the candidate's.  Only decoding slots are preemptible:
+their output replays bit-exactly from the prompt when the request
+lands back in the same slot (depth-keyed operand noise), whereas
+aborting a mid-prefill walk would waste the chunks already paid.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+
+class SchedPolicy:
+    """Admission-ranking interface the scheduler consults.
+
+    ``select`` returns the queue INDEX of the request to try admitting
+    next (None defers admission entirely); ``victim`` returns the slot
+    to preempt so ``candidate`` can admit (None defers the candidate
+    instead).  ``running`` only ever contains decoding slots — the
+    scheduler filters states so no policy can preempt a prefill walk.
+    """
+
+    name = "base"
+
+    def select(self, queue) -> Optional[int]:
+        raise NotImplementedError
+
+    def victim(self, candidate, running) -> Optional[int]:
+        raise NotImplementedError
+
+
+class FifoPolicy(SchedPolicy):
+    """The reference policy: queue head only, defer on failure, never
+    preempt for an admission.  Byte-for-byte the pre-policy scheduler
+    (grant-failure preemption still exists — that is the engine's
+    last-resort mechanism, not an admission decision)."""
+
+    name = "fifo"
+
+    def select(self, queue) -> Optional[int]:
+        return 0 if queue else None
+
+    def victim(self, candidate, running) -> Optional[int]:
+        return None
+
+
+class PriorityPolicy(SchedPolicy):
+    """Priority classes + SLO deadlines + preempt-under-pressure.
+
+    Rank key: ``(priority, deadline, seq)`` — lower priority value is
+    the better class, ``deadline = t_submit + slo_s`` (inf without an
+    SLO) gives earliest-deadline-first inside a class, and the
+    submission sequence breaks remaining ties so equal-priority
+    traffic degrades exactly to FIFO order.
+
+    ``victim`` picks the decoding slot with the numerically LARGEST
+    priority — strictly worse than the candidate's class, never a
+    peer — preferring the slot with the fewest emitted tokens (the
+    cheapest replay) and the youngest submission among those.
+    """
+
+    name = "priority"
+
+    @staticmethod
+    def _deadline(req) -> float:
+        return req.t_submit + req.slo_s if req.slo_s is not None \
+            else float("inf")
+
+    def select(self, queue) -> Optional[int]:
+        if not queue:
+            return None
+        best, best_key = None, None
+        for i, r in enumerate(queue):
+            key = (r.priority, self._deadline(r), r.seq)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        return best
+
+    def victim(self, candidate, running) -> Optional[int]:
+        worst = [(slot, r) for slot, r in running
+                 if r.priority > candidate.priority]
+        if not worst:
+            return None
+        slot, _ = max(worst, key=lambda sr: (sr[1].priority,
+                                             -len(sr[1].tokens),
+                                             sr[1].seq))
+        return slot
+
+
+_POLICIES = {"fifo": FifoPolicy, "priority": PriorityPolicy}
+
+
+def get_policy(name: str) -> SchedPolicy:
+    """Resolve a ``--policy`` name to a fresh policy instance."""
+    if name not in _POLICIES:
+        raise ValueError(f"unknown scheduling policy {name!r}; "
+                         f"choose from {sorted(_POLICIES)}")
+    return _POLICIES[name]()

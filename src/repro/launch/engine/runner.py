@@ -184,20 +184,39 @@ class ModelRunner:
                                 se_threshold=se_threshold),
             donate_argnums=(2,))
         self._draft = self._verify = self._spec_commit = None
+        # per-k jit cache for speculative draft/verify: k is STATIC in
+        # both builders, so the adaptive-k engine asks ``spec_fns(k)``
+        # for each depth it visits and pays one trace per distinct k
+        # (the commit is k-independent — it retraces per stacked shape)
+        self._entropy = entropy
+        self._mi_threshold = mi_threshold
+        self._se_threshold = se_threshold
+        self._spec_draft_s = spec_draft_s
+        self._spec_k_fns: dict[int, tuple] = {}
         if spec_decode:
             # speculative round: k-step shared-body draft (cache donated
             # forward like the scan's), ONE vmapped full-S verify over
             # the stacked hiddens, then the masked rollback/commit
-            self._draft = self._jit(
-                S.build_spec_draft(cfg, entropy=entropy, k=spec_k,
-                                   draft_samples=spec_draft_s),
-                donate_argnums=(2,))
-            self._verify = self._jit(
-                S.build_spec_verify(cfg, entropy=entropy, k=spec_k,
-                                    mi_threshold=mi_threshold,
-                                    se_threshold=se_threshold))
+            self._draft, self._verify = self.spec_fns(spec_k)
             self._spec_commit = self._jit(S.build_spec_commit(cfg),
                                           donate_argnums=(0,))
+
+    def spec_fns(self, k: int):
+        """(draft, verify) compiled callables for draft depth ``k``,
+        built lazily and cached per k — the adaptive-k rounds walk
+        depths between ``--spec-k-min`` and ``--spec-k-max`` and reuse
+        each depth's jits after its first visit."""
+        if k not in self._spec_k_fns:
+            draft = self._jit(
+                S.build_spec_draft(self.cfg, entropy=self._entropy, k=k,
+                                   draft_samples=self._spec_draft_s),
+                donate_argnums=(2,))
+            verify = self._jit(
+                S.build_spec_verify(self.cfg, entropy=self._entropy, k=k,
+                                    mi_threshold=self._mi_threshold,
+                                    se_threshold=self._se_threshold))
+            self._spec_k_fns[k] = (draft, verify)
+        return self._spec_k_fns[k]
 
     def _jit(self, fn, **kw):
         """jit + serve-mesh context around every dispatch: tracing

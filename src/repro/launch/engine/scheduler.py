@@ -1,10 +1,18 @@
 """Host-side request scheduling (the serving engine's admission layer).
 
-``Request`` is the unit of work, ``SlotScheduler`` maps queued requests
-onto fixed decode slots and — on the paged KV layout — owns the per-slot
-block tables over a ``block_pool.BlockAllocator``: admission, on-demand
-decode grants (tables WIDEN when a grant outruns them), LRU pressure
-eviction through the prefix cache, and preemption as the last resort.
+``Request`` is the unit of work — an explicit lifecycle state machine
+(``new → queued → prefilling → decoding → finished``, with
+``preempted`` re-entering at ``queued`` and ``escalated`` finishing on
+the high-sample lane) whose every edge funnels through ONE audited
+``transition`` method, so scheduler, engine, spec-decode rollback and
+stats never mutate lifecycle fields ad hoc.  ``SlotScheduler`` maps
+queued requests onto fixed decode slots through a pluggable
+``policy.SchedPolicy`` (fifo = the bit-exact reference; priority adds
+classes + SLO deadlines + admission-time preemption) and — on the
+paged KV layout — owns the per-slot block tables over a
+``block_pool.BlockAllocator``: admission, on-demand decode grants
+(tables WIDEN when a grant outruns them), LRU pressure eviction
+through the prefix cache, and preemption as the last resort.
 Everything here is plain Python + numpy; device work (prefill, CoW
 copies, table uploads) is the engine's job, driven by the records this
 layer produces.
@@ -14,11 +22,27 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Optional
 
 import numpy as np
 
 from repro.launch.engine.block_pool import BlockAllocator
+from repro.launch.engine.policy import FifoPolicy, SchedPolicy
+
+# the request lifecycle: every legal edge of the state machine.  One
+# transition method audits against this map, so an illegal move (e.g.
+# harvesting into a preempted request, finishing twice) raises instead
+# of silently corrupting per-request accounting.
+LIFECYCLE = {
+    "new": ("queued",),
+    "queued": ("prefilling",),
+    "prefilling": ("decoding", "preempted"),
+    "decoding": ("finished", "preempted", "escalated"),
+    "preempted": ("queued",),
+    "escalated": ("finished",),
+    "finished": (),
+}
 
 
 @dataclasses.dataclass
@@ -28,6 +52,15 @@ class Request:
     rid: int
     prompt: np.ndarray                    # (S,) int32
     max_new_tokens: int
+    # priority CLASS (lower value = better class; 0 is the best) and
+    # optional SLO deadline offset — only the priority policy reads
+    # them, fifo traffic leaves the defaults
+    priority: int = 0
+    slo_s: Optional[float] = None
+    # engine step count (stats.steps_run) at which this request joins
+    # the queue; 0 = submitted up front.  Bursty arrival traces for the
+    # priority benchmarks are built from this
+    arrival_step: int = 0
     t_submit: float = 0.0
     t_finish: float = 0.0
     finish_reason: str = ""
@@ -49,10 +82,72 @@ class Request:
     # slot index, so two runs only produce bitwise-equal streams for
     # requests that landed in the same slot.
     slot: Optional[int] = None
+    # lifecycle state + audited history of (state, timestamp) edges
+    state: str = "new"
+    history: list = dataclasses.field(default_factory=list)
+    # wall time spent waiting in the queue (accumulates across preempt
+    # re-entries); latency_s - queue_time_s is the service time
+    queue_time_s: float = 0.0
+    preempt_count: int = 0
+    # submission order (assigned once by the scheduler); the priority
+    # policy's final tie-break, so equal-priority traffic stays FIFO
+    seq: int = -1
+    # adaptive speculative draft depth: the slot's current k and the
+    # acceptance-rate EMA driving it (engine-owned, reset on preempt)
+    spec_k_cur: int = 0
+    spec_ema: Optional[float] = None
+    _t_queued: float = dataclasses.field(default=0.0, repr=False)
+
+    def transition(self, to: str, *, reason: str = "") -> None:
+        """THE audited lifecycle edge — every state change funnels
+        through here.  Raises on an illegal move; applies the edge's
+        side effects exactly once: ``queued`` stamps t_submit (first
+        entry) and opens the queue-wait clock, ``prefilling`` closes
+        it into queue_time_s, ``preempted`` clears the accumulated
+        output (re-admission replays from the prompt) and resets the
+        spec-decode EMA, ``finished`` stamps t_finish/finish_reason."""
+        if to not in LIFECYCLE[self.state]:
+            raise ValueError(
+                f"request {self.rid}: illegal lifecycle transition "
+                f"{self.state!r} -> {to!r} (legal: "
+                f"{LIFECYCLE[self.state]})")
+        now = time.perf_counter()
+        if to == "queued":
+            if self.state == "new":
+                self.t_submit = now
+            self._t_queued = now
+        elif to == "prefilling":
+            self.queue_time_s += now - self._t_queued
+        elif to == "preempted":
+            self.preempt_count += 1
+            self.tokens.clear()
+            for name in ("H", "SE", "MI", "p_max"):
+                getattr(self, name).clear()
+            self.epistemic_flags = 0
+            self.aleatoric_flags = 0
+            self.last_mi = float("inf")
+            self.spec_k_cur = 0
+            self.spec_ema = None
+        elif to == "finished":
+            self.t_finish = now
+            self.finish_reason = reason
+        self.state = to
+        self.history.append((to, now))
 
     @property
     def latency_s(self) -> float:
         return self.t_finish - self.t_submit
+
+    @property
+    def service_time_s(self) -> float:
+        """Latency net of queue wait: admission + prefill + decode
+        (+ replayed work after a preemption — the preempted tokens are
+        re-decoded, which is service, not queueing)."""
+        return self.latency_s - self.queue_time_s
+
+    @property
+    def was_escalated(self) -> bool:
+        return any(s == "escalated" for s, _ in self.history)
 
 
 @dataclasses.dataclass
@@ -72,10 +167,18 @@ class PrefixAdmit:
 
 
 class SlotScheduler:
-    """FIFO admission of queued requests into fixed decode slots.
+    """Policy-driven admission of queued requests into fixed decode
+    slots.
 
     Pure host-side bookkeeping (no jax): ``admit`` fills free slots in
-    slot order from the queue front, ``evict`` frees a slot for reuse.
+    slot order with whatever request the ``policy`` selects (fifo — the
+    default and the bit-exact reference — always picks the queue
+    front), ``evict`` frees a slot for reuse.  When admission fails for
+    the selected request (no free slot, or not enough pool), the policy
+    may name a strictly-lower-priority DECODING slot to preempt on its
+    behalf; preemptions performed inside ``admit`` are surfaced through
+    ``take_preempted`` so the engine can deactivate those slots before
+    acting on the new placements.
 
     With a ``BlockAllocator`` the scheduler also owns the paged-KV block
     tables: admission switches from "is a slot free" to "are enough
@@ -104,11 +207,16 @@ class SlotScheduler:
     def __init__(self, num_slots: int,
                  allocator: Optional[BlockAllocator] = None,
                  table_width: int = 0, prefix_cache=None,
-                 watermark: Optional[int] = None):
+                 watermark: Optional[int] = None,
+                 policy: Optional[SchedPolicy] = None):
         self.slots: list[Optional[Request]] = [None] * num_slots
         self.queue: collections.deque[Request] = collections.deque()
         self.allocator = allocator
         self.prefix_cache = prefix_cache
+        self.policy = policy if policy is not None else FifoPolicy()
+        self.preemptions = 0
+        self._seq = 0
+        self._admit_preempted: list[tuple[int, Request]] = []
         # free-block headroom admission must leave for running decoders'
         # on-demand grants (now that their budgets are no longer
         # reserved up front); waived when nothing is running, so an
@@ -138,7 +246,18 @@ class SlotScheduler:
             self.table_growths = 0
 
     def submit(self, req: Request) -> None:
+        if req.seq < 0:
+            req.seq = self._seq
+            self._seq += 1
+        req.transition("queued")
         self.queue.append(req)
+
+    def _pop(self, qi: int) -> Request:
+        if qi == 0:
+            return self.queue.popleft()
+        req = self.queue[qi]
+        del self.queue[qi]
+        return req
 
     def _ensure_width(self, want: int) -> None:
         """Widen the host block tables to hold ``want`` blocks per slot
@@ -171,9 +290,9 @@ class SlotScheduler:
             return False
         return alloc.reserve(need)
 
-    def _admit_paged(self, slot: int) -> Optional[Request]:
+    def _admit_paged(self, slot: int, qi: int = 0) -> Optional[Request]:
         alloc = self.allocator
-        req = self.queue[0]
+        req = self.queue[qi]
         P = len(req.prompt)
         nprompt = alloc.blocks_for(P)
         # grant cap, NOT a reservation: decode blocks are drawn from the
@@ -195,13 +314,13 @@ class SlotScheduler:
                 hit = None
         if hit is None or not hit.tokens:
             if not self._try_reserve(nprompt, frozenset()):
-                return None               # pool exhausted: defer, FIFO
-            self.queue.popleft()
+                return None               # pool exhausted: defer
+            self._pop(qi)
             ids = alloc.alloc(nprompt)
             if self.prefix_cache is not None:
                 self._slot_prefix[slot] = PrefixAdmit(tokens=0)
         else:
-            self.queue.popleft()
+            self._pop(qi)
             self.prefix_cache.lock(hit)   # slot refs on shared blocks
             ids = list(hit.blocks)
             cow = None
@@ -236,19 +355,60 @@ class SlotScheduler:
         self._slot_cow_src[slot] = None
         self.allocator.free([src])
 
+    def _preempt_for(self, candidate: Request) -> bool:
+        """Ask the policy for a decoding slot to preempt so
+        ``candidate`` can admit; False defers the candidate instead.
+        Only DECODING occupants are offered (a preempted decode replays
+        bit-exactly from its prompt; aborting a mid-prefill walk would
+        throw away chunks already paid for), and every preemption
+        strictly shrinks that set, so the admit loop terminates."""
+        running = [(i, r) for i, r in enumerate(self.slots)
+                   if r is not None and r.state == "decoding"]
+        victim = self.policy.victim(candidate, running)
+        if victim is None:
+            return False
+        self._admit_preempted.append((victim, self.preempt(victim)))
+        return True
+
+    def take_preempted(self) -> list[tuple[int, Request]]:
+        """(slot, request) pairs the policy preempted inside the last
+        ``admit`` call; the engine must deactivate those slots before
+        acting on the new placements."""
+        out = self._admit_preempted
+        self._admit_preempted = []
+        return out
+
     def admit(self) -> list[tuple[int, Request]]:
         placed = []
-        for i, occupant in enumerate(self.slots):
-            if occupant is None and self.queue:
-                if self.allocator is not None:
-                    req = self._admit_paged(i)
-                    if req is None:
+        self._admit_preempted = []
+        while self.queue:
+            qi = self.policy.select(self.queue)
+            if qi is None:
+                break
+            candidate = self.queue[qi]
+            slot = next((i for i, r in enumerate(self.slots)
+                         if r is None), None)
+            if slot is None:
+                # every slot busy: the policy may preempt a strictly
+                # lower-priority decoding slot for the candidate (fifo
+                # never does — all slots busy simply ends admission)
+                if not self._preempt_for(candidate):
+                    break
+                continue
+            if self.allocator is not None:
+                req = self._admit_paged(slot, qi)
+                if req is None:
+                    # pool short for the selected request: preempt for
+                    # it (freed blocks retry the admission) or defer
+                    if not self._preempt_for(candidate):
                         break
-                else:
-                    req = self.queue.popleft()
-                req.slot = i
-                self.slots[i] = req
-                placed.append((i, req))
+                    continue
+            else:
+                req = self._pop(qi)
+            req.slot = slot
+            req.transition("prefilling")
+            self.slots[slot] = req
+            placed.append((slot, req))
         return placed
 
     def grant(self, slot: int, target_len: int) -> Optional[list[int]]:
@@ -312,14 +472,18 @@ class SlotScheduler:
         return len(drop)
 
     def preempt(self, slot: int) -> Request:
-        """Evict a slot whose growth grant failed and requeue its
-        request at the queue FRONT (FIFO order preserved).  The caller
-        clears the request's accumulated output first — on readmission
-        it restarts from its prompt (depth-keyed decode noise replays
-        the aborted stream bit-exactly when it lands in the same
-        slot)."""
+        """Evict a slot (growth grant failed, or the policy claimed it
+        for a better candidate) and requeue its request at the queue
+        FRONT (FIFO order preserved; the priority policy re-ranks
+        anyway).  The audited ``preempted`` transition clears the
+        request's accumulated output — on readmission it restarts from
+        its prompt (depth-keyed decode noise replays the aborted
+        stream bit-exactly when it lands in the same slot)."""
         req = self.evict(slot)
+        req.transition("preempted")
+        req.transition("queued")
         self.queue.appendleft(req)
+        self.preemptions += 1
         return req
 
     def evict(self, slot: int) -> Request:
@@ -357,6 +521,7 @@ class SlotScheduler:
             out.update(
                 blocks_free=len(a._free), blocks_reserved=a._reserved,
                 blocks_in_use=a.in_use,
+                blocks_utilization=a.utilization(),
                 blocks_cached=(self.prefix_cache.cached_blocks()
                                if self.prefix_cache is not None else 0))
         return out

@@ -12,10 +12,19 @@ hands it.
 from __future__ import annotations
 
 import time
+from collections import Counter
 
 import numpy as np
 
 from repro.models import registry as M
+
+
+def _pcts(values) -> tuple[float, float]:
+    """(p50, p99) with nearest-rank p99 — at small N an interpolated
+    p99 fabricates a latency no request experienced."""
+    arr = np.array(values) if len(values) else np.zeros((1,))
+    return (float(np.percentile(arr, 50)),
+            float(np.percentile(arr, 99, method="higher")))
 
 
 class ServeStats:
@@ -52,7 +61,22 @@ class ServeStats:
         self.attn_blocks_read = 0
         self.attn_blocks_span = 0
         self.prefill_chunks = 0
-        self.preemptions = 0
+        # OOD escalation: requests handed to the high-S verify lane when
+        # their carried MI crossed --escalate-mi, the tokens that lane
+        # finished for them, and the requests it could NOT take (prompt
+        # + budget exceeding the lane's max_len)
+        self.escalations = 0
+        self.esc_by_class: Counter = Counter()
+        self.esc_tokens = 0
+        self.esc_skipped = 0
+        self.esc_decode_s = 0.0
+        self.esc_steps = 0
+        # adaptive spec-decode depth: per-slot EMA grow/shrink events
+        # and the range of round depths actually drafted
+        self.spec_k_up = 0
+        self.spec_k_down = 0
+        self.spec_round_k_min = None
+        self.spec_round_k_max = None
         # speculative decoding: rounds run, proposals drafted/accepted/
         # emitted, partial-round rollbacks, and MI-gated (non-drafting)
         # slot-rounds.  full_model_calls counts full-S-sample dispatches
@@ -79,6 +103,13 @@ class ServeStats:
         else:
             self.seen_prefill_shapes.add(shape_key)
             self.compile_times.append(dt)
+
+    def record_round_k(self, k: int) -> None:
+        """Track the range of draft depths adaptive-k rounds used."""
+        self.spec_round_k_min = k if self.spec_round_k_min is None \
+            else min(self.spec_round_k_min, k)
+        self.spec_round_k_max = k if self.spec_round_k_max is None \
+            else max(self.spec_round_k_max, k)
 
     def record_admission(self, prompt_len: int, hit_len: int) -> None:
         """Prefix-cache hit accounting for one paged admission."""
@@ -144,6 +175,26 @@ class ServeStats:
             decode_attn_stats = {"mode": "gather"}
         lat = np.array([r.latency_s for r in requests]) if requests \
             else np.zeros((1,))
+        queue_p50, queue_p99 = _pcts([r.queue_time_s for r in requests])
+        svc_p50, svc_p99 = _pcts([r.service_time_s for r in requests])
+        # per-priority-class breakdown: under a priority policy the
+        # aggregate p99 hides exactly the split the policy exists to
+        # create, so report latency AND its queue/service decomposition
+        # per class alongside that class's escalation/preemption counts
+        per_class = {}
+        for cls in sorted({r.priority for r in requests}):
+            group = [r for r in requests if r.priority == cls]
+            c_lat = _pcts([r.latency_s for r in group])
+            c_queue = _pcts([r.queue_time_s for r in group])
+            c_svc = _pcts([r.service_time_s for r in group])
+            per_class[cls] = {
+                "num_requests": len(group),
+                "latency_p50_s": c_lat[0], "latency_p99_s": c_lat[1],
+                "queue_p50_s": c_queue[0], "queue_p99_s": c_queue[1],
+                "service_p50_s": c_svc[0], "service_p99_s": c_svc[1],
+                "escalations": sum(r.was_escalated for r in group),
+                "preemptions": sum(r.preempt_count for r in group),
+            }
         epi = sum(r.epistemic_flags for r in requests)
         alea = sum(r.aleatoric_flags for r in requests)
         return {
@@ -167,6 +218,15 @@ class ServeStats:
             "latency_p99_s": float(np.percentile(lat, 99,
                                                  method="higher")),
             "latency_max_s": float(lat.max()),
+            # latency decomposition: time queued (admission pressure,
+            # what a priority policy trades between classes) vs time in
+            # a slot (prefill + decode + any escalation tail)
+            "queue_time_p50_s": queue_p50,
+            "queue_time_p99_s": queue_p99,
+            "service_time_p50_s": svc_p50,
+            "service_time_p99_s": svc_p99,
+            "policy": sched.policy.name,
+            "per_class": per_class,
             "kv": kv_stats,
             # block-sparse decode kernel vs gather HBM traffic
             "decode_attn": decode_attn_stats,
@@ -200,7 +260,24 @@ class ServeStats:
             # per-prompt-length recompiles to one per kv_block bucket)
             "prefill_compiles": len(self.seen_prefill_shapes),
             "table_growths": sched.table_growths,
-            "preemptions": self.preemptions,
+            # single source of truth is the scheduler: every preemption
+            # (admission-pressure victim or grant-failure last resort)
+            # goes through SlotScheduler.preempt
+            "preemptions": sched.preemptions,
+            # MI-triggered OOD escalation: requests finished on the
+            # high-S sidecar runner after their carried MI crossed the
+            # --escalate-mi threshold (cf. examples/blood_cell_ood.py)
+            "escalation": {
+                "enabled": engine.escalate_mi is not None,
+                "mi_threshold": engine.escalate_mi,
+                "verify_samples": engine.escalate_s,
+                "escalations": self.escalations,
+                "by_class": dict(self.esc_by_class),
+                "tokens": self.esc_tokens,
+                "skipped_too_long": self.esc_skipped,
+                "decode_s": self.esc_decode_s,
+                "steps": self.esc_steps,
+            },
             # uncertainty-gated speculative decoding: acceptance per
             # drafted proposal, emitted tokens per round, and the
             # full-S-sample dispatch count the rounds amortize (a scan
@@ -221,6 +298,16 @@ class ServeStats:
                 "rollbacks": self.spec_rollbacks,
                 "gated_slot_rounds": self.spec_gated,
                 "full_model_calls": self.full_model_calls,
+                # adaptive draft depth: per-slot acceptance EMA walks k
+                # inside [k_min, k_max]; with k_min == k == k_max the
+                # depth is pinned and the engine is bitwise-identical
+                # to the fixed-k build
+                "k_min": engine.spec_k_min,
+                "k_max": engine.spec_k_max,
+                "k_up": self.spec_k_up,
+                "k_down": self.spec_k_down,
+                "round_k_min": self.spec_round_k_min,
+                "round_k_max": self.spec_round_k_max,
             },
             # worst gap between consecutive decode-serving scans: the
             # stall a monolithic batch prefill injects mid-stream, which

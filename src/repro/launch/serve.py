@@ -63,17 +63,20 @@ import numpy as np
 from repro.configs.registry import get_config, reduced
 from repro.core.entropy import KernelEntropy
 from repro.data.synthetic import TokenStreamState, token_batch
-from repro.launch.engine import (BlockAllocator, ModelRunner, PrefixAdmit,
-                                 Request, ServeEngine, ServeStats,
-                                 SlotScheduler, decode_loop_reference,
+from repro.launch.engine import (BlockAllocator, EscalationLane, FifoPolicy,
+                                 ModelRunner, PrefixAdmit, PriorityPolicy,
+                                 Request, SchedPolicy, ServeEngine,
+                                 ServeStats, SlotScheduler,
+                                 decode_loop_reference, get_policy,
                                  resolve_mesh)
 from repro.models import registry as M
 
 __all__ = [
-    "BlockAllocator", "ModelRunner", "PrefixAdmit", "Request",
+    "BlockAllocator", "EscalationLane", "FifoPolicy", "ModelRunner",
+    "PrefixAdmit", "PriorityPolicy", "Request", "SchedPolicy",
     "ServeEngine", "ServeStats", "SlotScheduler",
-    "decode_loop_reference", "resolve_mesh", "make_requests", "serve",
-    "main",
+    "decode_loop_reference", "get_policy", "resolve_mesh",
+    "make_requests", "serve", "main",
 ]
 
 
@@ -91,7 +94,20 @@ def make_requests(args, cfg) -> list[Request]:
         # same template tokens (what the prefix cache amortizes)
         n = min(args.shared_prefix, args.prompt_len)
         toks[:, :n] = toks[0, :n]
-    reqs = [Request(rid=i, prompt=toks[i], max_new_tokens=args.gen_len)
+    # mixed-priority / SLO / bursty-arrival traffic: each comma list is
+    # cycled across the request indices, so "--priorities 0,2,2,2" makes
+    # every fourth request high-priority (class 0) without a trace file
+    prios = [int(x) for x in args.priorities.split(",")] \
+        if getattr(args, "priorities", "") else [0]
+    slos = [float(x) / 1e3 if float(x) > 0 else None
+            for x in args.slo_ms.split(",")] \
+        if getattr(args, "slo_ms", "") else [None]
+    arrivals = [int(x) for x in args.arrivals.split(",")] \
+        if getattr(args, "arrivals", "") else [0]
+    reqs = [Request(rid=i, prompt=toks[i], max_new_tokens=args.gen_len,
+                    priority=prios[i % len(prios)],
+                    slo_s=slos[i % len(slos)],
+                    arrival_step=arrivals[i % len(arrivals)])
             for i in range(args.num_requests)]
     if getattr(args, "long_prompt", 0):
         # one outlier request whose prompt (and so prompt + gen) can
@@ -103,7 +119,9 @@ def make_requests(args, cfg) -> list[Request]:
                                    1, args.long_prompt, cfg.vocab_size)
         reqs[0] = Request(rid=0,
                           prompt=np.asarray(long_toks, np.int32)[0],
-                          max_new_tokens=args.gen_len)
+                          max_new_tokens=args.gen_len,
+                          priority=reqs[0].priority, slo_s=reqs[0].slo_s,
+                          arrival_step=reqs[0].arrival_step)
     return reqs
 
 
@@ -138,7 +156,12 @@ def serve(args) -> dict:
         mesh=resolve_mesh(getattr(args, "mesh", None)),
         spec_decode=args.spec_decode == "on", spec_k=args.spec_k,
         spec_mi_threshold=args.spec_mi_threshold,
-        spec_draft_s=args.spec_draft_s)
+        spec_draft_s=args.spec_draft_s,
+        spec_k_min=getattr(args, "spec_k_min", None),
+        spec_k_max=getattr(args, "spec_k_max", None),
+        policy=getattr(args, "policy", "fifo"),
+        escalate_mi=getattr(args, "escalate_mi", None),
+        escalate_s=getattr(args, "escalate_s", None))
     result = engine.run(make_requests(args, cfg))
 
     # entropy HBM traffic of the head's MC draws per decoded token: the
@@ -244,6 +267,45 @@ def main():
     ap.add_argument("--spec-draft-s", type=int, default=1,
                     help="head samples for draft proposals (0 = "
                          "deterministic mean head)")
+    ap.add_argument("--spec-k-min", type=int, default=None,
+                    help="adaptive draft-depth floor: per-slot "
+                         "acceptance EMA shrinks/grows k between "
+                         "--spec-k-min and --spec-k-max (default: pin "
+                         "both to --spec-k, disabling adaptation)")
+    ap.add_argument("--spec-k-max", type=int, default=None,
+                    help="adaptive draft-depth ceiling (see "
+                         "--spec-k-min)")
+    ap.add_argument("--policy", choices=("fifo", "priority"),
+                    default="fifo",
+                    help="scheduling policy: 'fifo' admits strictly in "
+                         "submission order (the bit-exact reference); "
+                         "'priority' ranks by (--priorities class, SLO "
+                         "deadline, order) and preempts strictly "
+                         "lower-priority decoding slots under pressure")
+    ap.add_argument("--priorities", default="",
+                    help="comma list of priority classes cycled across "
+                         "requests (lower = better; e.g. 0,2,2,2); "
+                         "empty = all class 0")
+    ap.add_argument("--slo-ms", default="",
+                    help="comma list of SLO deadlines in ms cycled "
+                         "across requests (0 = none); the priority "
+                         "policy serves earliest-deadline-first inside "
+                         "a class")
+    ap.add_argument("--arrivals", default="",
+                    help="comma list of arrival steps cycled across "
+                         "requests: each request joins the queue once "
+                         "the engine has decoded that many steps "
+                         "(bursty open-loop traces; empty = all at 0)")
+    ap.add_argument("--escalate-mi", type=float, default=None,
+                    help="hand a decoding request to the high-S "
+                         "escalation lane when its carried MI reaches "
+                         "this threshold (cf. the OOD band in "
+                         "examples/blood_cell_ood.py); default: off")
+    ap.add_argument("--escalate-s", type=int, default=None,
+                    help="MC head samples for the escalation lane's "
+                         "verify config (default: 4x the serving S); "
+                         "each distinct S compiles its own sidecar "
+                         "runner once")
     ap.add_argument("--mesh", default=None,
                     help="serve tensor-parallel on a DxM debug mesh "
                          "(e.g. 1x4): params + paged KV pool shard over "
@@ -270,13 +332,29 @@ def main():
           + f"  decode inter-arrival p99 "
             f"{r['decode_interarrival_p99_s'] * 1e3:.1f}ms")
     if r["kv"]["layout"] == "paged":
-        print(f"tables: {r['table_growths']} growths, "
-              f"{r['preemptions']} preemptions")
+        print(f"tables: {r['table_growths']} growths")
+    print(f"policy: {r['policy']}  preemptions {r['preemptions']}")
     print(f"decode {r['decode_tok_per_s']:.1f} tok/s "
           f"(e2e {r['e2e_tok_per_s']:.1f})  "
           f"latency p50 {r['latency_p50_s']:.2f}s "
           f"p99 {r['latency_p99_s']:.2f}s "
           f"max {r['latency_max_s']:.2f}s")
+    print(f"latency split: queue p99 {r['queue_time_p99_s']:.2f}s  "
+          f"service p99 {r['service_time_p99_s']:.2f}s")
+    if len(r["per_class"]) > 1:
+        for cls, c in sorted(r["per_class"].items()):
+            print(f"  class {cls}: {c['num_requests']} reqs  "
+                  f"latency p50 {c['latency_p50_s']:.2f}s "
+                  f"p99 {c['latency_p99_s']:.2f}s  "
+                  f"queue p99 {c['queue_p99_s']:.2f}s  "
+                  f"{c['escalations']} escalations  "
+                  f"{c['preemptions']} preemptions")
+    esc = r["escalation"]
+    if esc["enabled"]:
+        print(f"escalation: {esc['escalations']} requests at MI >= "
+              f"{esc['mi_threshold']} finished at S={esc['verify_samples']} "
+              f"({esc['tokens']} tokens, {esc['skipped_too_long']} "
+              f"skipped too-long)")
     print(f"epistemic flags {r['epistemic_flags']}  "
           f"aleatoric flags {r['aleatoric_flags']}  "
           f"(per 1k tokens: {r['flags_per_1k_tokens']['epistemic']:.1f} / "
@@ -308,6 +386,10 @@ def main():
               f"{sd['gated_slot_rounds']} MI-gated slot-rounds, "
               f"{sd['full_model_calls']} full-model calls for "
               f"{r['gen_tokens']} tokens")
+        if sd["k_min"] != sd["k_max"]:
+            print(f"  adaptive k in [{sd['k_min']}, {sd['k_max']}]: "
+                  f"round depths {sd['round_k_min']}-{sd['round_k_max']}, "
+                  f"{sd['k_up']} grows / {sd['k_down']} shrinks")
     pc = r["prefix_cache"]
     if pc["enabled"]:
         print(f"prefix cache: {pc['hits']}/{pc['hits'] + pc['misses']} "

@@ -30,6 +30,7 @@ import numpy as np
 
 from _hypothesis_compat import given, settings, st
 from repro.launch.engine.block_pool import BlockAllocator
+from repro.launch.engine.policy import get_policy
 from repro.launch.engine.scheduler import Request, SlotScheduler
 from repro.launch.prefix_cache import RadixPrefixCache
 
@@ -51,29 +52,44 @@ class _Machine:
     list of triples reaches every interesting interleaving.
     """
 
-    def __init__(self, use_cache: bool):
+    def __init__(self, use_cache: bool, use_priority: bool = False):
         self.alloc = BlockAllocator(NUM_BLOCKS, BLOCK)
         self.cache = RadixPrefixCache(self.alloc, BLOCK) if use_cache \
             else None
         self.sched = SlotScheduler(NUM_SLOTS, allocator=self.alloc,
                                    table_width=2,
-                                   prefix_cache=self.cache)
+                                   prefix_cache=self.cache,
+                                   policy=get_policy(
+                                       "priority" if use_priority
+                                       else "fifo"))
         self.rid = 0
         self.prefix_hits = 0
         self.pending_cow: set[int] = set()
 
     # -- ops --------------------------------------------------------------
 
-    def _submit(self, a, b):
+    def _submit(self, a, b, priority=2):
         t = _TEMPLATES[a % len(_TEMPLATES)]
         plen = 1 + b % len(t)
         self.sched.submit(Request(rid=self.rid,
                                   prompt=np.asarray(t[:plen], np.int32),
-                                  max_new_tokens=1 + a % 8))
+                                  max_new_tokens=1 + a % 8,
+                                  priority=priority))
         self.rid += 1
 
+    def _submit_hi(self, a, b):
+        # a class-0 candidate: under the priority policy its admission
+        # may preempt a strictly-worse DECODING slot (see _activate)
+        self._submit(a, b, priority=0)
+
     def _admit(self, a, b):
-        for slot, _ in self.sched.admit():
+        placed = self.sched.admit()
+        # the policy may have preempted decoding slots to place better
+        # candidates — their pending CoW sources died with the evict
+        # (a re-placed slot can re-enter pending_cow just below)
+        for slot, _ in self.sched.take_preempted():
+            self.pending_cow.discard(slot)
+        for slot, _ in placed:
             info = self.sched.prefix_admit(slot)
             if info is None:
                 continue
@@ -131,8 +147,19 @@ class _Machine:
         if self.cache is not None:
             self.cache.evict_lru(1 + a % 4, protect=frozenset())
 
+    def _activate(self, a, b):
+        # engine's activate(): a prefilled slot starts decoding — the
+        # ONLY state the priority policy may claim as a victim
+        prefilling = [(s, r) for s, r in self.sched.active()
+                      if r.state == "prefilling"]
+        if prefilling:
+            _, req = prefilling[a % len(prefilling)]
+            req.transition("decoding")
+
+    # codes 0-7 keep their pre-priority meaning so the fixed-seed smoke
+    # trajectories below replay unchanged; 8-9 are the lifecycle ops
     _OPS = (_submit, _admit, _grant, _rollback, _evict, _preempt,
-            _finish_cow, _evict_lru)
+            _finish_cow, _evict_lru, _submit_hi, _activate)
 
     def step(self, op):
         code, a, b = op
@@ -200,12 +227,13 @@ class _Machine:
 
 
 @settings(max_examples=60, deadline=None)
-@given(ops=st.lists(st.tuples(st.integers(0, 7), st.integers(0, 15),
+@given(ops=st.lists(st.tuples(st.integers(0, 9), st.integers(0, 15),
                               st.integers(0, 15)),
                     min_size=1, max_size=150),
-       use_cache=st.booleans())
-def test_fuzz_refcount_invariants_hold_at_every_step(ops, use_cache):
-    m = _Machine(use_cache)
+       use_cache=st.booleans(), use_priority=st.booleans())
+def test_fuzz_refcount_invariants_hold_at_every_step(ops, use_cache,
+                                                     use_priority):
+    m = _Machine(use_cache, use_priority)
     for op in ops:
         m.step(op)
     m.drain()
@@ -225,3 +253,18 @@ def test_churn_smoke():
         assert m.sched.table_growths > 0     # ...through the growth path
         if use_cache:
             assert m.prefix_hits > 0         # ...including prefix sharing
+
+
+def test_priority_churn_smoke():
+    """Same interpreter, priority policy, the full op set (class-0
+    submissions + explicit decode activation): the trajectory must
+    actually exercise admission-time preemption and hold the exact
+    refcount identity through it."""
+    rng = random.Random(2)
+    m = _Machine(use_cache=True, use_priority=True)
+    for _ in range(400):
+        m.step((rng.randint(0, 9), rng.randint(0, 15),
+                rng.randint(0, 15)))
+    m.drain()
+    assert m.rid > 20
+    assert m.sched.preemptions > 0           # policy preempted a victim

@@ -1,0 +1,474 @@
+"""Risk-aware request lifecycle: policy layer, preemption, escalation.
+
+The acceptance contract of the policy-layered scheduler refactor
+(ISSUE 10): every lifecycle edge funnels through the audited
+``Request.transition`` (illegal moves raise), ``--policy fifo`` with
+escalation off replays the pre-refactor engine's streams bit for bit
+(anchored on ``decode_loop_reference``, the pre-engine oracle, across
+all four KV-carrying attention families — the prefix-cache CoW and
+chunked-prefill bitwise contracts are carried by their own unchanged
+suites), the priority policy preempts strictly-lower-priority decoding
+slots and the preempted request's replayed stream is bitwise identical
+to never-preempted (exact-refcount pool identity included), and
+MI-triggered escalation finishes flagged requests on a high-S sidecar
+runner cached per S.
+
+Operand-mode decode noise folds the SLOT index, so every bitwise
+comparison here pins the admission schedule by construction and
+asserts the slot breadcrumbs matched (same discipline as
+tests/test_spec_decode.py).
+"""
+
+import numpy as np
+import pytest
+
+from conftest import family_setup as _family
+from conftest import make_request as _req
+from repro.launch.engine.scheduler import LIFECYCLE
+from repro.launch.serve import (FifoPolicy, PriorityPolicy, Request,
+                                ServeEngine, SlotScheduler,
+                                decode_loop_reference, get_policy)
+
+# one family per KV-carrying attention variant (same set the spec-decode
+# parity sweep anchors); ssm has no KV strips and serves dense
+POLICY_FAMILIES = ("dense", "encdec", "hybrid", "moe")
+
+
+def _preq(rid, prompt, n, priority=0, slo=None, arrival=0):
+    return Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                   max_new_tokens=n, priority=priority, slo_s=slo,
+                   arrival_step=arrival)
+
+
+def _assert_streams_equal(ra, rb):
+    assert len(ra["requests"]) == len(rb["requests"])
+    for a, b in zip(ra["requests"], rb["requests"]):
+        assert a.slot == b.slot, \
+            f"request {a.rid} reshuffled to a different slot " \
+            f"({a.slot} vs {b.slot}): parity undefined, fix the workload"
+        assert a.finish_reason == b.finish_reason
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        for name in ("H", "SE", "MI", "p_max"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, name), np.float32),
+                np.asarray(getattr(b, name), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# lifecycle state machine
+# ---------------------------------------------------------------------------
+
+class TestLifecycle:
+    def test_legal_walk_records_history_and_times(self):
+        r = _req(0, [1, 2, 3], 4)
+        assert r.state == "new"
+        r.transition("queued")
+        assert r.t_submit > 0
+        r.transition("prefilling")
+        r.transition("decoding")
+        r.transition("finished", reason="length")
+        assert r.t_finish >= r.t_submit
+        assert r.finish_reason == "length"
+        assert [s for s, _ in r.history] == \
+            ["queued", "prefilling", "decoding", "finished"]
+        assert r.queue_time_s >= 0.0
+        assert abs(r.service_time_s - (r.latency_s - r.queue_time_s)) \
+            < 1e-12
+
+    @pytest.mark.parametrize("path", [
+        ("decoding",),                       # new can only go queued
+        ("queued", "finished"),              # no queue-jump to finished
+        ("queued", "prefilling", "queued"),  # no un-admission
+        ("queued", "prefilling", "decoding", "finished", "queued"),
+    ])
+    def test_illegal_transitions_raise(self, path):
+        r = _req(0, [1], 2)
+        with pytest.raises(ValueError, match="illegal lifecycle"):
+            for to in path:
+                r.transition(to)
+
+    def test_lifecycle_map_is_closed(self):
+        """Every named successor state exists as a key — no edge can
+        reach a state the machine doesn't define."""
+        for state, succ in LIFECYCLE.items():
+            for s in succ:
+                assert s in LIFECYCLE, (state, s)
+
+    def test_preempted_clears_output_and_reenters(self):
+        r = _req(0, [1, 2], 8)
+        for to in ("queued", "prefilling", "decoding"):
+            r.transition(to)
+        r.tokens += [5, 6]
+        r.H += [0.1, 0.2]
+        r.SE += [0.1, 0.2]
+        r.MI += [0.1, 0.2]
+        r.p_max += [0.9, 0.9]
+        r.epistemic_flags = 1
+        r.last_mi = 0.2
+        r.spec_ema = 0.5
+        t0 = r.t_submit
+        r.transition("preempted")
+        r.transition("queued")
+        assert r.state == "queued"
+        assert r.preempt_count == 1
+        assert r.tokens == [] and r.H == [] and r.MI == []
+        assert r.epistemic_flags == 0
+        assert r.last_mi == float("inf")
+        assert r.spec_ema is None
+        # t_submit stamps once (first queued entry), never on re-entry
+        assert r.t_submit == t0
+
+    def test_escalated_edge_and_was_escalated(self):
+        r = _req(0, [1], 2)
+        for to in ("queued", "prefilling", "decoding", "escalated",
+                   "finished"):
+            r.transition(to)
+        assert r.was_escalated
+        assert not _req(1, [1], 2).was_escalated
+
+
+# ---------------------------------------------------------------------------
+# policy ranking (pure host-side units)
+# ---------------------------------------------------------------------------
+
+class TestPolicyRanking:
+    def test_get_policy_resolves_and_rejects(self):
+        assert isinstance(get_policy("fifo"), FifoPolicy)
+        assert isinstance(get_policy("priority"), PriorityPolicy)
+        with pytest.raises(ValueError, match="unknown scheduling policy"):
+            get_policy("round_robin")
+
+    def test_fifo_is_head_only_and_never_preempts(self):
+        p = FifoPolicy()
+        q = [_preq(i, [1], 2, priority=9 - i) for i in range(3)]
+        assert p.select(q) == 0
+        assert p.select([]) is None
+        assert p.victim(q[0], [(0, q[1])]) is None
+
+    def test_priority_select_class_then_deadline_then_seq(self):
+        p = PriorityPolicy()
+        a = _preq(0, [1], 2, priority=2)
+        b = _preq(1, [1], 2, priority=0, slo=10.0)
+        c = _preq(2, [1], 2, priority=0, slo=1.0)
+        d = _preq(3, [1], 2, priority=0)       # no SLO: deadline inf
+        for seq, r in enumerate((a, b, c, d)):
+            r.seq = seq
+            r.t_submit = 100.0
+        assert p.select([a, b, c, d]) == 2     # best class, earliest ddl
+        assert p.select([a, b, d]) == 1        # finite ddl beats none
+        assert p.select([a, d]) == 1           # class beats order
+        e = _preq(4, [1], 2, priority=0)
+        e.seq, e.t_submit = 9, 100.0
+        assert p.select([d, e]) == 0           # equal key tail: FIFO seq
+
+    def test_priority_victim_strictly_worse_class_only(self):
+        p = PriorityPolicy()
+        cand = _preq(0, [1], 2, priority=1)
+        peer = _preq(1, [1], 2, priority=1)
+        worse = _preq(2, [1], 2, priority=3)
+        worst = _preq(3, [1], 2, priority=3)
+        worse.tokens, worst.tokens = [1, 2, 3], [1]   # worst: cheapest replay
+        worse.seq, worst.seq = 0, 1
+        assert p.victim(cand, [(0, peer)]) is None    # never a peer
+        assert p.victim(cand, [(0, peer), (1, worse), (2, worst)]) == 2
+        best = _preq(4, [1], 2, priority=0)
+        assert p.victim(best, [(0, cand)]) == 0       # 1 > 0: preemptible
+
+
+# ---------------------------------------------------------------------------
+# fifo: the bit-exact reference policy
+# ---------------------------------------------------------------------------
+
+class TestFifoReference:
+    def test_fifo_replays_per_token_loop(self):
+        """--policy fifo, escalation off, one static wave: the
+        refactored engine must still replay the pre-engine per-token
+        oracle bit for bit (dense family — the only family whose scan
+        compiles to the oracle's exact float schedule; cross-family
+        coverage is engine-vs-engine below, and paged-vs-dense parity
+        has its own suite in tests/test_paged_kv.py)."""
+        cfg, params, prompts = _family("dense")
+        gen = 6
+        max_len = prompts.shape[1] + gen
+        eng = ServeEngine(params, cfg, num_slots=3, max_len=max_len,
+                          chunk=4, policy="fifo")
+        res = eng.run([_req(i, prompts[i], gen) for i in range(3)])
+        ref = decode_loop_reference(params, cfg, prompts[:3], gen,
+                                    max_len=max_len,
+                                    modality=eng._modality(3))
+        for j, req in enumerate(res["requests"]):
+            assert req.slot == j
+            np.testing.assert_array_equal(req.tokens, ref["token"][:, j])
+            for name in ("H", "SE", "MI", "p_max"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(req, name), np.float32),
+                    ref[name][:, j])
+        assert res["policy"] == "fifo" and res["preemptions"] == 0
+
+    @pytest.mark.parametrize("family", sorted(POLICY_FAMILIES))
+    def test_policy_layer_inert_is_bitwise_across_families(self, family):
+        """The whole new layer ARMED but never triggering — priority
+        policy on uniform-class traffic, escalation at an unreachable
+        threshold — must be byte-for-byte the plain fifo engine on
+        every KV-carrying attention family (paged layout, staggered
+        queue churn)."""
+        cfg, params, prompts = _family(family)
+        kw = dict(num_slots=2, max_len=24, chunk=4, kv_layout="paged",
+                  kv_block=8)
+        mk = lambda: [_req(i, prompts[i][:(12 if i % 2 == 0 else 8)], 6)
+                      for i in range(4)]
+        r_fifo = ServeEngine(params, cfg, **kw, policy="fifo").run(mk())
+        armed = ServeEngine(params, cfg, **kw, policy="priority",
+                            escalate_mi=float("inf"))
+        r_armed = armed.run(mk())
+        _assert_streams_equal(r_fifo, r_armed)
+        assert r_armed["policy"] == "priority"
+        assert r_armed["preemptions"] == 0
+        assert r_armed["escalation"]["escalations"] == 0
+
+    def test_priority_on_uniform_class_degrades_to_fifo(self):
+        """All-default-priority traffic under the priority policy ranks
+        by submission seq alone — admissions, slots and streams must be
+        byte-for-byte the fifo run's, through queue churn, prefix-cache
+        CoW hits and chunked prefill."""
+        cfg, params, _ = _family("dense")
+        import jax
+        shared = np.asarray(jax.random.randint(jax.random.key(3), (20,),
+                                               0, cfg.vocab_size), np.int32)
+        tails = np.asarray(jax.random.randint(jax.random.key(4), (5, 8),
+                                              0, cfg.vocab_size), np.int32)
+        mk = lambda: [_req(i, np.concatenate([shared, tails[i]]), 6)
+                      for i in range(5)]
+        kw = dict(num_slots=2, max_len=48, chunk=4, kv_layout="paged",
+                  kv_block=8, prefix_cache=True, prefill_mode="chunked",
+                  prefill_chunk=16)
+        r_fifo = ServeEngine(params, cfg, **kw, policy="fifo").run(mk())
+        r_prio = ServeEngine(params, cfg, **kw, policy="priority").run(mk())
+        _assert_streams_equal(r_fifo, r_prio)
+        assert r_fifo["prefix_cache"]["cow_copies"] > 0
+        assert r_fifo["prefill_chunks"] > 0
+        assert r_prio["preemptions"] == 0
+
+    def test_queue_and_service_time_split(self):
+        """queue_time + service_time = latency per request, and queued
+        requests accrue strictly more queue wait than the first wave."""
+        cfg, params, prompts = _family("dense")
+        eng = ServeEngine(params, cfg, num_slots=2, max_len=32, chunk=4)
+        reqs = [_req(i, prompts[i], 6) for i in range(6)]
+        res = eng.run(reqs)
+        for r in reqs:
+            assert r.queue_time_s >= 0.0
+            assert abs(r.queue_time_s + r.service_time_s - r.latency_s) \
+                < 1e-9
+        assert reqs[-1].queue_time_s > reqs[0].queue_time_s
+        assert res["queue_time_p99_s"] >= res["queue_time_p50_s"] >= 0.0
+        assert res["service_time_p99_s"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# priority preemption
+# ---------------------------------------------------------------------------
+
+class TestPriorityPreemption:
+    def test_high_priority_skips_the_queue(self):
+        """A class-0 request submitted LAST admits in the first wave
+        under the priority policy and finishes before the queued
+        class-2 traffic."""
+        cfg, params, prompts = _family("dense")
+        eng = ServeEngine(params, cfg, num_slots=2, max_len=32, chunk=4,
+                          policy="priority")
+        reqs = [_preq(i, prompts[i], 6, priority=2) for i in range(4)]
+        hi = _preq(4, prompts[4], 6, priority=0)
+        res = eng.run(reqs + [hi])
+        assert hi.slot == 0                   # first placement of wave 1
+        assert hi.t_finish < max(r.t_finish for r in reqs)
+        assert res["per_class"][0]["num_requests"] == 1
+
+    def test_preempt_and_restore_bitwise_with_refcount_identity(self):
+        """The tentpole's preempt-and-restore contract: a class-0
+        arrival preempts the only (class-2, decoding) slot; the victim
+        replays from its prompt into the SAME slot and its final stream
+        is bitwise identical to a never-preempted run, the high-priority
+        stream matches ITS solo run, and the pool ends at exact-refcount
+        identity."""
+        cfg, params, prompts = _family("dense")
+        kw = dict(num_slots=1, max_len=32, chunk=4, kv_layout="paged",
+                  kv_block=8)
+        lo_solo = _req(0, prompts[0], 8)
+        r_lo = ServeEngine(params, cfg, **kw).run([lo_solo])
+        hi_solo = _req(1, prompts[1][:8], 4)
+        r_hi = ServeEngine(params, cfg, **kw).run([hi_solo])
+
+        lo = _preq(0, prompts[0], 8, priority=2)
+        hi = _preq(1, prompts[1][:8], 4, priority=0, arrival=4)
+        eng = ServeEngine(params, cfg, **kw, policy="priority")
+        res = eng.run([lo, hi])
+
+        assert res["preemptions"] == 1
+        assert lo.preempt_count == 1
+        assert lo.slot == 0 and hi.slot == 0
+        np.testing.assert_array_equal(lo.tokens, lo_solo.tokens)
+        np.testing.assert_array_equal(hi.tokens, hi_solo.tokens)
+        for name in ("H", "SE", "MI", "p_max"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(lo, name), np.float32),
+                np.asarray(getattr(lo_solo, name), np.float32))
+        assert [s for s, _ in lo.history].count("preempted") == 1
+        # exact-refcount identity after the drain: every block free,
+        # nothing reserved (the engine's leak guard saw the same)
+        alloc = eng._last_alloc
+        assert alloc.in_use == 0 and alloc._reserved == 0
+        assert sorted(alloc._free) == list(range(alloc.num_blocks))
+        assert res["per_class"][2]["preemptions"] == 1
+
+    def test_admission_preemption_surfaces_via_take_preempted(self):
+        """Scheduler-level: admit() under the priority policy preempts
+        the worst decoding slot for a better candidate and surfaces the
+        (slot, request) pair through take_preempted."""
+        s = SlotScheduler(1, policy=get_policy("priority"))
+        lo = _preq(0, [1, 2], 4, priority=2)
+        s.submit(lo)
+        [(slot, req)] = s.admit()
+        assert (slot, req.rid) == (0, 0)
+        req.transition("decoding")
+        hi = _preq(1, [1], 4, priority=0)
+        s.submit(hi)
+        placed = s.admit()
+        assert [(sl, r.rid) for sl, r in placed] == [(0, 1)]
+        assert [(sl, r.rid) for sl, r in s.take_preempted()] == [(0, 0)]
+        assert s.take_preempted() == []       # drained
+        assert s.preemptions == 1
+        assert lo.state == "queued" and lo.preempt_count == 1
+
+    def test_fifo_never_preempts_on_admission(self):
+        s = SlotScheduler(1)
+        s.submit(_preq(0, [1, 2], 4, priority=9))
+        [(slot, req)] = s.admit()
+        req.transition("decoding")
+        s.submit(_preq(1, [1], 4, priority=0))
+        assert s.admit() == []
+        assert s.take_preempted() == [] and s.preemptions == 0
+
+
+# ---------------------------------------------------------------------------
+# MI-triggered escalation
+# ---------------------------------------------------------------------------
+
+class TestEscalation:
+    def test_escalation_runner_cache_keyed_by_s(self):
+        cfg, params, _ = _family("dense")
+        eng = ServeEngine(params, cfg, num_slots=2, max_len=32, chunk=4)
+        r8 = eng.escalation_runner(8)
+        assert eng.escalation_runner(8) is r8         # cached per S
+        r16 = eng.escalation_runner(16)
+        assert r16 is not r8
+        assert r8.cfg.mc_samples == 8 and r16.cfg.mc_samples == 16
+        assert r8.kv_layout == "dense"
+        assert set(eng._esc_runners) == {8, 16}
+
+    def test_escalation_finishes_flagged_requests_on_high_s_lane(self):
+        """Threshold set AT a value the baseline's first-chunk carried
+        MI reaches: the flagged request leaves the main pool mid-decode
+        and the lane finishes its full budget at the verify S, counted
+        per class."""
+        cfg, params, prompts = _family("dense")
+        kw = dict(num_slots=3, max_len=32, chunk=4, kv_layout="paged",
+                  kv_block=8)
+        base_reqs = [_req(i, prompts[i], 8) for i in range(3)]
+        ServeEngine(params, cfg, **kw).run(base_reqs)
+        # the escalated run replays the SAME pre-escalation stream, so
+        # request 0's chunk-end carried MI equals this bit for bit and
+        # the >= trigger fires deterministically
+        thr = float(base_reqs[0].MI[3])
+        reqs = [_preq(i, prompts[i], 8, priority=i % 2) for i in range(3)]
+        eng = ServeEngine(params, cfg, **kw, escalate_mi=thr,
+                          escalate_s=4 * cfg.mc_samples)
+        res = eng.run(reqs)
+        esc = res["escalation"]
+        assert esc["enabled"] and esc["escalations"] >= 1
+        assert esc["verify_samples"] == 4 * cfg.mc_samples
+        assert esc["tokens"] > 0 and esc["steps"] > 0
+        assert reqs[0].was_escalated
+        assert sum(esc["by_class"].values()) == esc["escalations"]
+        for r in reqs:
+            assert r.state == "finished"
+            assert len(r.tokens) == 8 and r.finish_reason == "length"
+        assert sum(r.was_escalated for r in reqs) == esc["escalations"]
+        # the lane's runner compiled once, keyed by the verify S
+        assert set(eng._esc_runners) == {4 * cfg.mc_samples}
+        alloc = eng._last_alloc
+        assert alloc.in_use == 0 and alloc._reserved == 0
+
+    def test_inf_threshold_is_bitwise_no_op(self):
+        """Escalation ARMED but with an unreachable threshold: the lane
+        never fires and the streams are byte-for-byte the plain fifo
+        engine's."""
+        cfg, params, prompts = _family("dense")
+        kw = dict(num_slots=2, max_len=32, chunk=4, kv_layout="paged",
+                  kv_block=8)
+        mk = lambda: [_req(i, prompts[i], 6) for i in range(5)]
+        r_plain = ServeEngine(params, cfg, **kw).run(mk())
+        eng = ServeEngine(params, cfg, **kw,
+                          escalate_mi=float("inf")).run(mk())
+        _assert_streams_equal(r_plain, eng)
+        assert eng["escalation"]["escalations"] == 0
+        assert eng["escalation"]["tokens"] == 0
+
+    def test_too_long_requests_skip_the_lane_once(self):
+        """A request whose prompt + budget exceeds the dense sidecar's
+        max_len cannot escalate: it keeps decoding in the main (paged,
+        growable) engine and is counted once in skipped_too_long."""
+        cfg, params, prompts = _family("dense")
+        eng = ServeEngine(params, cfg, num_slots=1, max_len=16, chunk=4,
+                          kv_layout="paged", kv_block=8, kv_blocks=4,
+                          escalate_mi=0.0)    # every carried MI triggers
+        req = _req(0, prompts[0], 8)          # 12 + 8 > max_len 16
+        res = eng.run([req])
+        esc = res["escalation"]
+        assert esc["escalations"] == 0
+        assert esc["skipped_too_long"] == 1
+        assert not req.was_escalated
+        assert len(req.tokens) == 8 and req.state == "finished"
+
+
+# ---------------------------------------------------------------------------
+# open-loop arrivals + validation
+# ---------------------------------------------------------------------------
+
+class TestArrivalsAndValidation:
+    def test_arrival_steps_delay_submission(self):
+        """arrival_step > 0 requests join the queue only once the engine
+        has decoded that many steps; an idle engine fast-forwards to the
+        next arrival instead of stalling."""
+        cfg, params, prompts = _family("dense")
+        eng = ServeEngine(params, cfg, num_slots=1, max_len=32, chunk=4)
+        a = _preq(0, prompts[0], 4, arrival=0)
+        b = _preq(1, prompts[1], 4, arrival=100)   # after a finished
+        res = eng.run([a, b])
+        assert a.state == "finished" and b.state == "finished"
+        assert b.t_submit > a.t_submit
+        assert res["gen_tokens"] == 8
+
+    def test_engine_rejects_unknown_policy(self):
+        cfg, params, _ = _family("dense")
+        with pytest.raises(ValueError, match="unknown scheduling policy"):
+            ServeEngine(params, cfg, num_slots=1, max_len=32, chunk=4,
+                        policy="lifo")
+
+    def test_engine_validates_escalation_knobs(self):
+        cfg, params, _ = _family("dense")
+        with pytest.raises(ValueError, match="escalate_mi"):
+            ServeEngine(params, cfg, num_slots=1, max_len=32, chunk=4,
+                        escalate_mi=-0.1)
+        with pytest.raises(ValueError, match="escalate_s"):
+            ServeEngine(params, cfg, num_slots=1, max_len=32, chunk=4,
+                        escalate_s=0)
+
+    def test_engine_validates_adaptive_k_bounds(self):
+        cfg, params, _ = _family("dense")
+        with pytest.raises(ValueError, match="k_min"):
+            ServeEngine(params, cfg, num_slots=1, max_len=32, chunk=4,
+                        spec_decode=True, spec_k=3, spec_k_min=4)
+        with pytest.raises(ValueError, match="k_max"):
+            ServeEngine(params, cfg, num_slots=1, max_len=32, chunk=4,
+                        spec_decode=True, spec_k=3, spec_k_max=2)

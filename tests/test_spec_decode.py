@@ -86,6 +86,27 @@ def _garbage_draft(engine):
     engine._draft = bad
 
 
+def _garbage_all_k(engine):
+    """Garbage drafts at EVERY depth: wraps both the default-k alias
+    (``engine._draft``) and the per-k jit cache (``runner.spec_fns``),
+    so adaptive-k rounds reject everything no matter which k the
+    controller picked."""
+    _garbage_draft(engine)
+    orig = engine.runner.spec_fns
+
+    def fns(k):
+        draft, verify = orig(k)
+
+        def bad(params, tok, cache):
+            tok, cache, dys = draft(params, tok, cache)
+            return tok, cache, \
+                dict(dys, token=jnp.full_like(dys["token"], -1))
+
+        return bad, verify
+
+    engine.runner.spec_fns = fns
+
+
 class TestSpecParity:
     @pytest.mark.parametrize("family", sorted(SPEC_FAMILIES))
     def test_bitwise_stream_parity_across_families(self, family):
@@ -222,6 +243,63 @@ class TestSpecParity:
                          spec_draft_s=0)
         r_on = on.run(_first_wave(prompts))
         _assert_streams_equal(r_off, r_on)
+
+
+class TestAdaptiveK:
+    """--spec-k-min/--spec-k-max: the per-slot acceptance-EMA depth
+    controller (ISSUE 10 satellite).  Adaptation moves WHERE the
+    draft/verify round boundaries fall, never what ships — the lossless
+    gate is depth-independent, so every adaptive run below must replay
+    the spec-off stream bitwise."""
+
+    _ADAPT_KW = dict(_SPEC_KW, spec_k_min=1, spec_k_max=5)
+
+    def test_adaptive_depth_stream_parity(self):
+        """Queue churn with the controller live (k free in [1, 5]): the
+        drained streams still match spec-off bit for bit, and the
+        per-round depths stay inside the configured bounds."""
+        cfg, params, prompts = _family("dense")
+        kw = dict(num_slots=1, max_len=32, chunk=4, kv_layout="paged",
+                  kv_block=8)
+        r_off = ServeEngine(params, cfg, **kw).run(_churn_queue(prompts))
+        on = ServeEngine(params, cfg, **kw, **self._ADAPT_KW)
+        r_on = on.run(_churn_queue(prompts))
+        _assert_streams_equal(r_off, r_on)
+        sd = r_on["spec_decode"]
+        assert sd["rounds"] > 0
+        assert (sd["k_min"], sd["k_max"]) == (1, 5)
+        assert 1 <= sd["round_k_min"] <= sd["round_k_max"] <= 5
+
+    def test_default_bounds_pin_depth_fixed(self):
+        """No bounds given: k_min = k = k_max, so grow/shrink are
+        unreachable and every round runs at exactly spec_k — the
+        adaptive machinery is bitwise inert by default."""
+        cfg, params, prompts = _family("dense")
+        on = ServeEngine(params, cfg, **_ENGINE_KW, **_SPEC_KW)
+        r_on = on.run(_first_wave(prompts))
+        sd = r_on["spec_decode"]
+        assert sd["rounds"] > 0
+        assert sd["k_up"] == 0 and sd["k_down"] == 0
+        assert sd["round_k_min"] == sd["round_k_max"] == 3
+
+    def test_garbage_drafts_shrink_to_k_min(self):
+        """Deterministic shrink: garbage drafts at EVERY depth drive
+        acceptance (and so the EMA) to 0, the controller steps each
+        slot down to k_min and stays there, and the stream is still
+        exactly the spec-off run's."""
+        cfg, params, prompts = _family("dense")
+        kw = dict(num_slots=1, max_len=32, chunk=4, kv_layout="paged",
+                  kv_block=8)
+        r_off = ServeEngine(params, cfg, **kw).run(_churn_queue(prompts))
+        on = ServeEngine(params, cfg, **kw, **self._ADAPT_KW)
+        _garbage_all_k(on)
+        r_on = on.run(_churn_queue(prompts))
+        _assert_streams_equal(r_off, r_on)
+        sd = r_on["spec_decode"]
+        assert sd["accepted"] == 0
+        assert sd["k_down"] > 0 and sd["k_up"] == 0
+        assert sd["round_k_min"] == 1          # bottomed out at k_min
+        assert sd["round_k_max"] == 3          # first rounds at spec_k
 
 
 class TestSpecValidation:
